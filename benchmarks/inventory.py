@@ -1,0 +1,58 @@
+"""Case-study + architecture inventory (paper Table 1 + assignment pool).
+
+Verifies the synthetic case-study calibration against Table 1 and counts
+real parameters of every assigned architecture config (via eval_shape —
+no allocation)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.roofline import param_counts
+from repro.configs import INPUT_SHAPES, get_config, list_archs, \
+    shape_applicable
+from repro.data.synthetic import CASE_STUDIES, sample_case_study
+
+
+def run(verbose: bool = True) -> dict:
+    out = {"case_studies": [], "architectures": []}
+    if verbose:
+        print("\n--- Table 1: case-study calibration ---")
+        print(f"{'case':>12} {'metric':>12} {'target L/R':>14} "
+              f"{'calibrated L/R':>15}")
+    for name in sorted(CASE_STUDIES):
+        cs = CASE_STUDIES[name]
+        s = sample_case_study(cs, 50_000)
+        valid = ~s.invalid
+        la, ra = s.local_correct[valid].mean(), s.remote_correct[valid].mean()
+        out["case_studies"].append(
+            {"name": name, "metric": cs.metric, "target_local": cs.local_acc,
+             "target_remote": cs.remote_acc, "calibrated_local": round(la, 4),
+             "calibrated_remote": round(ra, 4)})
+        if verbose:
+            print(f"{name:>12} {cs.metric:>12} "
+                  f"{cs.local_acc:.3f}/{cs.remote_acc:.3f}  "
+                  f"{la:14.3f}/{ra:.3f}")
+
+    if verbose:
+        print("\n--- Assigned architecture pool (10) ---")
+        print(f"{'arch':>22} {'family':>7} {'params':>9} {'active':>9} "
+              f"{'shapes':>22}")
+    for arch in list_archs():
+        cfg = get_config(arch)
+        total, active = param_counts(cfg)
+        shapes = [s for s in INPUT_SHAPES
+                  if shape_applicable(cfg, INPUT_SHAPES[s])[0]]
+        out["architectures"].append(
+            {"arch": arch, "family": cfg.family, "params": total,
+             "active_params": active, "applicable_shapes": shapes,
+             "citation": cfg.citation})
+        if verbose:
+            print(f"{arch:>22} {cfg.family:>7} {total / 1e9:8.2f}B "
+                  f"{active / 1e9:8.2f}B {len(shapes):>2}/4: "
+                  f"{','.join(s.split('_')[0] for s in shapes)}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

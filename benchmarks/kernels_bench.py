@@ -1,0 +1,95 @@
+"""Pallas-kernel microbenchmarks.
+
+On this CPU container the kernels dispatch to their jnp reference path (the
+Pallas bodies are validated in interpret mode by tests/test_kernels.py);
+the numbers here time the REFERENCE path at serving-relevant shapes and
+derive the kernels' arithmetic intensity — the quantity the BlockSpec
+tiling was designed around (see kernels/*/kernel.py docstrings).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention.ops import decode_attn
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.maxconf.ops import maxconf
+from repro.kernels.mdsa.ops import mdsa_distance
+from repro.kernels.rwkv6_scan.ops import rwkv6_time_mix_scan
+
+
+def _time(fn, *args, iters=3, **kw):
+    out = jax.block_until_ready(fn(*args, **kw))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args, **kw))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True) -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # maxconf: supervisor over LM-head logits (vocab up to 152k)
+    for b, v in ((32, 102_400), (64, 152_064)):
+        lg = jax.random.normal(key, (b, v), jnp.float32)
+        us = _time(jax.jit(maxconf), lg) * 1e6
+        flops = 5 * b * v      # exp, 2 max-scans, sum, div (approx)
+        rows.append({"kernel": "maxconf", "shape": f"[{b},{v}]",
+                     "us_per_call": us,
+                     "arith_intensity": flops / (4 * b * v)})
+
+    # mdsa: Mahalanobis distance, penultimate width 4096
+    x = jax.random.normal(key, (256, 4096))
+    mean = jnp.zeros((4096,))
+    prec = jnp.eye(4096)
+    us = _time(jax.jit(mdsa_distance), x, mean, prec) * 1e6
+    rows.append({"kernel": "mdsa", "shape": "[256,4096]x[4096,4096]",
+                 "us_per_call": us,
+                 "arith_intensity": (2 * 256 * 4096 * 4096)
+                 / (4 * (4096 * 4096 + 2 * 256 * 4096))})
+
+    # flash attention: remote-tier prefill block
+    q = jax.random.normal(key, (1, 1024, 8, 128), jnp.bfloat16)
+    k = jax.random.normal(key, (1, 1024, 2, 128), jnp.bfloat16)
+    us = _time(jax.jit(lambda q, k: attention(q, k, k, causal=True)),
+               q, k) * 1e6
+    rows.append({"kernel": "flash_attention", "shape": "[1,1024,8|2,128]",
+                 "us_per_call": us,
+                 "arith_intensity": 2 * 1024 / 2 / 2})   # ~T/2 per byte
+
+    # decode attention: one token vs 32k cache
+    q1 = jax.random.normal(key, (8, 32, 128), jnp.bfloat16)
+    kc = jax.random.normal(key, (8, 16_384, 8, 128), jnp.bfloat16)
+    kv_len = jnp.full((8,), 16_384, jnp.int32)
+    us = _time(jax.jit(lambda a, b, c, d: decode_attn(a, b, c, d)),
+               q1, kc, kc, kv_len) * 1e6
+    rows.append({"kernel": "decode_attention", "shape": "[8,16k,8,128]",
+                 "us_per_call": us, "arith_intensity": 32 / 8 / 2})
+
+    # rwkv6 scan: long-context chunk
+    b, t, h, m = 1, 1024, 32, 64
+    r = jax.random.normal(key, (b, t, h, m)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(key, (b, t, h, m)))
+    u = jax.random.normal(key, (h, m)) * 0.3
+    s0 = jnp.zeros((b, h, m, m))
+    us = _time(jax.jit(rwkv6_time_mix_scan), r, r, r, w, u, s0) * 1e6
+    rows.append({"kernel": "rwkv6_scan", "shape": f"[{b},{t},{h},{m}]",
+                 "us_per_call": us, "arith_intensity": m / 4})
+
+    if verbose:
+        print("\n--- Kernel microbench (CPU ref path; Pallas bodies are "
+              "interpret-validated in tests) ---")
+        print(f"{'kernel':>18} {'shape':>24} {'us/call':>10} {'AI':>7}")
+        for r_ in rows:
+            print(f"{r_['kernel']:>18} {r_['shape']:>24} "
+                  f"{r_['us_per_call']:10.0f} {r_['arith_intensity']:7.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Latency benchmark (paper Table 7 / Eq. 2).
+
+Measures REAL local-tier latency (trained surrogate on this CPU) and uses
+the paper's measured remote latencies as the network-bound constants (a
+remote GPT-3-class call cannot be measured offline). Reports the
+break-even remote fraction  r* = 1 - t_l / t_r  and the expected latency
+at the paper's evaluation points, mirroring Table 7's structure.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import make_classification_task
+from repro.models import surrogate as S
+
+# paper Table 7 remote-only latencies (s)
+REMOTE_LATENCY = {"imdb": 0.32, "issues": 1.08, "imagenet": 0.68,
+                  "squadv2": 0.71, "squadv2_all": 0.74}
+EVAL_POINTS = {"imdb": (0.55, 0.67), "issues": (0.3, 0.5, 0.7),
+               "imagenet": (0.3, 0.5, 0.7), "squadv2": (0.33, 0.59),
+               "squadv2_all": (0.49, 0.71)}
+
+
+def measure_local_latency(batch: int = 1, iters: int = 50) -> float:
+    """Wall time of one local prediction + 1st-level supervision."""
+    vocab, seq, ncls = 512, 50, 4
+    toks, _, _ = make_classification_task(0, n=max(batch, 64), vocab=vocab,
+                                          seq_len=seq, num_classes=ncls)
+    cfg = S.SurrogateConfig("lat", vocab_size=vocab, max_len=seq,
+                            d_model=64, num_heads=4, d_ff=64,
+                            num_classes=ncls, dropout=0.0)
+    params = S.init_params(cfg, jax.random.PRNGKey(0))
+
+    @jax.jit
+    def predict(tk):
+        logits = S.apply(cfg, params, tk)
+        conf = jnp.max(jax.nn.softmax(logits, -1), -1)   # MaxSoftmax
+        return jnp.argmax(logits, -1), conf
+
+    x = jnp.asarray(toks[:batch])
+    jax.block_until_ready(predict(x))                    # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(predict(x))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True) -> list[dict]:
+    t_l = measure_local_latency()
+    rows = []
+    if verbose:
+        print(f"\n--- Latency (Eq. 2: t_l + r*t_r < t_r) ---")
+        print(f"measured local latency t_l = {t_l * 1e3:.2f} ms "
+              f"(surrogate fwd + MaxSoftmax, batch=1, this CPU)")
+        print(f"{'case':>12} {'t_r(s)':>7} {'break-even':>10} "
+              f"{'eval points (latency vs remote-only)':<44}")
+    for name, t_r in REMOTE_LATENCY.items():
+        be = 1.0 - t_l / t_r
+        pts = []
+        for r in EVAL_POINTS[name]:
+            lat = t_l + r * t_r
+            pts.append(f"{r:.0%}:{lat:.2f}s({(lat / t_r - 1) * 100:+.0f}%)")
+        rows.append({"case_study": name, "t_local_s": t_l, "t_remote_s": t_r,
+                     "break_even": be,
+                     "eval_points": {r: t_l + r * t_r
+                                     for r in EVAL_POINTS[name]}})
+        if verbose:
+            print(f"{name:>12} {t_r:7.2f} {be:10.2%} {' '.join(pts):<44}")
+    if verbose:
+        print("All paper evaluation points sit below break-even -> the "
+              "cascade reduces mean latency as well as cost.")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

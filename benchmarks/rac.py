@@ -1,0 +1,81 @@
+"""RQ1 benchmark — Request-Accuracy Curves + AUC-RAC (paper Figs 2-5).
+
+One curve per case study on the calibrated synthetic analogues; reports
+local-only / remote-only accuracy, knee points (best, remote-even), the
+cost saving at remote-even, and AUC-RAC vs the 0.5 random baseline.
+Renders an ASCII RAC per case study.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import auc_rac, request_accuracy_curve
+from repro.data.synthetic import CASE_STUDIES, sample_case_study
+
+N = 50_000
+
+
+def ascii_curve(rac, width=60, height=12) -> str:
+    xs = rac.remote_fraction
+    ys = rac.accuracy
+    lo, hi = ys.min(), ys.max()
+    if hi - lo < 1e-9:
+        hi = lo + 1e-9
+    grid = [[" "] * width for _ in range(height)]
+    for i in range(width):
+        x = i / (width - 1)
+        y = np.interp(x, xs, ys)
+        r = int((y - lo) / (hi - lo) * (height - 1))
+        grid[height - 1 - r][i] = "*"
+    # random-baseline diagonal
+    for i in range(width):
+        x = i / (width - 1)
+        y = ys[0] + x * (ys[-1] - ys[0])
+        r = int((y - lo) / (hi - lo) * (height - 1))
+        if grid[height - 1 - r][i] == " ":
+            grid[height - 1 - r][i] = "."
+    lines = ["".join(row) for row in grid]
+    lines.append(f"{'0%':<{width - 4}}100%")
+    return "\n".join(lines)
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for name in sorted(CASE_STUDIES):
+        cs = CASE_STUDIES[name]
+        s = sample_case_study(cs, N)
+        valid = ~s.invalid
+        rac = request_accuracy_curve(s.local_conf[valid],
+                                     s.local_correct[valid],
+                                     s.remote_correct[valid])
+        knees = rac.knee_points()
+        auc = auc_rac(rac)
+        row = {
+            "case_study": name,
+            "metric": cs.metric,
+            "local_only": round(rac.local_only, 4),
+            "remote_only": round(rac.remote_only, 4),
+            "auc_rac": round(auc, 4),
+            "best_fraction": round(knees["best"], 3),
+            "best_accuracy": round(knees["best_accuracy"], 4),
+            "remote_even_fraction": round(knees["remote_even"], 3),
+            "cost_saving_at_even": round(1 - knees["remote_even"], 3),
+            "superaccurate": bool(knees["best_accuracy"]
+                                  > rac.remote_only + 1e-4),
+        }
+        rows.append(row)
+        if verbose:
+            print(f"\n--- RAC: {name} ({cs.metric}) ---")
+            print(ascii_curve(rac))
+            print(f"local={row['local_only']:.3f} "
+                  f"remote={row['remote_only']:.3f} "
+                  f"AUC-RAC={row['auc_rac']:.3f} (random=0.5) "
+                  f"| remote-even @ {row['remote_even_fraction']:.0%} "
+                  f"remote calls -> {row['cost_saving_at_even']:.0%} saved"
+                  f"{' | SUPERACCURATE' if row['superaccurate'] else ''}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

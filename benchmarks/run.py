@@ -1,0 +1,91 @@
+"""Benchmark runner — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only rac,supervised,...]
+
+  rac         paper Figs 2-5  (RQ1: Request-Accuracy curves, AUC-RAC)
+  supervised  paper Tables 2-6 (RQ2: supervised assessment, S_beta)
+  supervisors paper §3.2.3    (supervisor comparison on a real model)
+  latency     paper Table 7   (Eq. 2 break-even analysis)
+  inventory   paper Table 1   (case studies + assigned-arch pool)
+  kernels     kernel microbench (ours)
+  roofline    dry-run roofline summary (reads results/dryrun_matrix.jsonl
+              if present)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from benchmarks import (inventory, kernels_bench, latency, rac, supervised,
+                        supervisor_comparison)
+
+ALL = ("inventory", "rac", "supervised", "supervisors", "latency",
+       "kernels", "roofline")
+
+
+def roofline_summary(verbose: bool = True) -> list[dict]:
+    path = "results/dryrun_matrix.jsonl"
+    if not os.path.exists(path):
+        if verbose:
+            print(f"\n--- Roofline: {path} not found; run "
+                  f"`python -m repro.launch.dryrun --all --both-meshes "
+                  f"--json {path}` first ---")
+        return []
+    rows = [json.loads(l) for l in open(path)]
+    ok = [r for r in rows if r["status"] == "ok" and "roofline" in r]
+    if verbose:
+        print(f"\n--- Roofline summary ({len(ok)} compiled combos, "
+              f"{sum(r['status'] == 'skip' for r in rows)} principled "
+              f"skips) ---")
+        print(f"{'arch':>22} {'shape':>12} {'mesh':>6} {'compute':>9} "
+              f"{'memory':>9} {'coll':>9} {'bottleneck':>11} {'useful':>7}")
+        for r in ok:
+            rf = r["roofline"]
+            print(f"{r['arch']:>22} {r['shape']:>12} {r['mesh']:>6} "
+                  f"{rf['compute_s']:9.2e} {rf['memory_s']:9.2e} "
+                  f"{rf['collective_s']:9.2e} {rf['bottleneck']:>11} "
+                  f"{rf.get('useful_ratio', float('nan')):7.2f}")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default="",
+                    help=f"comma-separated subset of {ALL}")
+    args = ap.parse_args(argv)
+    which = args.only.split(",") if args.only else list(ALL)
+
+    t0 = time.perf_counter()
+    results = {}
+    for name in which:
+        if name == "inventory":
+            results[name] = inventory.run()
+        elif name == "rac":
+            results[name] = rac.run()
+        elif name == "supervised":
+            results[name] = supervised.run()
+        elif name == "supervisors":
+            results[name] = supervisor_comparison.run()
+        elif name == "latency":
+            results[name] = latency.run()
+        elif name == "kernels":
+            results[name] = kernels_bench.run()
+        elif name == "roofline":
+            results[name] = roofline_summary()
+        else:
+            print(f"unknown benchmark {name!r}", file=sys.stderr)
+            return 2
+    os.makedirs("results", exist_ok=True)
+    with open("results/benchmarks.json", "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    print(f"\n[benchmarks] all done in {time.perf_counter() - t0:.1f}s; "
+          f"JSON -> results/benchmarks.json")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

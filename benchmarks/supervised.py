@@ -1,0 +1,86 @@
+"""RQ2 benchmark — system-level supervised assessment (paper Tables 2-6).
+
+For each case study and target FPR in {0.01, 0.05, 0.1}: the standalone
+supervised local model (baseline) vs BiSupervised at the RQ1 knee points
+(superaccurate cases: remote-even + best; others: 30/50/70% remote),
+reporting Delta (acceptance rate), supervised accuracy and S_beta."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.metrics import (request_accuracy_curve, supervised_metrics,
+                                threshold_for_fpr)
+from repro.data.synthetic import CASE_STUDIES, sample_case_study
+
+N = 50_000
+FPRS = (0.01, 0.05, 0.1)
+
+
+def _eval_cascade(s, remote_fraction: float, fpr: float) -> dict:
+    """BiSupervised at a 1st-level threshold hitting `remote_fraction`,
+    2nd-level threshold tuned to `fpr` on the escalated subset."""
+    t1 = np.quantile(s.local_conf, remote_fraction)
+    use_local = s.local_conf > t1
+    sys_correct = np.where(use_local, s.local_correct, s.remote_correct) > 0
+    t2 = threshold_for_fpr(s.remote_conf[~use_local],
+                           s.remote_correct[~use_local] > 0, fpr)
+    accepted = use_local | (s.remote_conf > t2)
+    m = supervised_metrics(accepted, sys_correct)
+    m["remote_delta"] = float(np.mean(s.remote_conf[~use_local] > t2)) \
+        if (~use_local).any() else float("nan")
+    return m
+
+
+def _knee_fractions(s) -> list[tuple[str, float]]:
+    valid = ~s.invalid
+    rac = request_accuracy_curve(s.local_conf[valid], s.local_correct[valid],
+                                 s.remote_correct[valid])
+    k = rac.knee_points()
+    if k["best_accuracy"] > rac.remote_only + 1e-4:
+        return [("remote-even", k["remote_even"]), ("best", k["best"])]
+    return [("30%", 0.3), ("50%", 0.5), ("70%", 0.7)]
+
+
+def run(verbose: bool = True) -> list[dict]:
+    rows = []
+    for name in sorted(CASE_STUDIES):
+        s = sample_case_study(CASE_STUDIES[name], N)
+        fracs = _knee_fractions(s)
+        if verbose:
+            print(f"\n--- Supervised assessment: {name} ---")
+            print(f"{'FPR':>5} {'config':>12} {'Δ':>6} {'ACC̄':>6} "
+                  f"{'S0.5':>6} {'S1':>6} {'S2':>6}")
+        for fpr in FPRS:
+            t_base = threshold_for_fpr(s.local_conf, s.local_correct > 0,
+                                       fpr)
+            base = supervised_metrics(s.local_conf > t_base,
+                                      s.local_correct > 0)
+            rows.append({"case_study": name, "fpr": fpr,
+                         "config": "baseline(local)", **base})
+            if verbose:
+                print(f"{fpr:>5} {'baseline':>12} {base['delta']:6.3f} "
+                      f"{base['acc_supervised']:6.3f} {base['s_0.5']:6.3f} "
+                      f"{base['s_1.0']:6.3f} {base['s_2.0']:6.3f}")
+            for label, frac in fracs:
+                m = _eval_cascade(s, frac, fpr)
+                wins = sum(m[k] >= base[k] - 1e-9
+                           for k in ("s_0.5", "s_1.0", "s_2.0"))
+                rows.append({"case_study": name, "fpr": fpr,
+                             "config": f"cascade@{label}",
+                             "sbeta_wins": wins, **m})
+                if verbose:
+                    print(f"{fpr:>5} {label:>12} {m['delta']:6.3f} "
+                          f"{m['acc_supervised']:6.3f} {m['s_0.5']:6.3f} "
+                          f"{m['s_1.0']:6.3f} {m['s_2.0']:6.3f} "
+                          f"(wins {wins}/3 S_β)")
+    total = sum(r.get("sbeta_wins", 0) for r in rows)
+    possible = 3 * sum(1 for r in rows if "sbeta_wins" in r)
+    if verbose:
+        print(f"\nS_β wins vs baseline: {total}/{possible} "
+              f"({total / possible:.0%}) — paper finds a majority too")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

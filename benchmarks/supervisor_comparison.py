@@ -1,0 +1,123 @@
+"""Supervisor comparison (paper §3.2.3): misprediction-detection power of
+every implemented supervisor on a REAL trained surrogate.
+
+The paper's survey conclusion — "no single technique works as a dominant
+supervisor", softmax-based ones are strong and cheap, MDSA is competitive
+and modality-agnostic, ensembles often best — is checked empirically:
+AUC-ROC of (confidence, correct?) per supervisor, plus the computational
+overhead class from §3.2.2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import supervisors as S
+from repro.data.synthetic import make_classification_task
+from repro.models import surrogate as M
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+OVERHEAD = {"max_softmax": "~0 (1 read)", "pcs": "~0", "neg_entropy": "~0",
+            "gini": "~0", "mdsa": "1 matvec", "autoencoder": "1 small fwd",
+            "mc_dropout(vr)": "S extra fwds", "mc_dropout(mi)": "S extra fwds",
+            "ensemble(mms)": "S models"}
+
+
+def auc_roc(conf: np.ndarray, correct: np.ndarray) -> float:
+    """P(conf_correct > conf_wrong) + 0.5 P(=) — Mann-Whitney with
+    average ranks for ties (supervisors like variation-ratio emit heavily
+    tied scores)."""
+    pos, neg = conf[correct], conf[~correct]
+    if len(pos) == 0 or len(neg) == 0:
+        return float("nan")
+    allc = np.concatenate([pos, neg])
+    _, inv, counts = np.unique(allc, return_inverse=True,
+                               return_counts=True)
+    cum = np.cumsum(counts)
+    avg_rank = cum - (counts - 1) / 2.0
+    ranks = avg_rank[inv]
+    r_pos = ranks[: len(pos)].sum()
+    return (r_pos - len(pos) * (len(pos) + 1) / 2) / (len(pos) * len(neg))
+
+
+def run(verbose: bool = True) -> list[dict]:
+    vocab, seq, ncls = 256, 32, 6
+    toks, labels, _ = make_classification_task(7, n=2048, vocab=vocab,
+                                               seq_len=seq, num_classes=ncls)
+    tk, lb = jnp.asarray(toks), jnp.asarray(labels)
+    cfg = M.SurrogateConfig("cmp", vocab_size=vocab, max_len=seq, d_model=48,
+                            num_heads=2, d_ff=64, num_classes=ncls,
+                            dropout=0.1)
+
+    def train(seed):
+        params = M.init_params(cfg, jax.random.PRNGKey(seed))
+        opt = init_opt_state(params)
+        ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, weight_decay=0.0)
+
+        @jax.jit
+        def step(p, o, k):
+            (l, _), g = jax.value_and_grad(
+                lambda p: M.loss_fn(cfg, p, tk[:1024], lb[:1024], k),
+                has_aux=True)(p)
+            return adamw_update(ocfg, p, g, o)[:2]
+
+        for i in range(50):
+            params, opt = step(params, opt, jax.random.PRNGKey(i))
+        return params
+
+    params = train(0)
+    test = slice(1024, 2048)
+    logits, hidden = M.apply(cfg, params, tk[test], return_hidden=True)
+    correct = np.asarray(jnp.argmax(logits, -1) == lb[test])
+
+    rows = []
+
+    def add(name, conf):
+        rows.append({"supervisor": name,
+                     "auc_roc": round(auc_roc(np.asarray(conf), correct), 4),
+                     "overhead": OVERHEAD.get(name, "?")})
+
+    for name, fn in S.SOFTMAX_SUPERVISORS.items():
+        add(name, fn(logits))
+
+    # MDSA on the penultimate activations (train-set fit)
+    _, train_hidden = M.apply(cfg, params, tk[:1024], return_hidden=True)
+    st = S.fit_mdsa(train_hidden)
+    add("mdsa", S.mdsa_confidence(st, hidden))
+
+    # autoencoder on the penultimate activations
+    ae = S.fit_autoencoder(jax.random.PRNGKey(1), train_hidden, latent=8,
+                           steps=200)
+    add("autoencoder", S.autoencoder_confidence(ae, hidden))
+
+    # MC-Dropout (dropout live at inference)
+    samples = jnp.stack([
+        M.apply(cfg, params, tk[test], dropout_rng=jax.random.PRNGKey(i),
+                mc_dropout=True) for i in range(8)])
+    add("mc_dropout(vr)", S.variation_ratio(samples))
+    add("mc_dropout(mi)", S.mutual_information(samples))
+
+    # Ensemble (3 independently-initialised models)
+    ens = jnp.stack([M.apply(cfg, train(s), tk[test]) for s in (0, 1, 2)])
+    add("ensemble(mms)", S.mean_max_softmax(ens))
+
+    if verbose:
+        print("\n--- Supervisor comparison (paper §3.2.2/§3.2.3) ---")
+        print(f"model accuracy on eval: {correct.mean():.3f}")
+        print(f"{'supervisor':>16} {'AUC-ROC':>8}  overhead")
+        for r in sorted(rows, key=lambda r: -r["auc_roc"]):
+            print(f"{r['supervisor']:>16} {r['auc_roc']:8.3f}  "
+                  f"{r['overhead']}")
+        best = max(rows, key=lambda r: r["auc_roc"])
+        soft = max(r["auc_roc"] for r in rows
+                   if r["supervisor"] in S.SOFTMAX_SUPERVISORS)
+        print(f"best: {best['supervisor']} — paper: softmax family is "
+              f"near-dominant and ~free (ours within "
+              f"{best['auc_roc'] - soft:+.3f} of best)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

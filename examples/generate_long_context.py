@@ -1,0 +1,48 @@
+"""Long-context decode example: RWKV6 (attention-free, O(1) state) greedy
+generation with per-token likelihoods feeding the paper's sequence
+supervisor (min-likelihood reducer, §5.3.4) — the generative analogue of
+the classification cascade used for the long_500k serving shape.
+
+    PYTHONPATH=src python examples/generate_long_context.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.supervisors import seq_min_likelihood, seq_prod_likelihood
+from repro.models import transformer as T
+from repro.serving.generate import greedy_generate
+
+cfg = get_config("rwkv6-1.6b").reduced()
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+rng = np.random.default_rng(0)
+prompt = jnp.asarray(rng.integers(1, cfg.vocab_size, (2, 48)), jnp.int32)
+
+toks, liks = greedy_generate(cfg, params, {"tokens": prompt},
+                             max_new_tokens=12)
+print(f"[gen] generated tokens:\n{np.asarray(toks)}")
+print(f"[gen] per-token likelihoods (row 0): "
+      f"{np.round(np.asarray(liks[0]), 3)}")
+
+# 2nd-level supervision on the generated answer (paper's QA reducer)
+conf_min = seq_min_likelihood(liks)
+conf_prod = seq_prod_likelihood(liks)
+print(f"[gen] min-reducer confidence : {np.round(np.asarray(conf_min), 4)}")
+print(f"[gen] prod-reducer confidence: {np.round(np.asarray(conf_prod), 4)} "
+      f"(length-biased — the paper argues for min)")
+
+t_remote = 0.05
+accepted = np.asarray(conf_min) > t_remote
+print(f"[gen] accepted at t={t_remote}: {accepted.tolist()} "
+      f"(rejected answers would trigger the fallback)")
+
+# O(1) state: the RWKV cache is the same size regardless of context length
+cache_64 = T.make_cache(cfg, 1, 64)
+cache_500k = T.make_cache(cfg, 1, 524_288)
+b64 = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache_64))
+b500k = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache_500k))
+print(f"[gen] cache bytes @64 ctx: {b64:,} == @524k ctx: {b500k:,} -> "
+      f"long_500k decode is O(1) memory (why this arch runs that shape)")

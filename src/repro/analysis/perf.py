@@ -1,0 +1,67 @@
+"""Perf-iteration driver (§Perf): measure one (arch, shape) pair's roofline
+terms under configurable knobs, for the hypothesis->change->measure loop.
+
+    PYTHONPATH=src python -m repro.analysis.perf --arch deepseek-67b \
+        --shape decode_32k [--no-fsdp] [--no-remat] [--json out.jsonl]
+
+Must run in its own process (sets the 512-device XLA flag on import, like
+dryrun.py).
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--fsdp", action="store_true",
+                    help="force FSDP (default: the lower_step policy)")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--fp32-scores", action="store_true",
+                    help="ablation: the pre-C1 fp32 attention-score path")
+    ap.add_argument("--label", default="")
+    ap.add_argument("--json", default="")
+    args = ap.parse_args(argv)
+
+    from repro.analysis.roofline import roofline_extrapolated
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch.mesh import make_production_mesh
+
+    if args.fp32_scores:
+        from repro.models.layers import set_scores_fp32
+        set_scores_fp32(True)
+
+    cfg = get_config(args.arch)
+    shape = INPUT_SHAPES[args.shape]
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    fsdp = True if args.fsdp else (False if args.no_fsdp else None)
+    rec = roofline_extrapolated(cfg, shape, mesh, fsdp=fsdp,
+                                remat=not args.no_remat)
+    rec.update(arch=args.arch, shape=args.shape, label=args.label,
+               fsdp=fsdp, remat=not args.no_remat)
+    print(f"[perf] {args.arch} x {args.shape} "
+          f"({args.label or 'baseline'}; fsdp={rec['fsdp']}):")
+    print(f"  compute={rec['compute_s']:.4e}s "
+          f"(fp32-dot share {rec['f32_dot_share']:.0%}) "
+          f"memory={rec['memory_s']:.4e}s "
+          f"collective={rec['collective_s']:.4e}s "
+          f"-> {rec['bottleneck']}")
+    print(f"  coll breakdown: {rec['coll_breakdown']}")
+    print(f"  useful={rec['useful_ratio']:.3f}")
+    if args.json:
+        with open(args.json, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

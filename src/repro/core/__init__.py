@@ -1,0 +1,24 @@
+"""BiSupervised core — the paper's contribution as composable JAX modules."""
+
+from repro.core.cascade import (CascadeThresholds, bisupervised_batch,
+                                combine_escalated, escalation_capacity,
+                                gather_requests, select_escalations)
+from repro.core.metrics import (RAC, auc_rac, request_accuracy_curve,
+                                supervised_metrics, threshold_for_fpr)
+from repro.core.supervisors import (SAMPLING_SUPERVISORS,
+                                    SOFTMAX_SUPERVISORS, fit_mdsa,
+                                    max_softmax, mdsa_confidence,
+                                    seq_min_likelihood)
+from repro.core.thresholds import (escalation_rate_threshold,
+                                   nominal_quantile_threshold,
+                                   separation_threshold)
+
+__all__ = [
+    "CascadeThresholds", "bisupervised_batch", "select_escalations",
+    "gather_requests", "combine_escalated", "escalation_capacity",
+    "RAC", "request_accuracy_curve", "auc_rac", "supervised_metrics",
+    "threshold_for_fpr", "max_softmax", "SOFTMAX_SUPERVISORS",
+    "SAMPLING_SUPERVISORS", "fit_mdsa", "mdsa_confidence",
+    "seq_min_likelihood", "nominal_quantile_threshold",
+    "separation_threshold", "escalation_rate_threshold",
+]

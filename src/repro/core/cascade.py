@@ -1,0 +1,141 @@
+"""BiSupervised cascade orchestration (paper §4, Algorithm 1).
+
+Two execution modes (see DESIGN.md §2):
+
+* ``bisupervised_batch`` — exact Algorithm-1 semantics, vectorised over a
+  batch (threshold branches become masks). Used for offline evaluation
+  (RQ1/RQ2) where both tiers' outputs are available.
+
+* ``select_escalations`` / ``combine_escalated`` — the jit-native serving
+  adaptation: a fixed escalation capacity k per batch; the k
+  lowest-confidence requests are gathered into a static-shape sub-batch for
+  the remote tier (MoE-style token dropping, but for requests). Thresholds
+  are recovered in expectation by calibrating k = ceil(rho * B) from the
+  1st-level threshold's escalation rate.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+LOCAL, REMOTE, REJECTED = 0, 1, 2
+
+
+@dataclass(frozen=True)
+class CascadeThresholds:
+    """Runtime-tunable supervisor thresholds (paper §4.5)."""
+    t_local: float
+    t_remote: float
+
+
+def bisupervised_batch(local_pred: jnp.ndarray, local_conf: jnp.ndarray,
+                       remote_pred: jnp.ndarray, remote_conf: jnp.ndarray,
+                       th: CascadeThresholds) -> dict[str, jnp.ndarray]:
+    """Vectorised Algorithm 1.
+
+    Returns dict with:
+      prediction [B]   — local where trusted, else remote
+      source     [B]   — LOCAL / REMOTE / REJECTED per input
+      accepted   [B]   — bool, False = "raise Exception" (fallback)
+      remote_called [B]— bool, True where the remote model was invoked
+    """
+    use_local = local_conf > th.t_local
+    remote_ok = remote_conf > th.t_remote
+    prediction = jnp.where(use_local, local_pred, remote_pred)
+    source = jnp.where(use_local, LOCAL,
+                       jnp.where(remote_ok, REMOTE, REJECTED))
+    return {
+        "prediction": prediction,
+        "source": source,
+        "accepted": use_local | remote_ok,
+        "remote_called": ~use_local,
+    }
+
+
+# --------------------------------------------------------------------------
+# capacity-based escalation (jit-native serving mode)
+# --------------------------------------------------------------------------
+
+def escalation_capacity(batch: int, rho: float) -> int:
+    """k = ceil(rho * B), clipped to [1, B]."""
+    return max(1, min(batch, int(-(-rho * batch // 1))))
+
+
+def select_escalations(local_conf: jnp.ndarray, k: int):
+    """Pick the k lowest-confidence requests.
+
+    Returns (idx [k] int32 — ascending by confidence, escalate these;
+             escalate_mask [B] bool).
+    """
+    b = local_conf.shape[0]
+    _, idx = jax.lax.top_k(-local_conf, k)
+    mask = jnp.zeros((b,), bool).at[idx].set(True)
+    return idx, mask
+
+
+def gather_requests(batch: Any, idx: jnp.ndarray) -> Any:
+    """Gather a static-shape escalated sub-batch from a request pytree."""
+    return jax.tree.map(lambda a: a[idx], batch)
+
+
+def combine_escalated(local_pred: jnp.ndarray, idx: jnp.ndarray,
+                      remote_pred: jnp.ndarray) -> jnp.ndarray:
+    """Scatter remote predictions for the escalated indices over the local
+    predictions (static shapes throughout)."""
+    return local_pred.at[idx].set(remote_pred)
+
+
+def scatter_field(base: jnp.ndarray, idx: jnp.ndarray,
+                  values: jnp.ndarray) -> jnp.ndarray:
+    return base.at[idx].set(values)
+
+
+# --------------------------------------------------------------------------
+# paper §4.6 extensions: TriSupervised (edge tier) + active learning
+# --------------------------------------------------------------------------
+
+EDGE = 3
+
+
+@dataclass(frozen=True)
+class TriThresholds:
+    """Three-tier thresholds: local -> edge -> remote -> fallback."""
+    t_local: float
+    t_edge: float
+    t_remote: float
+
+
+def trisupervised_batch(local_pred, local_conf, edge_pred, edge_conf,
+                        remote_pred, remote_conf,
+                        th: TriThresholds) -> dict[str, jnp.ndarray]:
+    """Paper §4.6: "BISUPERVISED would effectively become TRISUPERVISED" —
+    an edge node between the local device and the remote model. Vectorised
+    like bisupervised_batch; each tier is consulted only when every
+    cheaper tier's supervisor rejected."""
+    use_local = local_conf > th.t_local
+    use_edge = ~use_local & (edge_conf > th.t_edge)
+    remote_ok = remote_conf > th.t_remote
+    prediction = jnp.where(use_local, local_pred,
+                           jnp.where(use_edge, edge_pred, remote_pred))
+    source = jnp.where(use_local, LOCAL,
+                       jnp.where(use_edge, EDGE,
+                                 jnp.where(remote_ok, REMOTE, REJECTED)))
+    return {
+        "prediction": prediction,
+        "source": source,
+        "accepted": use_local | use_edge | remote_ok,
+        "edge_called": ~use_local,
+        "remote_called": ~use_local & ~use_edge,
+    }
+
+
+def select_for_labeling(local_conf: jnp.ndarray, budget: int):
+    """Paper §4.6 active learning: the 1st-level supervisor doubles as an
+    acquisition function — collect the `budget` least-confident inputs
+    (to be labelled, possibly by the remote model itself) for the next
+    local-model training round. Returns (idx [budget], mask [B])."""
+    return select_escalations(local_conf, budget)

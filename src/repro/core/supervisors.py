@@ -1,0 +1,198 @@
+"""DNN supervisors — confidence monitors for BiSupervised (paper §3.2/§4.2).
+
+Every supervisor maps model metadata to a scalar *confidence* per input
+(higher = more trustworthy); a prediction is trusted iff confidence > t.
+Uncertainty scores are negated into confidences so thresholding is uniform
+(paper: "confidence and uncertainty are perfect complements" [45]).
+
+All functions are jit-compatible and batched.
+
+Implemented (paper §3.2.1):
+  softmax family : MaxSoftmax (vanilla), PCS, negative entropy, Gini
+  sampling family: MC-Dropout / Ensemble reducers (variation ratio,
+                   mutual information, mean max-softmax)
+  surprise family: MDSA (Mahalanobis-distance surprise adequacy)
+  black-box      : autoencoder reconstruction error
+  sequence       : per-token likelihood reducers (min — the paper's pick —
+                   and product) for free-text QA / generative decode
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# softmax-based supervisors (metadata = logits [B, C])
+# --------------------------------------------------------------------------
+
+def max_softmax(logits: jnp.ndarray) -> jnp.ndarray:
+    """Vanilla softmax / MaxSoftmax [Hendrycks & Gimpel 2016]."""
+    return jnp.max(jax.nn.softmax(logits.astype(jnp.float32), -1), axis=-1)
+
+
+def prediction_confidence_score(logits: jnp.ndarray) -> jnp.ndarray:
+    """PCS: difference between the two highest likelihoods [Zhang et al.]."""
+    sm = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    top2 = jax.lax.top_k(sm, 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
+def negative_entropy(logits: jnp.ndarray) -> jnp.ndarray:
+    """Confidence = -H(softmax) [Weiss & Tonella 2021]."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    return jnp.sum(jnp.exp(logp) * logp, axis=-1)
+
+
+def gini_confidence(logits: jnp.ndarray) -> jnp.ndarray:
+    """Confidence = sum p^2 (1 - Gini impurity) [DeepGini, Feng et al.]."""
+    sm = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    return jnp.sum(sm * sm, axis=-1)
+
+
+SOFTMAX_SUPERVISORS = {
+    "max_softmax": max_softmax,
+    "pcs": prediction_confidence_score,
+    "neg_entropy": negative_entropy,
+    "gini": gini_confidence,
+}
+
+
+# --------------------------------------------------------------------------
+# sampling-based supervisors (metadata = logits [S, B, C] over S samples,
+# from MC-Dropout passes or an ensemble — same quantifiers, per paper)
+# --------------------------------------------------------------------------
+
+def variation_ratio(sample_logits: jnp.ndarray) -> jnp.ndarray:
+    """Confidence = fraction of samples agreeing with the modal class."""
+    preds = jnp.argmax(sample_logits, axis=-1)                  # [S, B]
+    s, b = preds.shape
+    c = sample_logits.shape[-1]
+    counts = jnp.sum(jax.nn.one_hot(preds, c, dtype=jnp.float32), axis=0)
+    return jnp.max(counts, axis=-1) / s
+
+
+def mutual_information(sample_logits: jnp.ndarray) -> jnp.ndarray:
+    """Confidence = -MI = -(H[mean p] - mean H[p])  (BALD score, negated)."""
+    logp = jax.nn.log_softmax(sample_logits.astype(jnp.float32), -1)
+    p = jnp.exp(logp)
+    p_mean = jnp.mean(p, axis=0)
+    h_mean = -jnp.sum(p_mean * jnp.log(p_mean + 1e-12), axis=-1)
+    mean_h = jnp.mean(-jnp.sum(p * logp, axis=-1), axis=0)
+    return -(h_mean - mean_h)
+
+
+def mean_max_softmax(sample_logits: jnp.ndarray) -> jnp.ndarray:
+    """Confidence = max of the mean predictive distribution."""
+    p = jax.nn.softmax(sample_logits.astype(jnp.float32), -1)
+    return jnp.max(jnp.mean(p, axis=0), axis=-1)
+
+
+SAMPLING_SUPERVISORS = {
+    "variation_ratio": variation_ratio,
+    "mutual_information": mutual_information,
+    "mean_max_softmax": mean_max_softmax,
+}
+
+
+# --------------------------------------------------------------------------
+# MDSA — Mahalanobis-distance surprise adequacy [Kim et al. 2020]
+# metadata = activation trace (penultimate hidden) [B, D]
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MDSAState:
+    mean: jnp.ndarray       # [D]
+    prec: jnp.ndarray       # [D, D] inverse covariance (precision)
+
+
+def fit_mdsa(train_activations: jnp.ndarray, ridge: float = 1e-3) -> MDSAState:
+    """Fit mean/precision on *training-set* activation traces."""
+    a = train_activations.astype(jnp.float32)
+    mu = jnp.mean(a, axis=0)
+    x = a - mu
+    cov = (x.T @ x) / a.shape[0]
+    cov = cov + ridge * jnp.eye(cov.shape[0], dtype=jnp.float32)
+    return MDSAState(mean=mu, prec=jnp.linalg.inv(cov))
+
+
+def mdsa_confidence(state: MDSAState, activations: jnp.ndarray) -> jnp.ndarray:
+    """Confidence = -sqrt((x-mu)^T Sigma^-1 (x-mu)) (low surprise = trusted)."""
+    x = activations.astype(jnp.float32) - state.mean
+    d2 = jnp.einsum("bd,de,be->b", x, state.prec, x)
+    return -jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+# --------------------------------------------------------------------------
+# autoencoder supervisor (black-box) [Stocco et al. 2020]
+# --------------------------------------------------------------------------
+
+def autoencoder_confidence(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Tiny linear AE: confidence = -reconstruction MSE. params from
+    fit_autoencoder. x: [B, D] (input features or embeddings)."""
+    z = jnp.tanh(x @ params["enc"] + params["enc_b"])
+    rec = z @ params["dec"] + params["dec_b"]
+    return -jnp.mean(jnp.square(rec - x), axis=-1)
+
+
+def fit_autoencoder(key, x: jnp.ndarray, latent: int = 16, steps: int = 200,
+                    lr: float = 1e-2) -> dict:
+    """Closed-loop gradient fit of the linear AE on nominal data."""
+    d = x.shape[-1]
+    k1, k2 = jax.random.split(key)
+    params = {
+        "enc": jax.random.normal(k1, (d, latent)) * (1.0 / jnp.sqrt(d)),
+        "enc_b": jnp.zeros((latent,)),
+        "dec": jax.random.normal(k2, (latent, d)) * (1.0 / jnp.sqrt(latent)),
+        "dec_b": jnp.zeros((d,)),
+    }
+
+    def loss(p):
+        return -jnp.mean(autoencoder_confidence(p, x))
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(loss)(p)
+        return jax.tree.map(lambda a, b: a - lr * b, p, g)
+
+    for _ in range(steps):
+        params = step(params)
+    return params
+
+
+# --------------------------------------------------------------------------
+# sequence reducers (free-text QA; metadata = per-token likelihood [B, T])
+# --------------------------------------------------------------------------
+
+def seq_min_likelihood(token_likelihoods: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Paper's recommended reducer: min over predicted-token likelihoods
+    (length-robust, unlike the product)."""
+    lk = token_likelihoods.astype(jnp.float32)
+    if mask is not None:
+        lk = jnp.where(mask > 0, lk, 1.0)
+    return jnp.min(lk, axis=-1)
+
+
+def seq_prod_likelihood(token_likelihoods: jnp.ndarray,
+                        mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Product reducer (literature default; length-biased — see paper §5.3.4)."""
+    lk = jnp.log(jnp.clip(token_likelihoods.astype(jnp.float32), 1e-12, 1.0))
+    if mask is not None:
+        lk = lk * (mask > 0)
+    return jnp.exp(jnp.sum(lk, axis=-1))
+
+
+def equivalent_token_confidence(logits: jnp.ndarray,
+                                groups: jnp.ndarray) -> jnp.ndarray:
+    """IMDB-style 2nd-level supervisor: sum softmax mass over hard-coded
+    equivalent tokens (e.g. "Negative"/"negative"/"bad").
+
+    logits: [B, V]; groups: [G, V] 0/1 membership. Returns the mass of the
+    best group (the remote model's effective class confidence)."""
+    sm = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    group_mass = sm @ groups.T.astype(jnp.float32)         # [B, G]
+    return jnp.max(group_mass, axis=-1)

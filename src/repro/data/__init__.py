@@ -1,0 +1,11 @@
+"""Data substrate: synthetic case studies, tokenizer, pipeline."""
+
+from repro.data.pipeline import BatchIterator, shard_batch
+from repro.data.synthetic import (CASE_STUDIES, CascadeSample, CaseStudy,
+                                  make_classification_task,
+                                  sample_case_study)
+from repro.data.tokenizer import HashTokenizer, reduce_domain
+
+__all__ = ["CASE_STUDIES", "CaseStudy", "CascadeSample", "sample_case_study",
+           "make_classification_task", "HashTokenizer", "reduce_domain",
+           "BatchIterator", "shard_batch"]

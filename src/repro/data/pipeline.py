@@ -1,0 +1,43 @@
+"""Data pipeline: deterministic, shardable batching for training/serving.
+
+Host-side numpy pipeline feeding jit'd steps; `shard_batch` places a global
+batch onto the mesh's batch axes (("pod",) "data") so pjit consumes it
+without resharding.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import numpy as np
+
+
+class BatchIterator:
+    """Infinite shuffled epochs over an array dict, fixed batch size."""
+
+    def __init__(self, data: dict[str, np.ndarray], batch_size: int,
+                 seed: int = 0, drop_remainder: bool = True):
+        n = len(next(iter(data.values())))
+        assert all(len(v) == n for v in data.values())
+        assert drop_remainder
+        self.data, self.n, self.bs = data, n, batch_size
+        self.rng = np.random.default_rng(seed)
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        while True:
+            order = self.rng.permutation(self.n)
+            for i in range(0, self.n - self.bs + 1, self.bs):
+                idx = order[i:i + self.bs]
+                yield {k: v[idx] for k, v in self.data.items()}
+
+
+def shard_batch(batch: dict[str, np.ndarray], mesh,
+                batch_axes: tuple[str, ...]) -> dict[str, jax.Array]:
+    """Place a host batch on the mesh, batch dim sharded over batch_axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = {}
+    for k, v in batch.items():
+        spec = P(batch_axes, *([None] * (v.ndim - 1)))
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the cascade's compute hot spots.
+
+Each kernel package ships kernel.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd wrapper with CPU fallback) and ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; TPU v5e is the compile target.
+"""
+
+from repro.kernels.decode_attention.ops import decode_attn
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.maxconf.ops import maxconf
+from repro.kernels.mdsa.ops import mdsa_distance
+from repro.kernels.rwkv6_scan.ops import rwkv6_time_mix_scan
+
+__all__ = ["maxconf", "mdsa_distance", "attention", "decode_attn",
+           "rwkv6_time_mix_scan"]

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for decode attention (TPU Pallas / CPU jnp fallback)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def decode_attn(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                kv_len: jnp.ndarray, *, kb: int = 512,
+                force_pallas: bool = False,
+                interpret: bool = False) -> jnp.ndarray:
+    on_tpu = jax.default_backend() == "tpu"
+    if not (force_pallas or on_tpu):
+        return decode_attention_ref(q, k_cache, v_cache, kv_len)
+    return decode_attention(q, k_cache, v_cache, kv_len, kb=kb,
+                            interpret=interpret or not on_tpu)

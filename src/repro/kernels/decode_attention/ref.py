@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray,
+                         kv_len: jnp.ndarray) -> jnp.ndarray:
+    """q: [B, H, hd] (one token); caches: [B, S, K, hd]; kv_len: [B] valid
+    slots per sequence. Returns [B, H, hd]."""
+    b, h, hd = q.shape
+    s, kh = k_cache.shape[1], k_cache.shape[2]
+    g = h // kh
+    qr = q.reshape(b, kh, g, hd).astype(jnp.float32)
+    lg = jnp.einsum("bkgh,bskh->bkgs", qr, k_cache.astype(jnp.float32))
+    lg = lg / np.sqrt(hd)
+    valid = jnp.arange(s)[None, :] < kv_len[:, None]       # [B, S]
+    lg = jnp.where(valid[:, None, None, :], lg, -1e30)
+    w = jax.nn.softmax(lg, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, hd).astype(q.dtype)

@@ -1,0 +1,20 @@
+"""Jit'd wrapper for flash attention (TPU Pallas / CPU jnp fallback)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, window: int = 0, qb: int = 256,
+              kb: int = 256, force_pallas: bool = False,
+              interpret: bool = False) -> jnp.ndarray:
+    on_tpu = jax.default_backend() == "tpu"
+    if not (force_pallas or on_tpu):
+        return attention_ref(q, k, v, causal=causal, window=window)
+    return flash_attention(q, k, v, causal=causal, window=window, qb=qb,
+                           kb=kb, interpret=interpret or not on_tpu)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention (prefill) kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """q: [B, T, H, hd]; k, v: [B, S, K, hd] (GQA: H multiple of K)."""
+    b, t, h, hd = q.shape
+    s, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    qr = q.reshape(b, t, kh, g, hd).astype(jnp.float32)
+    lg = jnp.einsum("btkgh,bskh->bkgts", qr, k.astype(jnp.float32))
+    lg = lg / np.sqrt(hd)
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    lg = jnp.where(mask[None, None, None], lg, -1e30)
+    w = jax.nn.softmax(lg, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w, v.astype(jnp.float32))
+    return out.reshape(b, t, h, hd).astype(q.dtype)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the fused supervisor-confidence kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def maxconf_ref(logits: jnp.ndarray) -> dict[str, jnp.ndarray]:
+    """logits: [B, V] -> per-row supervisor metadata:
+    prediction (argmax), max_softmax, pcs (top1 - top2 softmax), entropy."""
+    lg = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(lg, axis=-1)
+    p = jnp.exp(logp)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return {
+        "prediction": jnp.argmax(lg, axis=-1).astype(jnp.int32),
+        "max_softmax": top2[:, 0],
+        "pcs": top2[:, 0] - top2[:, 1],
+        "entropy": -jnp.sum(p * logp, axis=-1),
+    }

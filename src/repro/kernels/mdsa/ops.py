@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the MDSA kernel (TPU Pallas / CPU jnp fallback)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mdsa.kernel import mdsa_pallas
+from repro.kernels.mdsa.ref import mdsa_ref
+
+
+def mdsa_distance(x: jnp.ndarray, mean: jnp.ndarray, prec: jnp.ndarray, *,
+                  bb: int = 128, db: int = 128, force_pallas: bool = False,
+                  interpret: bool = False) -> jnp.ndarray:
+    """Mahalanobis distance per row; pads batch/features as needed."""
+    on_tpu = jax.default_backend() == "tpu"
+    if not (force_pallas or on_tpu):
+        return mdsa_ref(x, mean, prec)
+    b, d = x.shape
+    pad_b, pad_d = (-b) % bb, (-d) % db
+    if pad_d:
+        x = jnp.pad(x, ((0, 0), (0, pad_d)))
+        mean = jnp.pad(mean, (0, pad_d))
+        prec = jnp.pad(prec, ((0, pad_d), (0, pad_d)))
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0)))
+    out = mdsa_pallas(x, mean, prec, bb=bb, db=db,
+                      interpret=interpret or not on_tpu)
+    return out[:b]

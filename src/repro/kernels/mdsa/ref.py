@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the MDSA Mahalanobis-distance kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mdsa_ref(x: jnp.ndarray, mean: jnp.ndarray,
+             prec: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, D], mean: [D], prec: [D, D] -> sqrt((x-mu)^T P (x-mu)) [B]."""
+    y = x.astype(jnp.float32) - mean.astype(jnp.float32)
+    d2 = jnp.einsum("bd,de,be->b", y, prec.astype(jnp.float32), y)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))

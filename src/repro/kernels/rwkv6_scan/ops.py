@@ -1,0 +1,18 @@
+"""Jit'd wrapper for the RWKV6 scan (TPU Pallas / CPU jnp fallback)."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+
+def rwkv6_time_mix_scan(r, k, v, w, u, s0, *, tb: int = 128,
+                        force_pallas: bool = False,
+                        interpret: bool = False):
+    on_tpu = jax.default_backend() == "tpu"
+    if not (force_pallas or on_tpu):
+        return rwkv6_scan_ref(r, k, v, w, u, s0)
+    return rwkv6_scan(r, k, v, w, u, s0, tb=tb,
+                      interpret=interpret or not on_tpu)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the RWKV6 time-mix recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, s0):
+    """Per-head Finch recurrence.
+
+    r,k,v,w: [B, T, H, M]; u: [H, M]; s0: [B, H, M, M] fp32.
+      y_t[j] = sum_i r[i] * (S[i,j] + u[i] k[i] v[j])
+      S     <- diag(w_t) S + k_t v_t^T
+    Returns (y [B, T, H, M] fp32, s_T [B, H, M, M]).
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        att = s + u[None, :, :, None] * kv
+        y = jnp.einsum("bhm,bhmn->bhn", r_t, att)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    seq = tuple(jnp.moveaxis(z.astype(jnp.float32), 1, 0)
+                for z in (r, k, v, w))
+    s_t, ys = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), s_t

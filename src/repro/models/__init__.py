@@ -1,0 +1,7 @@
+"""Model substrate: unified API over all assigned architecture families."""
+
+from repro.models.transformer import (decode_step, forward, init_params,
+                                      loss_fn, make_cache, prefill)
+
+__all__ = ["init_params", "forward", "loss_fn", "prefill", "decode_step",
+           "make_cache"]

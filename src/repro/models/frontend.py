@@ -1,0 +1,31 @@
+"""Modality frontend STUBS (per assignment carve-out).
+
+[audio] and [vlm] architectures specify the transformer BACKBONE only; the
+mel-spectrogram + conv feature extractor (HuBERT) and the ViT encoder +
+projector (Pixtral) are not implemented. These helpers produce the
+embedding tensors such frontends would emit — with the right shape, dtype
+and deterministic content for tests — so the backbone, cascade, sharding
+and dry-run all operate on genuine inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def frontend_embeddings(cfg: ModelConfig, batch: int, seq_len: int,
+                        seed: int = 0) -> jnp.ndarray:
+    """Deterministic stand-in for frame (audio) / patch (vision) embeddings."""
+    assert cfg.takes_embeddings, cfg.name
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (batch, seq_len, cfg.d_model))
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def frontend_spec(cfg: ModelConfig, batch: int, seq_len: int):
+    """ShapeDtypeStruct version for the dry-run (no allocation)."""
+    return jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                jnp.dtype(cfg.dtype))

@@ -1,0 +1,151 @@
+"""Mamba2 (SSD) mixer — the backbone block of Zamba2.
+
+Scalar-decay state-space duality form: per head (head_dim P, state N):
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * x_t  B_t^T     (h in R^{P x N})
+    y_t = h_t C_t + D * x_t
+with a < 0 learned per head, dt_t = softplus(dt_proj(u_t) + dt_bias) per
+head, B_t, C_t in R^N shared across the head's channels, plus a depthwise
+causal conv (width 4) on (x, B, C) and a SiLU gate z — matching the Mamba2
+reference topology. State is O(1) in sequence length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import Params, dense, dense_params, rms_norm
+from repro.models.shard_hints import constrain
+
+CONV_W = 4
+HEAD_P = 64  # mamba2 head dim
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = 2 * cfg.d_model
+    n_heads = d_inner // HEAD_P
+    return d_inner, n_heads, cfg.ssm_state_dim
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype) -> Params:
+    """In-projections are UNFUSED by sharding role (SPerf iteration B1):
+    the reference fused [z,x,B,C,dt] projection has out-dim
+    2*d_inner+2n+h (zamba2: 14520), indivisible by the 16-way `model`
+    axis, which forced XLA SPMD into involuntary full rematerialization
+    (replicate + repartition) on every layer. Split by role — w_zx
+    (14336, 16-aligned, column-parallel), w_bc (2n, column-parallel),
+    w_dt (h, replicated) — the math is identical (the depthwise conv
+    splits exactly across the channel groups)."""
+    d = cfg.d_model
+    d_inner, h, n = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_zx": dense_params(ks[0], d, 2 * d_inner, dtype),   # [z, x]
+        "w_bc": dense_params(ks[1], d, 2 * n, dtype),         # [B, C]
+        "w_dt": dense_params(ks[2], d, h, dtype),
+        "conv_x_w": (jax.random.normal(ks[3], (CONV_W, d_inner)) * 0.1
+                     ).astype(dtype),
+        "conv_x_b": jnp.zeros((d_inner,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[4], (CONV_W, 2 * n)) * 0.1
+                      ).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * n,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_norm": jnp.ones((d_inner,), dtype),
+        "w_out": dense_params(ks[5], d_inner, d, dtype),
+    }
+
+
+def mamba2_state(cfg: ModelConfig, batch: int, layers: int | None = None):
+    n_l = cfg.num_layers if layers is None else layers
+    d_inner, h, n = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((n_l, batch, h, HEAD_P, n), jnp.float32),
+        "conv_x": jnp.zeros((n_l, batch, CONV_W - 1, d_inner), jnp.float32),
+        "conv_bc": jnp.zeros((n_l, batch, CONV_W - 1, 2 * n), jnp.float32),
+    }
+
+
+def _conv(w, b, xbc, conv_state):
+    """Depthwise causal conv width-4. xbc: [B,T,C]; conv_state: [B,3,C]."""
+    x_pad = jnp.concatenate([conv_state.astype(xbc.dtype), xbc], axis=1)
+    out = sum(x_pad[:, i:i + xbc.shape[1]] * w[i]
+              for i in range(CONV_W))
+    new_state = x_pad[:, -(CONV_W - 1):].astype(jnp.float32)
+    return jax.nn.silu(out + b), new_state
+
+
+def _scan_core(a_decay, dt, x_h, bb, cc):
+    """a_decay [B,T,H] fp32, dt [B,T,H], x_h [B,T,H,P], bb/cc [B,T,N]."""
+    def step(s, inp):
+        dec, dt_t, x_t, b_t, c_t = inp
+        upd = (dt_t[..., None, None] * x_t[..., :, None]
+               * b_t[:, None, None, :])                    # [B,H,P,N]
+        s = dec[..., None, None] * s + upd
+        y = jnp.einsum("bhpn,bn->bhp", s, c_t)
+        return s, y
+
+    seq = (jnp.moveaxis(a_decay, 1, 0), jnp.moveaxis(dt, 1, 0),
+           jnp.moveaxis(x_h, 1, 0), jnp.moveaxis(bb, 1, 0),
+           jnp.moveaxis(cc, 1, 0))
+    s0 = jnp.zeros(x_h.shape[0:1] + x_h.shape[2:] + (bb.shape[-1],),
+                   jnp.float32)
+    return seq, s0, step
+
+
+def mamba2_forward(cfg: ModelConfig, p: Params, x, state=None, layer=None):
+    """Full-sequence SSD mixer. x: [B,T,D] -> (y [B,T,D], final_state dict).
+
+    state: optional initial {"ssm": [B,H,P,N], "conv": [B,3,C]}; zeros if
+    None (fresh sequence).
+    """
+    b, t, d = x.shape
+    d_inner, h, n = _dims(cfg)
+    z, xi = jnp.split(dense(p["w_zx"], x), [d_inner], axis=-1)
+    bc = dense(p["w_bc"], x)
+    dt = dense(p["w_dt"], x)
+    cx0 = (state["conv_x"] if state is not None else
+           jnp.zeros((b, CONV_W - 1, d_inner), jnp.float32))
+    cbc0 = (state["conv_bc"] if state is not None else
+            jnp.zeros((b, CONV_W - 1, 2 * n), jnp.float32))
+    xi, conv_x_t = _conv(p["conv_x_w"], p["conv_x_b"], xi, cx0)
+    bc, conv_bc_t = _conv(p["conv_bc_w"], p["conv_bc_b"], bc, cbc0)
+    bb, cc = jnp.split(bc, [n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,T,H]
+    a = -jnp.exp(p["a_log"])                                       # [H]
+    decay = jnp.exp(dt * a)                                        # [B,T,H]
+    # The d_inner channel axis is flattened P-MAJOR (index = p*h + head):
+    # HEAD_P=128 divides the 16-way `model` axis while the head count
+    # (d_inner/128 = 56 for zamba2) does not, so P-major blocks make the
+    # column-parallel w_zx/conv shards line up EXACTLY with the
+    # P-sharding of the SSD recurrence — no gather between the
+    # projections and the scan, and w_out consumes the P-major layout
+    # directly (its learned rows are order-free). SPerf iterations B2+B3.
+    xi = constrain(xi, "data", None, "model")
+    x_h = (xi.astype(jnp.float32).reshape(b, t, HEAD_P, h)
+           .transpose(0, 1, 3, 2))                            # [B,T,h,P]
+    x_h = constrain(x_h, "data", None, None, "model")
+    bb32, cc32 = bb.astype(jnp.float32), cc.astype(jnp.float32)
+
+    seq, s0, step = _scan_core(decay, dt, x_h, bb32, cc32)
+    if state is not None:
+        s0 = state["ssm"].astype(jnp.float32)
+    s0 = constrain(s0, "data", None, "model", None)
+    s_t, ys = jax.lax.scan(step, s0, seq)
+    y = jnp.moveaxis(ys, 0, 1) + p["d_skip"][None, None, :, None] * x_h
+    y = constrain(y, "data", None, None, "model")
+    # back to the P-major d_inner flatten (local transpose: P stays
+    # sharded) so the row-parallel w_out contraction shards line up
+    y = y.transpose(0, 1, 3, 2).reshape(b, t, d_inner).astype(x.dtype)
+    y = constrain(y, "data", None, "model")
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = dense(p["w_out"], y)
+    return out, {"ssm": s_t, "conv_x": conv_x_t, "conv_bc": conv_bc_t}
+
+
+def mamba2_decode(cfg: ModelConfig, p: Params, x, state):
+    """One-token step. x: [B,1,D]; state {"ssm":[B,H,P,N],"conv":[B,3,C]}."""
+    return mamba2_forward(cfg, p, x, state=state)

@@ -1,0 +1,139 @@
+"""RWKV-6 "Finch" block: linear attention with data-dependent decay.
+
+Per head (head size M): state S in R^{M x M},
+    y_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+with w_t = exp(-exp(ddlerp_w(x_t, x_{t-1}))) data-dependent per channel
+(the defining Finch feature vs RWKV-5's static decay), and token-shift
+low-rank ("ddlerp") mixing for r/k/v/w/g. Channel-mix is the standard
+squared-ReLU token-shift MLP.
+
+State is O(1) in sequence length -> this arch serves long_500k natively.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (Params, dense, dense_params, group_norm)
+
+LORA_R = 32
+
+
+def _lora(key, d, out, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"a": dense_params(k1, d, LORA_R, dtype),
+            "b": dense_params(k2, LORA_R, out, dtype, scale=1e-2)}
+
+
+def _lora_apply(p, x):
+    return dense(p["b"], jnp.tanh(dense(p["a"], x)))
+
+
+def rwkv6_params(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 16)
+    names = ("w", "k", "v", "r", "g")
+    p: Params = {
+        "maa_x": jnp.zeros((d,), dtype),
+        "maa": {n: jnp.zeros((d,), dtype) for n in names},
+        "maa_lora": {n: _lora(ks[i], d, d, dtype)
+                     for i, n in enumerate(names)},
+        "decay_base": jnp.full((d,), -6.0, dtype),
+        "decay_lora": _lora(ks[5], d, d, dtype),
+        "bonus_u": jnp.full((d,), 0.5, dtype),
+        "wr": dense_params(ks[6], d, d, dtype),
+        "wk": dense_params(ks[7], d, d, dtype),
+        "wv": dense_params(ks[8], d, d, dtype),
+        "wg": dense_params(ks[9], d, d, dtype),
+        "wo": dense_params(ks[10], d, d, dtype),
+        "ln_w": jnp.ones((d,), dtype),
+        "ln_b": jnp.zeros((d,), dtype),
+        # channel mix
+        "cm_maa_k": jnp.zeros((d,), dtype),
+        "cm_maa_r": jnp.zeros((d,), dtype),
+        "cm_wk": dense_params(ks[11], d, cfg.d_ff, dtype),
+        "cm_wv": dense_params(ks[12], cfg.d_ff, d, dtype),
+        "cm_wr": dense_params(ks[13], d, d, dtype),
+    }
+    return p
+
+
+def _ddlerp(p: Params, x, x_prev):
+    """Data-dependent token-shift mixing -> dict of mixed inputs."""
+    xx = x_prev - x
+    base = x + xx * p["maa_x"]
+    return {n: x + xx * (p["maa"][n] + _lora_apply(p["maa_lora"][n], base))
+            for n in p["maa"]}
+
+
+def _heads(cfg: ModelConfig, t: jnp.ndarray):
+    b, tt, d = t.shape
+    m = cfg.rwkv_head_dim
+    return t.reshape(b, tt, d // m, m)
+
+
+def rwkv6_state(cfg: ModelConfig, batch: int, layers: int | None = None):
+    n_l = cfg.num_layers if layers is None else layers
+    d, m = cfg.d_model, cfg.rwkv_head_dim
+    h = d // m
+    return {
+        "wkv": jnp.zeros((n_l, batch, h, m, m), jnp.float32),
+        "tm_prev": jnp.zeros((n_l, batch, d), jnp.float32),
+        "cm_prev": jnp.zeros((n_l, batch, d), jnp.float32),
+    }
+
+
+def _time_mix_core(cfg, p, r, k, v, w, u, s0):
+    """Scan the linear-attention recurrence.
+
+    r,k,v,w: [B,T,H,M] (w already in (0,1)); u: [H,M]; s0: [B,H,M,M].
+    Returns y [B,T,H,M], s_T.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                       # [B,H,M]
+        kv = k_t[..., :, None] * v_t[..., None, :]     # [B,H,M,M]
+        att = s + u[None, :, :, None] * kv
+        y = jnp.einsum("bhm,bhmn->bhn", r_t, att)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    seq = tuple(jnp.moveaxis(z.astype(jnp.float32), 1, 0) for z in (r, k, v, w))
+    s_t, ys = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), s_t
+
+
+def time_mix(cfg: ModelConfig, p: Params, x, s0, x_prev0):
+    """x: [B,T,D] normed. s0: [B,H,M,M] fp32. x_prev0: [B,D] last token of
+    previous chunk (zeros at t=0). Returns (out [B,T,D], s_T, x_last)."""
+    b, t, d = x.shape
+    m = cfg.rwkv_head_dim
+    h = d // m
+    x_prev = jnp.concatenate([x_prev0[:, None].astype(x.dtype), x[:, :-1]], 1)
+    mixed = _ddlerp(p, x, x_prev)
+    r = _heads(cfg, dense(p["wr"], mixed["r"]))
+    k = _heads(cfg, dense(p["wk"], mixed["k"]))
+    v = _heads(cfg, dense(p["wv"], mixed["v"]))
+    g = jax.nn.silu(dense(p["wg"], mixed["g"]))
+    decay = (p["decay_base"].astype(jnp.float32)
+             + _lora_apply(p["decay_lora"], mixed["w"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(decay)).reshape(b, t, h, m)
+    u = p["bonus_u"].astype(jnp.float32).reshape(h, m)
+    y, s_t = _time_mix_core(cfg, p, r, k, v, w, u, s0)
+    y = group_norm(y.reshape(b, t, d).astype(x.dtype),
+                   p["ln_w"], p["ln_b"], h, cfg.norm_eps)
+    out = dense(p["wo"], y * g)
+    return out, s_t, x[:, -1].astype(jnp.float32)
+
+
+def channel_mix(cfg: ModelConfig, p: Params, x, x_prev0):
+    """Squared-relu channel mix with token shift. Returns (out, x_last)."""
+    x_prev = jnp.concatenate([x_prev0[:, None].astype(x.dtype), x[:, :-1]], 1)
+    xx = x_prev - x
+    xk = x + xx * p["cm_maa_k"]
+    xr = x + xx * p["cm_maa_r"]
+    kk = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk)))
+    return (jax.nn.sigmoid(dense(p["cm_wr"], xr)) * dense(p["cm_wv"], kk),
+            x[:, -1].astype(jnp.float32))

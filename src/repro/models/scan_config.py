@@ -1,0 +1,42 @@
+"""Global switch for structural-scan unrolling (roofline analysis mode).
+
+``compiled.cost_analysis()`` visits a ``while`` body ONCE, so layer-stacked
+``lax.scan`` (the thing that keeps 95-layer HLO compact) makes FLOPs/bytes
+under-report by ~num_layers x. For roofline extraction we therefore lower a
+REDUCED-depth variant with all *structural* scans (layer stacks, CE chunks,
+q-chunks) fully unrolled, and extrapolate cost linearly in depth
+(see analysis.roofline.roofline_extrapolated). Time-recurrence scans
+(RWKV6 / Mamba2 token loops) are never unrolled — their per-step cost is
+negligible next to the projections outside the loop, and unrolling a
+32k-step recurrence would be intractable.
+
+Default (training / serving / dry-run-compile path): no unrolling.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL: bool = False
+
+
+def set_unroll(value: bool) -> None:
+    global _UNROLL
+    _UNROLL = value
+
+
+def scan_unroll() -> bool | int:
+    """Value for lax.scan(unroll=...): True (full) in analysis mode."""
+    return True if _UNROLL else 1
+
+
+@contextlib.contextmanager
+def unrolled():
+    """Context manager: structural scans fully unrolled within."""
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev

@@ -1,0 +1,134 @@
+"""Local surrogate models — the paper's "small, local" tier.
+
+The paper's local models are tiny custom transformers (IMDB: 79k params,
+one transformer block + pooling + two dense layers, dropout before the
+dense layers). This module reproduces that recipe as a classifier factory
+with *inference-time dropout support* so MC-Dropout and Ensemble
+supervisors work (dropout layers can be kept live at prediction time).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (Params, dense, dense_params, gelu_mlp,
+                                 gelu_mlp_params, layer_norm)
+
+
+@dataclass(frozen=True)
+class SurrogateConfig:
+    name: str
+    vocab_size: int           # input-domain-reduced dictionary
+    max_len: int              # input-domain-reduced sequence clip
+    d_model: int
+    num_heads: int
+    d_ff: int
+    num_classes: int
+    num_blocks: int = 1
+    dropout: float = 0.1
+    pool: str = "mean"        # mean | first
+    norm_eps: float = 1e-5
+
+
+def init_params(cfg: SurrogateConfig, key) -> Params:
+    ks = jax.random.split(key, 4 + 2 * cfg.num_blocks)
+    p: Params = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model))
+                 * 0.02,
+        "pos": jax.random.normal(ks[1], (cfg.max_len, cfg.d_model)) * 0.02,
+        "blocks": [],
+        "hidden": dense_params(ks[2], cfg.d_model, cfg.d_ff, jnp.float32,
+                               bias=True),
+        "out": dense_params(ks[3], cfg.d_ff, cfg.num_classes, jnp.float32,
+                            bias=True),
+    }
+    blocks = []
+    for i in range(cfg.num_blocks):
+        k1, k2 = ks[4 + 2 * i], ks[5 + 2 * i]
+        hd = cfg.d_model // cfg.num_heads
+        blocks.append({
+            "ln1_w": jnp.ones((cfg.d_model,)), "ln1_b": jnp.zeros((cfg.d_model,)),
+            "ln2_w": jnp.ones((cfg.d_model,)), "ln2_b": jnp.zeros((cfg.d_model,)),
+            "wq": dense_params(k1, cfg.d_model, cfg.d_model, jnp.float32),
+            "wk": dense_params(jax.random.fold_in(k1, 1), cfg.d_model,
+                               cfg.d_model, jnp.float32),
+            "wv": dense_params(jax.random.fold_in(k1, 2), cfg.d_model,
+                               cfg.d_model, jnp.float32),
+            "wo": dense_params(jax.random.fold_in(k1, 3), cfg.d_model,
+                               cfg.d_model, jnp.float32),
+            "mlp": gelu_mlp_params(k2, cfg.d_model, cfg.d_ff, jnp.float32),
+        })
+    p["blocks"] = blocks
+    return p
+
+
+def _mha(cfg: SurrogateConfig, bp: Params, x, mask):
+    b, t, d = x.shape
+    h = cfg.num_heads
+    hd = d // h
+    q = dense(bp["wq"], x).reshape(b, t, h, hd)
+    k = dense(bp["wk"], x).reshape(b, t, h, hd)
+    v = dense(bp["wv"], x).reshape(b, t, h, hd)
+    lg = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(hd)
+    lg = jnp.where(mask[:, None, None, :], lg, -1e30)
+    w = jax.nn.softmax(lg, axis=-1)
+    o = jnp.einsum("bhts,bshd->bthd", w, v).reshape(b, t, d)
+    return dense(bp["wo"], o)
+
+
+def _dropout(x, rate, key, enabled):
+    if not enabled or rate == 0.0:
+        return x
+    keep = jax.random.bernoulli(key, 1.0 - rate, x.shape)
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def apply(cfg: SurrogateConfig, params: Params, tokens, *, dropout_rng=None,
+          train: bool = False, mc_dropout: bool = False,
+          return_hidden: bool = False):
+    """tokens: [B, T<=max_len] int32 (0 = pad). Returns logits [B, C].
+
+    mc_dropout=True keeps dropout live at inference (MC-Dropout sampling);
+    dropout_rng is then required. return_hidden additionally returns the
+    penultimate activation (MDSA / autoencoder supervisors hook here).
+    """
+    use_do = (train or mc_dropout) and cfg.dropout > 0
+    if use_do:
+        assert dropout_rng is not None
+        rngs = jax.random.split(dropout_rng, 2 + len(params["blocks"]))
+    mask = tokens > 0
+    t = tokens.shape[1]
+    x = params["embed"][tokens] + params["pos"][:t]
+    for i, bp in enumerate(params["blocks"]):
+        h = layer_norm(x, bp["ln1_w"], bp["ln1_b"], cfg.norm_eps)
+        x = x + _mha(cfg, bp, h, mask)
+        h = layer_norm(x, bp["ln2_w"], bp["ln2_b"], cfg.norm_eps)
+        x = x + gelu_mlp(bp["mlp"], h)
+        if use_do:
+            x = _dropout(x, cfg.dropout, rngs[2 + i], True)
+    if cfg.pool == "mean":
+        denom = jnp.maximum(jnp.sum(mask, -1, keepdims=True), 1)
+        pooled = jnp.sum(x * mask[..., None], axis=1) / denom
+    else:
+        pooled = x[:, 0]
+    if use_do:
+        pooled = _dropout(pooled, cfg.dropout, rngs[0], True)
+    hidden = jax.nn.relu(dense(params["hidden"], pooled))
+    if use_do:
+        hidden = _dropout(hidden, cfg.dropout, rngs[1], True)
+    logits = dense(params["out"], hidden)
+    if return_hidden:
+        return logits, hidden
+    return logits
+
+
+def loss_fn(cfg: SurrogateConfig, params: Params, tokens, labels, rng):
+    logits = apply(cfg, params, tokens, dropout_rng=rng, train=True)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    loss = jnp.mean(lse - gold)
+    acc = jnp.mean(jnp.argmax(logits, -1) == labels)
+    return loss, {"acc": acc}

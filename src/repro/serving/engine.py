@@ -1,0 +1,129 @@
+"""Cascade serving engine — BiSupervised as a two-tier production runtime.
+
+The engine composes:
+  * a LOCAL tier: cheap classifier (surrogate) evaluated for every request,
+  * a 1st-level supervisor on the local logits,
+  * capacity-based escalation (core.cascade) to a REMOTE tier — a sharded
+    in-framework model (or any callable),
+  * a 2nd-level supervisor on the remote metadata,
+  * per-request cost/latency accounting mirroring the paper's billing
+    model (Table 7 / §5.6).
+
+The jitted fast path is `make_cascade_step`; the Python-level
+`CascadeEngine` adds queueing, runtime-tunable thresholds and accounting.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cascade import (combine_escalated, escalation_capacity,
+                                gather_requests, select_escalations)
+from repro.core.supervisors import SOFTMAX_SUPERVISORS
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Latency/cost constants (paper Table 7 / GPT-3 style billing)."""
+    local_latency_s: float = 0.05
+    remote_latency_s: float = 0.32       # incl. network round trip
+    remote_cost_per_request: float = 0.0048
+
+
+@dataclass
+class CascadeStats:
+    requests: int = 0
+    remote_calls: int = 0
+    rejected: int = 0
+    total_cost: float = 0.0
+    total_latency_s: float = 0.0
+
+    @property
+    def remote_fraction(self) -> float:
+        return self.remote_calls / max(self.requests, 1)
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.total_latency_s / max(self.requests, 1)
+
+
+def make_cascade_step(local_apply: Callable, remote_apply: Callable,
+                      capacity: int, supervisor: str = "max_softmax"):
+    """Build the jit-able fused cascade step.
+
+    local_apply(local_batch) -> logits [B, C]
+    remote_apply(remote_batch_gathered) -> logits [k, C]
+    Requests carry BOTH input views (paper §4.1 input-domain reduction):
+    batch = {"local": <reduced inputs>, "remote": <full inputs>}.
+
+    `supervisor` is a SOFTMAX_SUPERVISORS name, or any callable
+    logits -> confidence (e.g. a bound MDSA on hidden states — the paper's
+    recommendation for non-softmax local models, §4.2).
+
+    Returns step(batch) -> dict(pred, local_conf, remote_conf, escalated).
+    """
+    sup = (supervisor if callable(supervisor)
+           else SOFTMAX_SUPERVISORS[supervisor])
+
+    def step(batch):
+        local_logits = local_apply(batch["local"])
+        local_conf = sup(local_logits)
+        local_pred = jnp.argmax(local_logits, -1)
+
+        idx, esc_mask = select_escalations(local_conf, capacity)
+        remote_in = gather_requests(batch["remote"], idx)
+        remote_logits = remote_apply(remote_in)
+        remote_pred = jnp.argmax(remote_logits, -1)
+        remote_conf_sub = sup(remote_logits)
+
+        pred = combine_escalated(local_pred, idx, remote_pred)
+        # non-escalated requests never consult the 2nd supervisor; fill +inf
+        remote_conf = jnp.full_like(local_conf, jnp.inf).at[idx].set(
+            remote_conf_sub)
+        return {"prediction": pred, "local_conf": local_conf,
+                "remote_conf": remote_conf, "escalated": esc_mask,
+                "local_pred": local_pred}
+
+    return step
+
+
+class CascadeEngine:
+    """Host-side engine: batching, runtime thresholds, accounting."""
+
+    def __init__(self, local_apply, remote_apply, *, batch_size: int,
+                 remote_fraction_budget: float,
+                 t_remote: float, cost: CostModel = CostModel(),
+                 supervisor="max_softmax"):
+        self.batch_size = batch_size
+        self.capacity = escalation_capacity(batch_size,
+                                            remote_fraction_budget)
+        self.t_remote = t_remote            # runtime-tunable (paper §4.5)
+        self.cost = cost
+        self.stats = CascadeStats()
+        self._step = jax.jit(make_cascade_step(
+            local_apply, remote_apply, self.capacity, supervisor))
+
+    def set_remote_threshold(self, t: float) -> None:
+        """Runtime reconfiguration (paper §4.5)."""
+        self.t_remote = t
+
+    def serve(self, batch: dict[str, Any]) -> dict[str, np.ndarray]:
+        out = jax.device_get(self._step(batch))
+        b = out["prediction"].shape[0]
+        escalated = out["escalated"]
+        accepted = (~escalated) | (out["remote_conf"] > self.t_remote)
+        n_remote = int(escalated.sum())
+        self.stats.requests += b
+        self.stats.remote_calls += n_remote
+        self.stats.rejected += int((~accepted).sum())
+        self.stats.total_cost += n_remote * self.cost.remote_cost_per_request
+        self.stats.total_latency_s += (
+            b * self.cost.local_latency_s
+            + n_remote * self.cost.remote_latency_s)
+        out["accepted"] = accepted
+        return out

@@ -1,0 +1,58 @@
+"""Greedy generation over the unified model API (prefill + decode loop).
+
+Returns per-token likelihoods of the chosen tokens so the sequence
+supervisors (seq_min_likelihood — the paper's QA reducer) apply directly:
+this is the generative analogue of the classification cascade.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_step, make_cache, prefill
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt_batch: dict,
+                    max_new_tokens: int, max_len: int | None = None):
+    """prompt_batch: {"tokens": [B, T]} (or {"embeds": ...} for VLM/audio).
+    Returns (tokens [B, max_new_tokens], likelihood [B, max_new_tokens])."""
+    if "tokens" in prompt_batch:
+        b, t = prompt_batch["tokens"].shape
+    else:
+        b, t = prompt_batch["embeds"].shape[:2]
+    max_len = max_len or (t + max_new_tokens)
+
+    logits, cache = prefill(cfg, params, prompt_batch)
+    full = make_cache(cfg, b, max_len)
+
+    def graft(dst, src):
+        # prefill caches cover [0, t); copy into the serving cache
+        def cp(d, s):
+            if d.shape == s.shape:
+                return s
+            idx = (slice(None), slice(None), slice(0, s.shape[2]))
+            return d.at[idx].set(s) if d.ndim >= 3 else s
+        return jax.tree.map(cp, dst, src)
+
+    cache = graft(full, cache)
+
+    @jax.jit
+    def step(carry, _):
+        cache, tok, pos = carry
+        logits, cache = decode_step(cfg, params, tok, cache, pos)
+        probs = jax.nn.softmax(logits, -1)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)
+        lik = jnp.max(probs, -1)
+        return (cache, nxt, pos + 1), (nxt, lik)
+
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    lik0 = jnp.max(jax.nn.softmax(logits, -1), -1)
+    toks, liks = [tok0], [lik0]
+    carry = (cache, tok0, jnp.int32(t))
+    for _ in range(max_new_tokens - 1):
+        carry, (nxt, lik) = step(carry, None)
+        toks.append(nxt)
+        liks.append(lik)
+    return jnp.stack(toks, 1), jnp.stack(liks, 1)

@@ -1,0 +1,85 @@
+"""Request scheduler: microbatching queue in front of the cascade engine.
+
+Requests arrive one by one (each carrying both input views); the scheduler
+packs fixed-size microbatches (padding the tail with replicas so jitted
+shapes never change), runs the engine and routes per-request results,
+including the REJECTED -> fallback path (paper Algorithm 1 line 12).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+
+def _stack(items):
+    """Stack a list of (possibly pytree) request inputs into a batch."""
+    first = items[0]
+    if isinstance(first, dict):
+        return {k: _stack([it[k] for it in items]) for k in first}
+    return np.stack(items)
+
+
+@dataclass
+class Request:
+    uid: int
+    local_input: np.ndarray
+    remote_input: np.ndarray
+
+
+@dataclass
+class Response:
+    uid: int
+    prediction: int
+    source: str               # "local" | "remote" | "fallback"
+    local_conf: float
+    remote_conf: float
+
+
+class MicrobatchScheduler:
+    def __init__(self, engine, fallback: Callable[[Request], int] | None = None):
+        self.engine = engine
+        self.fallback = fallback
+        self.queue: list[Request] = []
+        self.responses: dict[int, Response] = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _pad(self, reqs: list[Request]) -> list[Request]:
+        b = self.engine.batch_size
+        return reqs + [reqs[-1]] * (b - len(reqs))
+
+    def flush(self) -> list[Response]:
+        out: list[Response] = []
+        while self.queue:
+            chunk = self.queue[: self.engine.batch_size]
+            self.queue = self.queue[self.engine.batch_size:]
+            real = len(chunk)
+            padded = self._pad(chunk)
+            batch = {
+                "local": _stack([r.local_input for r in padded]),
+                "remote": _stack([r.remote_input for r in padded]),
+            }
+            res = self.engine.serve(batch)
+            for i, req in enumerate(chunk[:real]):
+                escalated = bool(res["escalated"][i])
+                accepted = bool(res["accepted"][i])
+                if not escalated:
+                    src = "local"
+                    pred = int(res["local_pred"][i])
+                elif accepted:
+                    src = "remote"
+                    pred = int(res["prediction"][i])
+                else:
+                    src = "fallback"
+                    pred = (self.fallback(req) if self.fallback
+                            else -1)  # "raise Exception" analogue
+                resp = Response(req.uid, pred, src,
+                                float(res["local_conf"][i]),
+                                float(res["remote_conf"][i]))
+                self.responses[req.uid] = resp
+                out.append(resp)
+        return out

@@ -1,0 +1,10 @@
+"""Training substrate: optimizer, loop, checkpointing."""
+
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
+from repro.train.loop import make_train_step, train_loop
+from repro.train.optimizer import (AdamWConfig, adamw_update, init_opt_state,
+                                   lr_schedule)
+
+__all__ = ["AdamWConfig", "adamw_update", "init_opt_state", "lr_schedule",
+           "make_train_step", "train_loop", "save_checkpoint",
+           "load_checkpoint"]

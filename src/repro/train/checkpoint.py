@@ -1,0 +1,56 @@
+"""Checkpointing: msgpack-serialised params/opt-state pytrees (no orbax).
+
+Leaves are stored as (dtype, shape, raw bytes); the tree structure as
+nested dicts/lists. Deterministic, dependency-light, restartable.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    a = np.asarray(jax.device_get(x))
+    if a.dtype == jnp.bfloat16:
+        return {"dtype": "bfloat16", "shape": list(a.shape),
+                "data": a.view(np.uint16).tobytes()}
+    return {"dtype": str(a.dtype), "shape": list(a.shape),
+            "data": a.tobytes()}
+
+
+def _unpack_leaf(d: dict):
+    if d["dtype"] == "bfloat16":
+        a = np.frombuffer(d["data"], np.uint16).reshape(d["shape"])
+        return jnp.asarray(a.view(jnp.bfloat16))
+    return jnp.asarray(np.frombuffer(d["data"], d["dtype"])
+                       .reshape(d["shape"]))
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    leaves, treedef = jax.tree.flatten(tree)
+    payload = {"step": step,
+               "treedef": str(treedef),
+               "leaves": [_pack_leaf(x) for x in leaves]}
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic
+
+
+def load_checkpoint(path: str, like: Any) -> tuple[Any, int]:
+    """Restore into the structure of `like` (shape/dtype verified)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    restored = [_unpack_leaf(d) for d in payload["leaves"]]
+    assert len(restored) == len(leaves), "checkpoint/tree leaf mismatch"
+    for r, l in zip(restored, leaves):
+        assert r.shape == l.shape, (r.shape, l.shape)
+    return treedef.unflatten(restored), payload["step"]

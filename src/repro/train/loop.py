@@ -1,0 +1,54 @@
+"""Training step builder + host loop.
+
+`make_train_step(cfg, opt_cfg)` returns the pure (params, opt_state, batch)
+-> (params, opt_state, metrics) function that launch/train.py jits with
+mesh shardings — the same function the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.models import loss_fn
+from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    remat: bool = True) -> Callable:
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, remat=remat), has_aux=True
+        )(params)
+        params, opt_state, stats = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+        metrics = dict(metrics, loss=loss, **stats)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, params, batches, opt_cfg: AdamWConfig,
+               steps: int, log_every: int = 10, jit: bool = True,
+               callback: Callable[[int, dict], None] | None = None):
+    """Single-host training loop (examples / smoke tests)."""
+    step_fn = make_train_step(cfg, opt_cfg)
+    if jit:
+        step_fn = jax.jit(step_fn)
+    opt_state = init_opt_state(params)
+    it = iter(batches)
+    history = []
+    t0 = time.perf_counter()
+    for i in range(steps):
+        params, opt_state, metrics = step_fn(params, opt_state, next(it))
+        if (i + 1) % log_every == 0 or i == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i + 1
+            m["elapsed_s"] = time.perf_counter() - t0
+            history.append(m)
+            if callback:
+                callback(i + 1, m)
+    return params, opt_state, history

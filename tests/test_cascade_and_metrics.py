@@ -1,0 +1,214 @@
+"""Cascade semantics (Algorithm 1) + RQ1/RQ2 metrics, incl. hypothesis
+property tests of the system's invariants."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from hypothesis.extra.numpy import arrays
+
+from repro.core import thresholds as TH
+from repro.core.cascade import (LOCAL, REJECTED, REMOTE, CascadeThresholds,
+                                bisupervised_batch, combine_escalated,
+                                escalation_capacity, gather_requests,
+                                select_escalations)
+from repro.core.metrics import (auc_rac, request_accuracy_curve,
+                                supervised_metrics, threshold_for_fpr)
+
+# ------------------------------------------------------------ Algorithm 1
+
+
+def test_bisupervised_batch_routing():
+    th = CascadeThresholds(t_local=0.8, t_remote=0.6)
+    out = bisupervised_batch(
+        local_pred=jnp.array([1, 2, 3]),
+        local_conf=jnp.array([0.9, 0.5, 0.4]),    # trust only input 0
+        remote_pred=jnp.array([7, 8, 9]),
+        remote_conf=jnp.array([0.0, 0.7, 0.3]),   # trust only input 1
+        th=th)
+    np.testing.assert_array_equal(np.asarray(out["prediction"]), [1, 8, 9])
+    np.testing.assert_array_equal(np.asarray(out["source"]),
+                                  [LOCAL, REMOTE, REJECTED])
+    np.testing.assert_array_equal(np.asarray(out["accepted"]),
+                                  [True, True, False])
+    np.testing.assert_array_equal(np.asarray(out["remote_called"]),
+                                  [False, True, True])
+
+
+@given(conf_i=st.lists(st.integers(0, 64), min_size=4, max_size=64),
+       t_i=st.integers(0, 128))
+@settings(max_examples=50, deadline=None)
+def test_remote_called_iff_local_untrusted(conf_i, t_i):
+    """Algorithm-1 invariant: the remote model is consulted exactly for the
+    inputs whose local confidence fails the threshold (the cost model).
+    Values live on a coarse grid (exactly representable, off-boundary)."""
+    conf = np.asarray(conf_i, np.float32) / 64.0
+    t_local = t_i / 128.0 + 1 / 256.0       # never equal to any conf value
+    n = conf.shape[0]
+    out = bisupervised_batch(jnp.zeros(n, jnp.int32), jnp.asarray(conf),
+                             jnp.ones(n, jnp.int32), jnp.ones(n),
+                             CascadeThresholds(t_local, 0.5))
+    want = ~(conf > t_local)
+    np.testing.assert_array_equal(np.asarray(out["remote_called"]), want)
+
+
+# --------------------------------------------------- capacity escalation
+
+
+def test_escalation_capacity_bounds():
+    assert escalation_capacity(128, 0.0) == 1
+    assert escalation_capacity(128, 1.0) == 128
+    assert escalation_capacity(128, 0.5) == 64
+    assert escalation_capacity(10, 0.31) == 4   # ceil
+
+
+def test_select_escalations_picks_lowest_confidence():
+    conf = jnp.array([0.9, 0.1, 0.5, 0.2])
+    idx, mask = select_escalations(conf, 2)
+    assert set(np.asarray(idx).tolist()) == {1, 3}
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [False, True, False, True])
+
+
+@given(conf=arrays(np.float32, st.integers(2, 40),
+                   elements=st.floats(0, 1, width=32), unique=True),
+       frac=st.floats(0.05, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_capacity_escalation_equals_threshold_semantics(conf, frac):
+    """Escalating the k lowest-confidence inputs == thresholding at the
+    k-th order statistic (the DESIGN.md §2 equivalence)."""
+    n = conf.shape[0]
+    k = escalation_capacity(n, frac)
+    idx, mask = select_escalations(jnp.asarray(conf), k)
+    t = np.sort(conf)[k - 1]
+    np.testing.assert_array_equal(np.asarray(mask), conf <= t)
+
+
+def test_combine_scatter_roundtrip():
+    local = jnp.array([10, 20, 30, 40])
+    idx = jnp.array([2, 0])
+    remote = jnp.array([77, 88])
+    out = combine_escalated(local, idx, remote)
+    np.testing.assert_array_equal(np.asarray(out), [88, 20, 77, 40])
+    sub = gather_requests({"x": jnp.arange(4) * 10}, idx)
+    np.testing.assert_array_equal(np.asarray(sub["x"]), [20, 0])
+
+
+# ------------------------------------------------------------ RQ1 metrics
+
+
+def test_rac_endpoints_are_pure_tiers():
+    rng = np.random.default_rng(0)
+    lc = rng.random(200) < 0.6
+    rc = rng.random(200) < 0.9
+    rac = request_accuracy_curve(rng.random(200), lc, rc)
+    np.testing.assert_allclose(rac.local_only, lc.mean())
+    np.testing.assert_allclose(rac.remote_only, rc.mean())
+    assert rac.accuracy.shape == (201,)
+
+
+def test_perfect_supervisor_beats_random():
+    """A supervisor whose confidence == correctness yields the maximum
+    possible AUC-RAC; a random one ~0.5."""
+    rng = np.random.default_rng(1)
+    n = 4000
+    local_correct = rng.random(n) < 0.6
+    remote_correct = rng.random(n) < 0.9
+    perfect = request_accuracy_curve(
+        local_correct.astype(float) + 0.1 * rng.random(n),
+        local_correct, remote_correct)
+    random = request_accuracy_curve(rng.random(n), local_correct,
+                                    remote_correct)
+    assert auc_rac(perfect) > 0.9
+    assert abs(auc_rac(random) - 0.5) < 0.1
+
+
+def test_superaccuracy_with_complementary_models():
+    """If local and remote are correct on disjoint sets and the supervisor
+    is informed, the RAC peaks above remote-only (paper §4.4)."""
+    n = 1000
+    local_correct = np.zeros(n, bool)
+    local_correct[:500] = True          # local solves first half
+    remote_correct = np.ones(n, bool)
+    remote_correct[:200] = False        # remote fails 200 the local solves
+    # informed supervisor: keeps local-right inputs local, and holds the
+    # remote-wrong-but-local-right ones back the longest
+    conf = local_correct.astype(float) + 0.5 * ~remote_correct
+    rac = request_accuracy_curve(conf, local_correct, remote_correct)
+    knees = rac.knee_points()
+    assert knees["best_accuracy"] > rac.remote_only
+    assert auc_rac(rac) > 1.0           # strong superaccuracy (paper §5.1)
+
+
+@given(st.integers(10, 300), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_rac_accuracy_is_valid_probability(n, seed):
+    rng = np.random.default_rng(seed)
+    rac = request_accuracy_curve(rng.random(n), rng.random(n) < 0.5,
+                                 rng.random(n) < 0.8)
+    assert np.all((rac.accuracy >= 0) & (rac.accuracy <= 1))
+    assert rac.remote_fraction[0] == 0.0 and rac.remote_fraction[-1] == 1.0
+
+
+# ------------------------------------------------------------ RQ2 metrics
+
+
+def test_supervised_metrics_formulas():
+    accepted = np.array([True, True, False, True])
+    correct = np.array([True, False, False, True])
+    m = supervised_metrics(accepted, correct)
+    np.testing.assert_allclose(m["delta"], 0.75)
+    np.testing.assert_allclose(m["acc_supervised"], 2 / 3)
+    # S_1 = harmonic mean
+    np.testing.assert_allclose(
+        m["s_1.0"], 2 * (2 / 3) * 0.75 / ((2 / 3) + 0.75))
+
+
+@given(accepted=arrays(bool, 64), correct=arrays(bool, 64))
+@settings(max_examples=50, deadline=None)
+def test_sbeta_bounded(accepted, correct):
+    m = supervised_metrics(accepted, correct)
+    for k in ("s_0.5", "s_1.0", "s_2.0"):
+        assert 0.0 <= m[k] <= 1.0
+    assert m[k] <= max(m["acc_supervised"], m["delta"]) + 1e-12
+
+
+def test_threshold_for_fpr_hits_target():
+    rng = np.random.default_rng(2)
+    conf = rng.random(10_000)
+    correct = rng.random(10_000) < 0.7
+    for fpr in (0.01, 0.05, 0.1):
+        t = threshold_for_fpr(conf, correct, fpr)
+        got = np.mean(conf[correct] <= t)
+        assert abs(got - fpr) < 0.01, (fpr, got)
+
+
+# ------------------------------------------------------------- thresholds
+
+
+def test_nominal_quantile_threshold():
+    conf = np.linspace(0, 1, 1001)
+    t = TH.nominal_quantile_threshold(conf, 0.10)
+    assert abs(np.mean(conf <= t) - 0.10) < 0.005
+
+
+def test_separation_threshold_separates():
+    rng = np.random.default_rng(3)
+    nominal = rng.normal(1.0, 0.2, 500)
+    invalid = rng.normal(-1.0, 0.2, 500)
+    t = TH.separation_threshold(nominal, invalid)
+    assert np.mean(nominal > t) > 0.95
+    assert np.mean(invalid <= t) > 0.95
+
+
+@given(frac=st.floats(0.0, 1.0), seed=st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_escalation_rate_threshold_matches_fraction(frac, seed):
+    rng = np.random.default_rng(seed)
+    conf = rng.random(500)
+    t = TH.escalation_rate_threshold(conf, frac)
+    got = np.mean(conf <= t)
+    assert abs(got - frac) <= 1.5 / 500 + 1e-9

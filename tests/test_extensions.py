@@ -1,0 +1,129 @@
+"""Paper §4.6 extensions: TriSupervised (edge tier) and the active-learning
+acquisition loop."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.cascade import (EDGE, LOCAL, REJECTED, REMOTE,
+                                TriThresholds, select_for_labeling,
+                                trisupervised_batch)
+
+
+def test_trisupervised_routing():
+    th = TriThresholds(t_local=0.9, t_edge=0.7, t_remote=0.5)
+    out = trisupervised_batch(
+        local_pred=jnp.array([1, 1, 1, 1]),
+        local_conf=jnp.array([0.95, 0.5, 0.5, 0.5]),   # only #0 local
+        edge_pred=jnp.array([2, 2, 2, 2]),
+        edge_conf=jnp.array([0.0, 0.8, 0.3, 0.3]),     # #1 edge
+        remote_pred=jnp.array([3, 3, 3, 3]),
+        remote_conf=jnp.array([0.0, 0.0, 0.6, 0.1]),   # #2 remote, #3 reject
+        th=th)
+    np.testing.assert_array_equal(np.asarray(out["prediction"]),
+                                  [1, 2, 3, 3])
+    np.testing.assert_array_equal(np.asarray(out["source"]),
+                                  [LOCAL, EDGE, REMOTE, REJECTED])
+    np.testing.assert_array_equal(np.asarray(out["accepted"]),
+                                  [True, True, True, False])
+    # cost model: edge consulted iff local rejected; remote iff edge too
+    np.testing.assert_array_equal(np.asarray(out["edge_called"]),
+                                  [False, True, True, True])
+    np.testing.assert_array_equal(np.asarray(out["remote_called"]),
+                                  [False, False, True, True])
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=30, deadline=None)
+def test_trisupervised_never_worse_informed_than_bisupervised(seed):
+    """With an accurate edge tier, three tiers route strictly fewer
+    requests to the remote model than two tiers at the same local
+    threshold (the paper's cost argument for the edge extension)."""
+    rng = np.random.default_rng(seed)
+    n = 256
+    local_conf = jnp.asarray(rng.random(n), jnp.float32)
+    edge_conf = jnp.asarray(rng.random(n), jnp.float32)
+    th = TriThresholds(0.8, 0.5, 0.0)
+    out = trisupervised_batch(
+        jnp.zeros(n, jnp.int32), local_conf, jnp.ones(n, jnp.int32),
+        edge_conf, jnp.full(n, 2, jnp.int32), jnp.ones(n), th)
+    bi_remote = int(np.sum(np.asarray(local_conf) <= 0.8))
+    tri_remote = int(np.asarray(out["remote_called"]).sum())
+    assert tri_remote <= bi_remote
+
+
+def test_active_learning_selects_least_confident():
+    conf = jnp.array([0.9, 0.2, 0.8, 0.1, 0.5])
+    idx, mask = select_for_labeling(conf, budget=2)
+    assert set(np.asarray(idx).tolist()) == {1, 3}
+    assert int(mask.sum()) == 2
+
+
+def test_active_learning_loop_improves_local_model():
+    """End-to-end §4.6: train on a seed set, use the 1st-level supervisor
+    to acquire the hardest unlabelled inputs (labelled by the 'remote'
+    oracle), retrain — accuracy on held-out data must improve over a
+    random-acquisition baseline trained with the same budget."""
+    from repro.data.synthetic import make_classification_task
+    from repro.models import surrogate as S
+    from repro.train.optimizer import AdamWConfig, adamw_update, \
+        init_opt_state
+
+    vocab, seq, ncls = 128, 24, 4
+    toks, labels, _ = make_classification_task(5, n=1200, vocab=vocab,
+                                               seq_len=seq, num_classes=ncls)
+    tk = jnp.asarray(toks)
+    lb = jnp.asarray(labels)
+    seed_n, pool = 64, slice(64, 900)
+    test = slice(900, 1200)
+    cfg = S.SurrogateConfig("al", vocab_size=vocab, max_len=seq, d_model=32,
+                            num_heads=2, d_ff=32, num_classes=ncls,
+                            dropout=0.0)
+
+    def train(train_tk, train_lb, steps=60, seed=0):
+        params = S.init_params(cfg, jax.random.PRNGKey(seed))
+        opt = init_opt_state(params)
+        ocfg = AdamWConfig(lr=3e-3, warmup_steps=5, weight_decay=0.0)
+
+        @jax.jit
+        def step(p, o):
+            (l, _), g = jax.value_and_grad(
+                lambda p: S.loss_fn(cfg, p, train_tk, train_lb,
+                                    jax.random.PRNGKey(1)),
+                has_aux=True)(p)
+            return adamw_update(ocfg, p, g, o)[:2]
+
+        for _ in range(steps):
+            params, opt = step(params, opt)
+        return params
+
+    def acc(params, sl):
+        pred = jnp.argmax(S.apply(cfg, params, tk[sl]), -1)
+        return float(jnp.mean(pred == lb[sl]))
+
+    params0 = train(tk[:seed_n], lb[:seed_n])
+    budget = 96
+
+    # supervisor acquisition: least-confident pool inputs
+    logits = S.apply(cfg, params0, tk[pool])
+    conf = jnp.max(jax.nn.softmax(logits, -1), -1)
+    idx, _ = select_for_labeling(conf, budget)
+    al_tk = jnp.concatenate([tk[:seed_n], tk[pool][idx]])
+    al_lb = jnp.concatenate([lb[:seed_n], lb[pool][idx]])
+    acc_al = acc(train(al_tk, al_lb), test)
+
+    # random acquisition baseline (same budget)
+    rng = np.random.default_rng(0)
+    ridx = rng.choice(900 - 64, budget, replace=False)
+    r_tk = jnp.concatenate([tk[:seed_n], tk[pool][ridx]])
+    r_lb = jnp.concatenate([lb[:seed_n], lb[pool][ridx]])
+    acc_rand = acc(train(r_tk, r_lb), test)
+
+    assert acc_al >= acc(params0, test) - 0.02   # more data never much worse
+    # supervisor acquisition should be competitive with random (usually
+    # better; small-model noise means we assert non-inferiority)
+    assert acc_al >= acc_rand - 0.05, (acc_al, acc_rand)

@@ -1,0 +1,169 @@
+"""Pallas kernel validation: every kernel is swept over shapes/dtypes and
+asserted allclose against its ref.py pure-jnp oracle, with the kernel body
+executed in interpret mode (CPU container; TPU v5e is the compile target)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attn
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.maxconf.ops import maxconf
+from repro.kernels.maxconf.ref import maxconf_ref
+from repro.kernels.mdsa.ops import mdsa_distance
+from repro.kernels.mdsa.ref import mdsa_ref
+from repro.kernels.rwkv6_scan.ops import rwkv6_time_mix_scan
+from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- maxconf
+
+@pytest.mark.parametrize("b,v", [(4, 512), (8, 2048), (3, 1000), (16, 4096),
+                                 (1, 5000)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_maxconf_matches_ref(b, v, dtype):
+    logits = rnd(KEY, (b, v), dtype, scale=4.0)
+    got = maxconf(logits, force_pallas=True, interpret=True)
+    want = maxconf_ref(logits)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_array_equal(np.asarray(got["prediction"]),
+                                  np.asarray(want["prediction"]))
+    for k in ("max_softmax", "pcs", "entropy"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=tol, atol=tol, err_msg=k)
+
+
+def test_maxconf_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0] + [0.0] * 125])
+    got = maxconf(logits, force_pallas=True, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(got["max_softmax"])))
+    np.testing.assert_allclose(float(got["max_softmax"][0]), 1.0, atol=1e-5)
+
+
+# -------------------------------------------------------------------- mdsa
+
+@pytest.mark.parametrize("b,d", [(8, 64), (128, 128), (100, 200), (1, 32)])
+def test_mdsa_matches_ref(b, d):
+    k1, k2 = jax.random.split(KEY)
+    x = rnd(k1, (b, d))
+    mean = rnd(k2, (d,))
+    a = rnd(jax.random.fold_in(KEY, 7), (d, d), scale=0.3)
+    prec = a @ a.T + jnp.eye(d)              # SPD
+    got = mdsa_distance(x, mean, prec, force_pallas=True, interpret=True)
+    want = mdsa_ref(x, mean, prec)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("t,h,kh,hd", [(256, 4, 4, 64), (512, 8, 2, 64),
+                                       (256, 4, 1, 128)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(t, h, kh, hd, causal):
+    ks = jax.random.split(KEY, 3)
+    q = rnd(ks[0], (2, t, h, hd))
+    k = rnd(ks[1], (2, t, kh, hd))
+    v = rnd(ks[2], (2, t, kh, hd))
+    got = attention(q, k, v, causal=causal, force_pallas=True,
+                    interpret=True)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_sliding_window():
+    ks = jax.random.split(KEY, 3)
+    q = rnd(ks[0], (1, 512, 4, 64))
+    k = rnd(ks[1], (1, 512, 4, 64))
+    v = rnd(ks[2], (1, 512, 4, 64))
+    got = attention(q, k, v, causal=True, window=128, force_pallas=True,
+                    interpret=True)
+    want = attention_ref(q, k, v, causal=True, window=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    ks = jax.random.split(KEY, 3)
+    q = rnd(ks[0], (1, 256, 4, 64), dtype)
+    k = rnd(ks[1], (1, 256, 4, 64), dtype)
+    v = rnd(ks[2], (1, 256, 4, 64), dtype)
+    got = attention(q, k, v, causal=True, force_pallas=True, interpret=True)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+# -------------------------------------------------------- decode attention
+
+@pytest.mark.parametrize("b,s,h,kh,hd", [(2, 1024, 8, 2, 64),
+                                         (4, 2048, 4, 4, 64),
+                                         (1, 512, 16, 2, 128)])
+def test_decode_attention_matches_ref(b, s, h, kh, hd):
+    ks = jax.random.split(KEY, 3)
+    q = rnd(ks[0], (b, h, hd))
+    kc = rnd(ks[1], (b, s, kh, hd))
+    vc = rnd(ks[2], (b, s, kh, hd))
+    kv_len = jnp.asarray(
+        np.random.default_rng(0).integers(1, s + 1, (b,)), jnp.int32)
+    got = decode_attn(q, kc, vc, kv_len, force_pallas=True, interpret=True)
+    want = decode_attention_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------- rwkv scan
+
+@pytest.mark.parametrize("t,h,m", [(128, 2, 32), (256, 4, 64), (64, 1, 16)])
+def test_rwkv6_scan_matches_ref(t, h, m):
+    ks = jax.random.split(KEY, 5)
+    b = 2
+    r = rnd(ks[0], (b, t, h, m), scale=0.5)
+    k = rnd(ks[1], (b, t, h, m), scale=0.5)
+    v = rnd(ks[2], (b, t, h, m), scale=0.5)
+    w = jax.nn.sigmoid(rnd(ks[3], (b, t, h, m)))   # decay in (0, 1)
+    u = rnd(ks[4], (h, m), scale=0.5)
+    s0 = jnp.zeros((b, h, m, m), jnp.float32)
+    got_y, got_s = rwkv6_time_mix_scan(r, k, v, w, u, s0, force_pallas=True,
+                                       interpret=True)
+    want_y, want_s = rwkv6_scan_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(got_y), np.asarray(want_y),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv6_scan_state_carry():
+    """Scanning two halves with carried state == scanning the whole."""
+    ks = jax.random.split(KEY, 5)
+    b, t, h, m = 1, 64, 2, 16
+    r = rnd(ks[0], (b, t, h, m), scale=0.5)
+    k = rnd(ks[1], (b, t, h, m), scale=0.5)
+    v = rnd(ks[2], (b, t, h, m), scale=0.5)
+    w = jax.nn.sigmoid(rnd(ks[3], (b, t, h, m)))
+    u = rnd(ks[4], (h, m), scale=0.5)
+    s0 = jnp.zeros((b, h, m, m), jnp.float32)
+    y_full, s_full = rwkv6_scan_ref(r, k, v, w, u, s0)
+    half = t // 2
+    y1, s1 = rwkv6_scan_ref(r[:, :half], k[:, :half], v[:, :half],
+                            w[:, :half], u, s0)
+    y2, s2 = rwkv6_scan_ref(r[:, half:], k[:, half:], v[:, half:],
+                            w[:, half:], u, s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               rtol=1e-5, atol=1e-5)

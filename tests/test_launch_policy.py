@@ -1,0 +1,38 @@
+"""Launch-layer policy tests: the serving fsdp auto-policy and the
+TP-footprint estimator (pure; no multi-device runtime needed)."""
+
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.launch.specs import _tp_param_bytes_per_chip
+from tests.test_sharding_rules import FakeMesh
+
+
+class _Mesh(FakeMesh):
+    pass
+
+
+MESH = _Mesh({"data": 16, "model": 16})
+
+
+def test_tp_footprint_orders_models():
+    small = _tp_param_bytes_per_chip(get_config("h2o-danube-1.8b"), MESH)
+    mid = _tp_param_bytes_per_chip(get_config("deepseek-67b"), MESH)
+    big = _tp_param_bytes_per_chip(get_config("qwen3-moe-235b-a22b"), MESH)
+    assert small < mid < big
+
+
+def test_tp_footprint_matches_napkin_math():
+    """deepseek-67b: ~67B params bf16 / 16-way TP ~= 8.4 GB/chip."""
+    got = _tp_param_bytes_per_chip(get_config("deepseek-67b"), MESH)
+    assert 6e9 < got < 11e9, got
+
+
+def test_serving_policy_thresholds():
+    """67B fits pure-TP (A1 applies); qwen3-235B does not (keeps FSDP)."""
+    assert _tp_param_bytes_per_chip(get_config("deepseek-67b"), MESH) < 12e9
+    assert _tp_param_bytes_per_chip(get_config("qwen3-moe-235b-a22b"),
+                                    MESH) > 12e9

@@ -1,0 +1,145 @@
+"""Serving runtime: cascade engine (capacity escalation), microbatch
+scheduler routing (local/remote/fallback), cost & latency accounting."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.engine import CascadeEngine, CostModel, make_cascade_step
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+
+def _toy_appliers(c=4):
+    """Local: logits from a weak linear map; remote: near-oracle logits.
+    Inputs are one-hot-ish feature vectors whose argmax is the label."""
+
+    def local_apply(x):          # x: [B, C] features
+        return x + 0.3 * jnp.sin(17.0 * x)   # noisy view
+
+    def remote_apply(x):
+        return 5.0 * x                        # confident, accurate
+
+    return local_apply, remote_apply
+
+
+def _batch(rng, b=16, c=4, hard_frac=0.5):
+    """hard inputs have small margins -> low local confidence."""
+    labels = rng.integers(0, c, b)
+    x = rng.normal(0, 0.05, (b, c))
+    margin = np.where(rng.random(b) < hard_frac, 0.1, 3.0)
+    x[np.arange(b), labels] += margin
+    return {"local": jnp.asarray(x, jnp.float32),
+            "remote": jnp.asarray(x, jnp.float32)}, labels, margin
+
+
+def test_cascade_step_escalates_lowest_confidence():
+    local_apply, remote_apply = _toy_appliers()
+    step = jax.jit(make_cascade_step(local_apply, remote_apply, capacity=8))
+    rng = np.random.default_rng(0)
+    batch, labels, margin = _batch(rng, b=16)
+    out = step(batch)
+    esc = np.asarray(out["escalated"])
+    assert esc.sum() == 8
+    # escalated inputs are exactly the 8 lowest-confidence ones
+    conf = np.asarray(out["local_conf"])
+    assert conf[esc].max() <= conf[~esc].min() + 1e-6
+    # hard inputs (small margin) should dominate the escalated set
+    assert margin[esc].mean() < margin[~esc].mean()
+
+
+def test_cascade_engine_accounting():
+    local_apply, remote_apply = _toy_appliers()
+    cost = CostModel(local_latency_s=0.05, remote_latency_s=0.32,
+                     remote_cost_per_request=0.0048)
+    eng = CascadeEngine(local_apply, remote_apply, batch_size=16,
+                        remote_fraction_budget=0.25, t_remote=0.1,
+                        cost=cost)
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        batch, _, _ = _batch(rng)
+        eng.serve(batch)
+    st = eng.stats
+    assert st.requests == 64
+    assert st.remote_calls == 16          # 25% capacity exactly
+    np.testing.assert_allclose(st.remote_fraction, 0.25)
+    np.testing.assert_allclose(st.total_cost, 16 * 0.0048)
+    # paper Eq. 2: mean latency = t_l + r * t_r
+    np.testing.assert_allclose(st.mean_latency_s, 0.05 + 0.25 * 0.32,
+                               rtol=1e-6)
+
+
+def test_engine_runtime_threshold_reconfiguration():
+    """Paper §4.5: thresholds are runtime-tunable configuration."""
+    local_apply, remote_apply = _toy_appliers()
+    eng = CascadeEngine(local_apply, remote_apply, batch_size=8,
+                        remote_fraction_budget=0.5, t_remote=0.99)
+    rng = np.random.default_rng(2)
+    batch, _, _ = _batch(rng, b=8)
+    strict = eng.serve(dict(batch))
+    eng.set_remote_threshold(0.0)
+    lax = eng.serve(dict(batch))
+    assert (~np.asarray(strict["accepted"])).sum() \
+        >= (~np.asarray(lax["accepted"])).sum()
+    assert np.asarray(lax["accepted"]).all()
+
+
+def test_scheduler_routes_and_falls_back():
+    local_apply, remote_apply = _toy_appliers()
+    eng = CascadeEngine(local_apply, remote_apply, batch_size=8,
+                        remote_fraction_budget=0.5, t_remote=0.9999999)
+    sched = MicrobatchScheduler(eng, fallback=lambda req: -7)
+    rng = np.random.default_rng(3)
+    batch, labels, _ = _batch(rng, b=20)   # not a multiple of 8 -> padding
+    x = np.asarray(batch["local"])
+    for i in range(20):
+        sched.submit(Request(uid=i, local_input=x[i], remote_input=x[i]))
+    responses = sched.flush()
+    assert len(responses) == 20
+    srcs = {r.source for r in responses}
+    assert srcs <= {"local", "remote", "fallback"}
+    assert "local" in srcs
+    for r in responses:
+        if r.source == "fallback":
+            assert r.prediction == -7
+    # every uid answered exactly once
+    assert sorted(r.uid for r in responses) == list(range(20))
+
+
+def test_scheduler_accuracy_beats_local_only():
+    """System-level sanity: the cascade's accuracy approaches the remote
+    tier's on hard inputs while keeping remote calls at the budget."""
+    local_apply, remote_apply = _toy_appliers()
+    eng = CascadeEngine(local_apply, remote_apply, batch_size=32,
+                        remote_fraction_budget=0.5, t_remote=0.0)
+    rng = np.random.default_rng(4)
+    batch, labels, _ = _batch(rng, b=32, hard_frac=0.5)
+    out = eng.serve(batch)
+    cascade_acc = (np.asarray(out["prediction"]) == labels).mean()
+    local_acc = (np.asarray(out["local_pred"]) == labels).mean()
+    assert cascade_acc >= local_acc
+    assert eng.stats.remote_fraction == 0.5
+
+
+def test_engine_accepts_callable_supervisor():
+    """Paper §4.2: MDSA (or any callable) as the 1st-level supervisor."""
+    import jax.numpy as jnp
+
+    local_apply, remote_apply = _toy_appliers()
+
+    def margin_supervisor(logits):            # custom confidence fn
+        top2 = jax.lax.top_k(logits, 2)[0]
+        return top2[..., 0] - top2[..., 1]
+
+    eng = CascadeEngine(local_apply, remote_apply, batch_size=16,
+                        remote_fraction_budget=0.25, t_remote=0.0,
+                        supervisor=margin_supervisor)
+    rng = np.random.default_rng(5)
+    batch, labels, margin = _batch(rng, b=16)
+    out = eng.serve(batch)
+    esc = np.asarray(out["escalated"])
+    assert esc.sum() == 4
+    # the low-margin (hard) inputs get escalated under the custom metric
+    assert margin[esc].mean() < margin[~esc].mean()

@@ -1,0 +1,151 @@
+"""Unit tests for the supervisor zoo (paper §3.2 / §4.2)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import supervisors as S
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _logits(b=32, c=10, scale=3.0, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, c)) * scale
+
+
+# ---------------------------------------------------------------- softmax
+
+@pytest.mark.parametrize("name", sorted(S.SOFTMAX_SUPERVISORS))
+def test_softmax_supervisor_ranges(name):
+    fn = S.SOFTMAX_SUPERVISORS[name]
+    conf = fn(_logits())
+    assert conf.shape == (32,)
+    assert bool(jnp.all(jnp.isfinite(conf)))
+
+
+@pytest.mark.parametrize("name", sorted(S.SOFTMAX_SUPERVISORS))
+def test_confident_beats_uniform(name):
+    """Every softmax supervisor ranks a peaked distribution above a flat
+    one — the property BiSupervised relies on."""
+    fn = S.SOFTMAX_SUPERVISORS[name]
+    peaked = jnp.array([[10.0, 0.0, 0.0, 0.0]])
+    flat = jnp.zeros((1, 4))
+    assert float(fn(peaked)[0]) > float(fn(flat)[0])
+
+
+def test_max_softmax_values():
+    conf = S.max_softmax(jnp.log(jnp.array([[0.7, 0.2, 0.1]])))
+    np.testing.assert_allclose(float(conf[0]), 0.7, rtol=1e-5)
+
+
+def test_pcs_values():
+    conf = S.prediction_confidence_score(
+        jnp.log(jnp.array([[0.7, 0.2, 0.1]])))
+    np.testing.assert_allclose(float(conf[0]), 0.5, rtol=1e-5)
+
+
+def test_gini_flat_is_one_over_c():
+    conf = S.gini_confidence(jnp.zeros((1, 8)))
+    np.testing.assert_allclose(float(conf[0]), 1 / 8, rtol=1e-5)
+
+
+def test_entropy_invariant_to_logit_shift():
+    lg = _logits()
+    a = S.negative_entropy(lg)
+    b = S.negative_entropy(lg + 100.0)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# --------------------------------------------------------------- sampling
+
+def test_variation_ratio_unanimous_vs_split():
+    c = 4
+    unanimous = jnp.tile(jnp.array([[[9.0, 0, 0, 0]]]), (6, 1, 1))
+    assert float(S.variation_ratio(unanimous)[0]) == 1.0
+    split = jnp.stack([jnp.array([[9.0, 0, 0, 0]])] * 3
+                      + [jnp.array([[0, 9.0, 0, 0]])] * 3)
+    assert float(S.variation_ratio(split)[0]) == 0.5
+
+
+def test_mutual_information_zero_when_samples_agree():
+    samples = jnp.tile(_logits(4, 5, seed=2)[None], (8, 1, 1))
+    mi = -S.mutual_information(samples)   # MI itself
+    np.testing.assert_allclose(np.asarray(mi), 0.0, atol=1e-5)
+
+
+def test_mean_max_softmax_bounds():
+    conf = S.mean_max_softmax(jax.random.normal(KEY, (5, 16, 7)))
+    assert bool(jnp.all((conf >= 1 / 7) & (conf <= 1.0)))
+
+
+# ------------------------------------------------------------------- MDSA
+
+def test_mdsa_flags_outliers():
+    x = jax.random.normal(KEY, (512, 16))
+    st = S.fit_mdsa(x)
+    nominal = S.mdsa_confidence(st, x[:100])
+    outlier = S.mdsa_confidence(st, x[:100] + 8.0)
+    assert float(jnp.mean(nominal)) > float(jnp.mean(outlier))
+
+
+def test_mdsa_is_scale_aware():
+    """Mahalanobis (not Euclidean): deviation along a high-variance axis is
+    less surprising than the same deviation along a low-variance axis."""
+    k1, _ = jax.random.split(KEY)
+    x = jax.random.normal(k1, (4096, 2)) * jnp.array([10.0, 0.1])
+    st = S.fit_mdsa(x)
+    hi_var = S.mdsa_confidence(st, jnp.array([[5.0, 0.0]]))
+    lo_var = S.mdsa_confidence(st, jnp.array([[0.0, 5.0]]))
+    assert float(hi_var[0]) > float(lo_var[0])
+
+
+# ------------------------------------------------------------ autoencoder
+
+def test_autoencoder_reconstruction_separates():
+    k1, k2 = jax.random.split(KEY)
+    # nominal data lives on a 2-D manifold in 16-D
+    basis = jax.random.normal(k1, (2, 16))
+    nominal = jax.random.normal(k2, (256, 2)) @ basis
+    params = S.fit_autoencoder(KEY, nominal, latent=4, steps=300)
+    on_manifold = S.autoencoder_confidence(params, nominal[:64])
+    off_manifold = S.autoencoder_confidence(
+        params, jax.random.normal(jax.random.PRNGKey(9), (64, 16)) * 3)
+    assert float(jnp.mean(on_manifold)) > float(jnp.mean(off_manifold))
+
+
+# --------------------------------------------------------------- sequence
+
+def test_seq_min_likelihood_is_paper_reducer():
+    lk = jnp.array([[0.9, 0.5, 0.8], [0.99, 0.98, 0.97]])
+    out = S.seq_min_likelihood(lk)
+    np.testing.assert_allclose(np.asarray(out), [0.5, 0.97], rtol=1e-6)
+
+
+def test_seq_min_respects_mask():
+    lk = jnp.array([[0.9, 0.1, 0.8]])
+    mask = jnp.array([[1, 0, 1]])
+    np.testing.assert_allclose(float(S.seq_min_likelihood(lk, mask)[0]), 0.8,
+                               rtol=1e-6)
+
+
+def test_seq_prod_is_length_biased_min_is_not():
+    """The paper's §5.3.4 argument: product shrinks with length even for
+    confident tokens; min does not."""
+    short = jnp.full((1, 2), 0.9)
+    long = jnp.full((1, 50), 0.9)
+    assert float(S.seq_prod_likelihood(long)[0]) \
+        < float(S.seq_prod_likelihood(short)[0])
+    np.testing.assert_allclose(float(S.seq_min_likelihood(long)[0]),
+                               float(S.seq_min_likelihood(short)[0]),
+                               rtol=1e-6)
+
+
+def test_equivalent_token_confidence_sums_groups():
+    # vocab of 4; group 0 = {0, 1} ("negative","Negative"), group 1 = {2}
+    logits = jnp.log(jnp.array([[0.4, 0.35, 0.2, 0.05]]))
+    groups = jnp.array([[1, 1, 0, 0], [0, 0, 1, 0]])
+    conf = S.equivalent_token_confidence(logits, groups)
+    np.testing.assert_allclose(float(conf[0]), 0.75, rtol=1e-5)

@@ -1,0 +1,169 @@
+"""End-to-end system tests: the paper's full pipeline on the calibrated
+synthetic case studies — RQ1 cost-saving claims, RQ2 supervised claims —
+plus a real two-model cascade (trained surrogate + larger remote) wired
+through the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.metrics import (auc_rac, request_accuracy_curve,
+                                supervised_metrics, threshold_for_fpr)
+from repro.data.synthetic import CASE_STUDIES, sample_case_study
+from repro.serving.engine import CascadeEngine
+
+N = 20_000
+
+
+@pytest.fixture(scope="module", params=sorted(CASE_STUDIES))
+def case(request):
+    cs = CASE_STUDIES[request.param]
+    return cs, sample_case_study(cs, N)
+
+
+def test_case_study_calibration(case):
+    """Synthetic analogues hit the paper's Table 1 accuracies (±2%)."""
+    cs, s = case
+    valid = ~s.invalid
+    np.testing.assert_allclose(s.local_correct[valid].mean(), cs.local_acc,
+                               atol=0.02)
+    np.testing.assert_allclose(s.remote_correct[valid].mean(), cs.remote_acc,
+                               atol=0.02)
+
+
+def test_rq1_auc_rac_beats_random(case):
+    """Paper RQ1: AUC-RAC substantially above the random baseline 0.5 in
+    all case studies."""
+    cs, s = case
+    valid = ~s.invalid                      # RQ1 uses answerable inputs
+    rac = request_accuracy_curve(s.local_conf[valid],
+                                 s.local_correct[valid],
+                                 s.remote_correct[valid])
+    assert auc_rac(rac) > 0.6, cs.name
+
+
+def test_rq1_half_cost_keeps_accuracy(case):
+    """Paper abstract: at 50% remote-cost reduction the system accuracy is
+    at most marginally below remote-only."""
+    cs, s = case
+    valid = ~s.invalid
+    rac = request_accuracy_curve(s.local_conf[valid],
+                                 s.local_correct[valid],
+                                 s.remote_correct[valid])
+    i50 = len(rac.accuracy) // 2
+    assert rac.accuracy[i50] >= rac.remote_only - 0.03, cs.name
+
+
+def test_rq1_superaccuracy_where_complementary():
+    """IMDB and SQuADv2 (complementary tiers) peak above remote-only."""
+    for name in ("imdb", "squadv2"):
+        cs = CASE_STUDIES[name]
+        s = sample_case_study(cs, N)
+        valid = ~s.invalid
+        rac = request_accuracy_curve(s.local_conf[valid],
+                                     s.local_correct[valid],
+                                     s.remote_correct[valid])
+        knees = rac.knee_points()
+        assert knees["best_accuracy"] > rac.remote_only, name
+        assert knees["remote_even"] < 0.9, name    # real cost saving
+
+
+def test_rq2_bisupervised_beats_supervised_local(case):
+    """Paper RQ2: with 2nd-level threshold tuned to a target FPR, the
+    cascade's S_beta matches/exceeds a standalone supervised local model in
+    the (large) majority of configurations."""
+    cs, s = case
+    wins, total = 0, 0
+    for fpr in (0.01, 0.05, 0.1):
+        # baseline: standalone supervised local model
+        t_base = threshold_for_fpr(s.local_conf, s.local_correct > 0, fpr)
+        base = supervised_metrics(s.local_conf > t_base, s.local_correct > 0)
+        # cascade at 50% remote budget
+        t1 = np.quantile(s.local_conf, 0.5)
+        use_local = s.local_conf > t1
+        sys_correct = np.where(use_local, s.local_correct, s.remote_correct)
+        sys_conf = np.where(use_local, np.inf, s.remote_conf)
+        t2 = threshold_for_fpr(s.remote_conf[~use_local],
+                               s.remote_correct[~use_local] > 0, fpr)
+        accepted = use_local | (sys_conf > t2)
+        ours = supervised_metrics(accepted, sys_correct > 0)
+        for b in ("s_0.5", "s_1.0", "s_2.0"):
+            total += 1
+            if ours[b] >= base[b] - 1e-9:
+                wins += 1
+    # Paper §5.4.3: every case study wins the majority of configurations
+    # EXCEPT SQuADv2-with-invalid-inputs, which is "not conclusively in
+    # favor" (5 of 18 settings inferior) but shows a positive tendency.
+    floor = 1 / 3 if cs.name == "squadv2_all" else 0.5
+    assert wins / total >= floor, (cs.name, wins, total)
+
+
+def test_rq2_invalid_inputs_get_rejected():
+    """SQuADv2-all: the 2nd-level supervisor rejects unanswerable inputs at
+    a much higher rate than answerable ones."""
+    s = sample_case_study(CASE_STUDIES["squadv2_all"], N)
+    t1 = np.quantile(s.local_conf, 0.4)
+    use_local = s.local_conf > t1
+    t2 = np.quantile(s.remote_conf[~use_local], 0.2)
+    accepted = use_local | (s.remote_conf > t2)
+    rej_invalid = (~accepted)[s.invalid].mean()
+    rej_valid = (~accepted)[~s.invalid].mean()
+    assert rej_invalid > 2 * rej_valid
+
+
+def test_end_to_end_real_models_cascade():
+    """A real (tiny) local JAX model + a 'remote' oracle through the
+    engine: escalation budget respected, system accuracy between tiers."""
+    from repro.data.synthetic import make_classification_task
+    from repro.models import surrogate as S
+    from repro.train.optimizer import AdamWConfig, adamw_update, \
+        init_opt_state
+
+    vocab, seq, ncls = 128, 32, 4
+    toks, labels, difficulty = make_classification_task(
+        0, n=512, vocab=vocab, seq_len=seq, num_classes=ncls)
+    cfg = S.SurrogateConfig("t", vocab_size=vocab, max_len=seq, d_model=32,
+                            num_heads=2, d_ff=32, num_classes=ncls,
+                            dropout=0.0)
+    params = S.init_params(cfg, jax.random.PRNGKey(0))
+
+    @jax.jit
+    def step(p, o, tk, lb):
+        (l, m), g = jax.value_and_grad(
+            lambda p: S.loss_fn(cfg, p, tk, lb, jax.random.PRNGKey(1)),
+            has_aux=True)(p)
+        p, o, _ = adamw_update(AdamWConfig(lr=3e-3, warmup_steps=5,
+                                           weight_decay=0.0), p, g, o)
+        return p, o, l
+
+    opt = init_opt_state(params)
+    tk, lb = jnp.asarray(toks), jnp.asarray(labels)
+    for _ in range(30):
+        params, opt, loss = step(params, opt, tk, lb)
+
+    def local_apply(x):
+        return S.apply(cfg, params, x)
+
+    oracle = jax.nn.one_hot(lb, ncls) * 10.0
+
+    def remote_apply(idx):        # remote view = row index -> oracle logits
+        return oracle[idx[:, 0]]
+
+    eng = CascadeEngine(local_apply, remote_apply, batch_size=128,
+                        remote_fraction_budget=0.3, t_remote=0.5)
+    idx = jnp.arange(512)[:, None]
+    correct_local, correct_sys = [], []
+    for i in range(0, 512, 128):
+        out = eng.serve({"local": tk[i:i + 128], "remote": idx[i:i + 128]})
+        correct_local.append(np.asarray(out["local_pred"])
+                             == labels[i:i + 128])
+        correct_sys.append(np.asarray(out["prediction"])
+                           == labels[i:i + 128])
+    acc_local = np.concatenate(correct_local).mean()
+    acc_sys = np.concatenate(correct_sys).mean()
+    assert eng.stats.remote_fraction == pytest.approx(0.3, abs=0.01)
+    assert acc_sys >= acc_local     # remote help never hurts here
+    assert acc_sys > 0.5
