@@ -8,6 +8,8 @@
   latency     paper Table 7   (Eq. 2 break-even analysis)
   inventory   paper Table 1   (case studies + assigned-arch pool)
   kernels     kernel microbench (ours)
+  runtime     adaptive cascade runtime (budget tracking under drift,
+              circuit breaker, remote-response cache — DESIGN.md)
   roofline    dry-run roofline summary (reads results/dryrun_matrix.jsonl
               if present)
 """
@@ -20,11 +22,11 @@ import os
 import sys
 import time
 
-from benchmarks import (inventory, kernels_bench, latency, rac, supervised,
-                        supervisor_comparison)
+from benchmarks import (inventory, kernels_bench, latency, rac,
+                        runtime_bench, supervised, supervisor_comparison)
 
 ALL = ("inventory", "rac", "supervised", "supervisors", "latency",
-       "kernels", "roofline")
+       "kernels", "runtime", "roofline")
 
 
 def roofline_summary(verbose: bool = True) -> list[dict]:
@@ -74,6 +76,8 @@ def main(argv=None) -> int:
             results[name] = latency.run()
         elif name == "kernels":
             results[name] = kernels_bench.run()
+        elif name == "runtime":
+            results[name] = runtime_bench.run()
         elif name == "roofline":
             results[name] = roofline_summary()
         else:

@@ -1,0 +1,252 @@
+"""Runtime control-plane benchmark (DESIGN.md; ISSUE 1 acceptance).
+
+Three episodes over a synthetic drifting workload:
+
+  budget    — the adaptive controller must hold a 20% remote-fraction
+              budget within +-3 points across a confidence-distribution
+              drift (hard-input rate 10% -> 45% -> 25%), where a static
+              threshold calibrated on the first phase drifts far off
+              budget;
+  faults    — a remote outage: every call times out for a stretch; the
+              circuit breaker must open, convert escalations into
+              fallback responses WITHOUT dropping a single request, then
+              recover through the half-open probe when the outage ends;
+  cache     — duplicate-heavy traffic: the content-keyed cache must keep
+              billed remote calls well under the escalation count.
+
+    PYTHONPATH=src python -m benchmarks.run --only runtime
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteResponseCache, RemoteTimeout,
+                           RemoteTransport, TransportConfig)
+from repro.serving.engine import CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+BATCH = 32
+NCLS = 8
+TARGET = 0.20
+WINDOW = 256
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)     # noisy view of the features
+
+
+def perfect_remote(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_phase(rng, n, hard_frac):
+    """Feature batches whose argmax is the label; hard rows have small
+    margins -> low 1st-level confidence. hard_frac is the drift knob."""
+    labels = rng.integers(0, NCLS, n)
+    x = rng.normal(0, 0.05, (n, NCLS))
+    margin = np.where(rng.random(n) < hard_frac,
+                      rng.uniform(0.05, 0.4, n), rng.uniform(2.0, 4.0, n))
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def _drive(engine, xs):
+    """Serve xs through the engine in BATCH-sized chunks; return the
+    per-window realised escalation fraction."""
+    fractions = []
+    esc0 = req0 = 0
+    for lo in range(0, len(xs), BATCH):
+        batch = xs[lo:lo + BATCH]
+        if len(batch) < BATCH:
+            break
+        engine.serve({"local": batch, "remote": batch})
+        if engine.stats.requests - req0 >= WINDOW:
+            fractions.append((engine.stats.escalations - esc0)
+                             / (engine.stats.requests - req0))
+            esc0, req0 = engine.stats.escalations, engine.stats.requests
+    return fractions
+
+
+def budget_episode(verbose=True) -> dict:
+    rng = np.random.default_rng(0)
+    phases = [("easy", 0.10, 4096), ("hard", 0.45, 4096),
+              ("mixed", 0.25, 4096)]
+
+    def fresh(controller):
+        return CascadeEngine(
+            local_apply, batch_size=BATCH, remote_fraction_budget=TARGET,
+            t_remote=0.0, transport=RemoteTransport(perfect_remote),
+            controller=controller)
+
+    # static baseline: threshold frozen at the first phase's 20% quantile
+    cal, _ = make_phase(rng, 2048, phases[0][1])
+    conf = np.asarray(jnp.max(jnp.exp(jnp.asarray(local_apply(cal)))
+                              / jnp.sum(jnp.exp(jnp.asarray(
+                                  local_apply(cal))), -1, keepdims=True), -1))
+    static = fresh(None)
+    static.set_local_threshold(float(np.quantile(conf, TARGET)))
+    # capacity must not clip the static baseline's drift (we want to SHOW it)
+    static.capacity = BATCH
+
+    adaptive = fresh(AdaptiveController(ControllerConfig(
+        target_remote_fraction=TARGET, window=WINDOW)))
+
+    def rolling(fracs, w=4):
+        """Mean over w consecutive control windows (~1k requests) — the
+        granularity at which "holding the budget" is meaningful; a single
+        256-request window has +-2.5 pts of pure binomial noise."""
+        if len(fracs) < w:
+            return [float(np.mean(fracs))]
+        return [float(np.mean(fracs[i:i + w]))
+                for i in range(len(fracs) - w + 1)]
+
+    report = {"target": TARGET, "phases": {}}
+    for name, hard_frac, n in phases:
+        xs, _ = make_phase(rng, n, hard_frac)
+        fr_a = _drive(adaptive, xs)
+        fr_s = _drive(static, xs)
+        settle = 4                      # windows of transient per phase
+        steady_a = fr_a[settle:] or fr_a
+        steady_s = fr_s[settle:] or fr_s
+        report["phases"][name] = {
+            "hard_frac": hard_frac,
+            "adaptive_fraction": float(np.mean(steady_a)),
+            "adaptive_dev": float(abs(np.mean(steady_a) - TARGET)),
+            "adaptive_rolling_max_dev": float(
+                max(abs(f - TARGET) for f in rolling(steady_a))),
+            "static_fraction": float(np.mean(steady_s)),
+            "static_dev": float(abs(np.mean(steady_s) - TARGET)),
+        }
+    report["drift_events"] = adaptive.controller.state.drift_events
+    report["within_3pts"] = all(p["adaptive_dev"] <= 0.03
+                                for p in report["phases"].values())
+    if verbose:
+        print(f"\n--- Runtime: budget tracking (target {TARGET:.0%}, "
+              f"+-3 pts steady-state per phase) ---")
+        print(f"{'phase':>8} {'hard%':>6} {'adaptive':>9} {'a-dev':>6} "
+              f"{'a-roll':>7} {'static':>7} {'s-dev':>6}")
+        for name, p in report["phases"].items():
+            print(f"{name:>8} {p['hard_frac']:6.0%} "
+                  f"{p['adaptive_fraction']:9.3f} {p['adaptive_dev']:6.3f} "
+                  f"{p['adaptive_rolling_max_dev']:7.3f} "
+                  f"{p['static_fraction']:7.3f} {p['static_dev']:6.3f}")
+        print(f"controller drift events: {report['drift_events']}; "
+              f"within +-3 pts: {report['within_3pts']}")
+    return report
+
+
+def fault_episode(verbose=True) -> dict:
+    rng = np.random.default_rng(1)
+    clock = {"t": 0.0}
+    outage = {"on": False}
+
+    def remote(x):
+        clock["t"] += 0.01
+        if outage["on"]:
+            raise RemoteTimeout("simulated outage")
+        return perfect_remote(x)
+
+    transport = RemoteTransport(
+        remote,
+        TransportConfig(max_in_flight=8, timeout_s=1.0, max_retries=1,
+                        retry_backoff_s=0.0, breaker_failures=2,
+                        breaker_reset_s=0.5),
+        clock=lambda: clock["t"], sleep=lambda s: None)
+    engine = CascadeEngine(local_apply, batch_size=BATCH,
+                           remote_fraction_budget=TARGET, t_remote=0.0,
+                           transport=transport)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -1)
+
+    submitted = 0
+
+    def run(n):
+        nonlocal submitted
+        xs, _ = make_phase(rng, n, 0.3)
+        for row in xs:
+            sched.submit(Request(uid=submitted, local_input=row,
+                                 remote_input=row))
+            submitted += 1
+        return sched.flush()
+
+    before = run(512)
+    outage["on"] = True
+    during = run(512)
+    outage["on"] = False
+    clock["t"] += 1.0                   # let the breaker half-open
+    after = run(512)
+
+    n_resp = len(before) + len(during) + len(after)
+    fb = {"before": sum(r.source == "fallback" for r in before),
+          "during": sum(r.source == "fallback" for r in during),
+          "after": sum(r.source == "fallback" for r in after)}
+    esc_during = sum(r.source in ("remote", "fallback") for r in during)
+    report = {
+        "submitted": submitted, "answered": n_resp,
+        "dropped": submitted - n_resp,
+        "fallbacks": fb,
+        "escalations_during_outage": esc_during,
+        "outage_converted_to_fallback": fb["during"] == esc_during
+                                         and esc_during > 0,
+        "breaker_opens": transport.stats.breaker_opens,
+        "breaker_state_after": transport.breaker.state,
+        "timeouts": transport.stats.timeouts,
+        "short_circuited": transport.stats.short_circuited,
+        "recovered": fb["after"] == 0,
+    }
+    if verbose:
+        print("\n--- Runtime: outage / circuit breaker ---")
+        print(f"answered {n_resp}/{submitted} (dropped "
+              f"{report['dropped']}); fallbacks {fb}")
+        print(f"breaker opened {report['breaker_opens']}x "
+              f"({report['timeouts']} timeouts, "
+              f"{report['short_circuited']} short-circuited), "
+              f"state after recovery: {report['breaker_state_after']}")
+        print(f"outage -> fallback w/o drops: "
+              f"{report['outage_converted_to_fallback']}; "
+              f"recovered: {report['recovered']}")
+    return report
+
+
+def cache_episode(verbose=True) -> dict:
+    rng = np.random.default_rng(2)
+    base, _ = make_phase(rng, 64, 1.0)   # all hard -> all escalate
+    # zipf-ish duplicate-heavy stream over 64 distinct hard requests
+    stream = base[rng.integers(0, 8, 4096 - 512)]
+    stream = np.concatenate([base[rng.integers(0, 64, 512)], stream])
+
+    cache = RemoteResponseCache(1024)
+    engine = CascadeEngine(local_apply, batch_size=BATCH,
+                           remote_fraction_budget=0.5, t_remote=0.0,
+                           transport=RemoteTransport(perfect_remote),
+                           cache=cache)
+    for lo in range(0, len(stream), BATCH):
+        chunk = stream[lo:lo + BATCH]
+        engine.serve({"local": chunk, "remote": chunk})
+    st = engine.stats
+    naive_cost = st.escalations * engine.cost.remote_cost_per_request
+    report = {
+        "escalations": st.escalations, "billed_remote_calls": st.remote_calls,
+        "cache_hits": st.cache_hits, "hit_rate": cache.stats.hit_rate,
+        "billed_cost": st.total_cost, "uncached_cost": naive_cost,
+        "savings_fraction": 1.0 - st.total_cost / max(naive_cost, 1e-12),
+    }
+    if verbose:
+        print("\n--- Runtime: remote-response cache ---")
+        print(f"escalations {st.escalations}, billed {st.remote_calls}, "
+              f"hits {st.cache_hits} (hit rate {cache.stats.hit_rate:.2f})")
+        print(f"billed ${st.total_cost:.4f} vs uncached ${naive_cost:.4f} "
+              f"({report['savings_fraction']:.0%} saved)")
+    return report
+
+
+def run(verbose: bool = True) -> dict:
+    return {"budget": budget_episode(verbose),
+            "faults": fault_episode(verbose),
+            "cache": cache_episode(verbose)}
+
+
+if __name__ == "__main__":
+    run()

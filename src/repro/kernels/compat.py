@@ -1,0 +1,13 @@
+"""Pallas version compatibility shims.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+kernels import the name from here so they build on both sides of the
+rename (this container ships the older spelling).
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))

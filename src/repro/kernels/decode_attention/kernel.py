@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -94,7 +96,7 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
                         pltpu.VMEM((g,), jnp.float32),
                         pltpu.VMEM((g,), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(lens, qr, kr, vr)
     return out.reshape(b, kh, g, hd).reshape(b, h, hd)

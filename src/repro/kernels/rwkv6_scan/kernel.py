@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
             state, *, tb: int, nt: int):
@@ -90,7 +92,7 @@ def rwkv6_scan(r, k, v, w, u, s0, *, tb: int = 128,
         ),
         scratch_shapes=[pltpu.VMEM((m, m), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(rr, kk, vv, ww, uu, ss)
     y = y.reshape(b, h, t, m).transpose(0, 2, 1, 3)

@@ -2,15 +2,23 @@
 
 Local tier: a trained surrogate classifier (replicated, cheap).
 Remote tier: a sharded in-framework model of any assigned architecture
-(``--remote-arch``). The 1st-level supervisor escalates the capacity-k
-lowest-confidence requests; the 2nd-level supervisor filters untrusted
-remote predictions (fallback). Prints the paper's cost/latency accounting.
+(``--remote-arch``), reached through the fault-aware ``repro.runtime``
+transport (windows / retries / circuit breaker) with a content-keyed
+response cache. The 1st-level supervisor escalates the lowest-confidence
+requests; the 2nd-level supervisor filters untrusted remote predictions
+(fallback). Prints the paper's cost/latency accounting plus transport,
+cache and controller telemetry.
+
+Runtime control plane (DESIGN.md):
+  --adaptive     enable the online budget controller (EMA/PID + drift)
+  --calibrate    offline Pareto sweep picking (t_local, t_remote, k)
+  --fused        bypass the transport: seed-style fully-jitted cascade
 
 On this CPU container use ``--smoke`` (reduced remote config).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --remote-arch yi-6b \
-        --smoke --requests 256 --remote-budget 0.3
+        --smoke --requests 256 --remote-budget 0.3 --adaptive --calibrate
 """
 
 from __future__ import annotations
@@ -25,8 +33,12 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.thresholds import nominal_quantile_threshold
 from repro.data.synthetic import make_classification_task
+from repro.launch.mesh import axis_type_kwargs
 from repro.models import surrogate as S
 from repro.models import transformer as T
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteResponseCache, RemoteTransport,
+                           TransportConfig, calibrate, content_key)
 from repro.serving.engine import CascadeEngine, CostModel
 from repro.serving.scheduler import MicrobatchScheduler, Request
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -60,7 +72,30 @@ def main(argv=None) -> int:
                     help="capacity fraction escalated to the remote tier")
     ap.add_argument("--fpr", type=float, default=0.05,
                     help="2nd-level supervisor nominal false-alarm rate")
+    # ---- runtime control plane knobs (DESIGN.md) ----
+    ap.add_argument("--fused", action="store_true",
+                    help="seed-style fully-jitted cascade (no transport)")
+    ap.add_argument("--adaptive", action="store_true",
+                    help="online EMA/PID budget controller")
+    ap.add_argument("--control-window", type=int, default=128,
+                    help="requests per controller update")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="offline Pareto sweep for (t_local, t_remote, k)")
+    ap.add_argument("--cache-size", type=int, default=4096,
+                    help="remote response cache entries (0 disables)")
+    ap.add_argument("--max-in-flight", type=int, default=8,
+                    help="remote transport window size")
+    ap.add_argument("--remote-timeout", type=float, default=2.0,
+                    help="per-window remote deadline (s)")
+    ap.add_argument("--remote-retries", type=int, default=2,
+                    help="retries per remote window")
+    ap.add_argument("--breaker-failures", type=int, default=3,
+                    help="consecutive window failures that open the breaker")
+    ap.add_argument("--breaker-reset", type=float, default=5.0,
+                    help="seconds before the open breaker half-opens")
     args = ap.parse_args(argv)
+    if args.fused and args.adaptive:
+        ap.error("--adaptive needs the transport serve path; drop --fused")
 
     # ---- task + local surrogate (paper §4.1: input-domain-reduced) ----
     vocab, seq, ncls = 512, 48, 8
@@ -81,9 +116,8 @@ def main(argv=None) -> int:
     if args.smoke:
         rcfg = rcfg.reduced()
     ndev = len(jax.devices())
-    mesh = jax.make_mesh(
-        (1, ndev), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh((1, ndev), ("data", "model"),
+                         **axis_type_kwargs(2))
     rparams = T.init_params(rcfg, jax.random.PRNGKey(7))
     print(f"[serve] remote tier {rcfg.name} on {ndev} device(s)")
 
@@ -112,9 +146,52 @@ def main(argv=None) -> int:
         np.exp(cal_logits) / np.exp(cal_logits).sum(-1, keepdims=True), -1)
     t_remote = nominal_quantile_threshold(cal_conf, args.fpr)
 
-    eng = CascadeEngine(local_apply, remote_apply, batch_size=args.batch,
+    t_local = None
+    if args.calibrate:
+        # offline Pareto sweep on a labelled validation slice (DESIGN.md §1)
+        nval = cal_logits.shape[0]
+        val_logits = np.asarray(local_apply(jnp.asarray(local_toks[:nval])))
+        val_sm = np.exp(val_logits) / np.exp(val_logits).sum(-1, keepdims=1)
+        point, k, front = calibrate(
+            local_conf=val_sm.max(-1),
+            local_correct=val_logits.argmax(-1) == labels[:nval],
+            remote_conf=cal_conf,
+            remote_correct=cal_logits.argmax(-1) == labels[:nval],
+            budget=args.remote_budget, batch_size=args.batch,
+            max_rejection_rate=args.fpr)
+        t_local, t_remote = point.t_local, point.t_remote
+        print(f"[serve] calibrated operating point: t_local={t_local:.4f} "
+              f"t_remote={t_remote:.4f} k={k} "
+              f"(val remote fraction {point.remote_fraction:.2f}, "
+              f"accepted acc {point.accuracy:.3f}; "
+              f"frontier has {len(front)} points)")
+
+    transport = controller = cache = None
+    if not args.fused:
+        transport = RemoteTransport(remote_apply, TransportConfig(
+            max_in_flight=args.max_in_flight, timeout_s=args.remote_timeout,
+            max_retries=args.remote_retries,
+            breaker_failures=args.breaker_failures,
+            breaker_reset_s=args.breaker_reset))
+        if args.cache_size > 0:
+            # key on token content only: the per-request "idx" (oracle-head
+            # plumbing) would make every key unique and the cache cold
+            cache = RemoteResponseCache(
+                args.cache_size, key_fn=lambda row: content_key(row["tokens"]))
+    if args.adaptive:
+        controller = AdaptiveController(ControllerConfig(
+            target_remote_fraction=args.remote_budget,
+            window=args.control_window, target_rejection_rate=args.fpr))
+
+    eng = CascadeEngine(local_apply,
+                        remote_apply if transport is None else None,
+                        batch_size=args.batch,
                         remote_fraction_budget=args.remote_budget,
-                        t_remote=t_remote, cost=CostModel())
+                        t_remote=t_remote, cost=CostModel(),
+                        transport=transport, controller=controller,
+                        cache=cache)
+    if t_local is not None:
+        eng.set_local_threshold(t_local)
     sched = MicrobatchScheduler(eng, fallback=lambda r: -1)
 
     t0 = time.perf_counter()
@@ -142,6 +219,21 @@ def main(argv=None) -> int:
           f"would be ${st.requests * eng.cost.remote_cost_per_request:.4f})")
     print(f"[serve] modelled mean latency: {st.mean_latency_s * 1e3:.0f} ms "
           f"(remote-only {eng.cost.remote_latency_s * 1e3:.0f} ms)")
+    if transport is not None:
+        ts = transport.stats
+        print(f"[serve] transport: {ts.windows} windows, "
+              f"{ts.failed_requests} failed reqs, {ts.retries} retries, "
+              f"{ts.timeouts} timeouts, breaker opens {ts.breaker_opens}")
+    if cache is not None:
+        print(f"[serve] cache: {cache.stats.hits} hits / "
+              f"{cache.stats.misses} misses "
+              f"(hit rate {cache.stats.hit_rate:.2f})")
+    if controller is not None:
+        cs = controller.state
+        print(f"[serve] controller: {cs.windows} windows, "
+              f"ema remote fraction {cs.ema_fraction:.3f}, "
+              f"t_local={cs.t_local}, t_remote={cs.t_remote}, "
+              f"{cs.drift_events} drift events")
     return 0
 
 

@@ -25,6 +25,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.data.synthetic import make_classification_task
 from repro.launch import sharding as sh
+from repro.launch.mesh import axis_type_kwargs
 from repro.models import transformer as T
 from repro.models.frontend import frontend_embeddings
 from repro.train.checkpoint import save_checkpoint
@@ -78,9 +79,8 @@ def main(argv=None) -> int:
         shape = tuple(int(x) for x in args.mesh.split(","))
     else:
         shape = (ndev, 1)
-    mesh = jax.make_mesh(
-        shape, ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = jax.make_mesh(shape, ("data", "model"),
+                         **axis_type_kwargs(2))
     print(f"[train] {cfg.name}: mesh {dict(zip(mesh.axis_names, shape))} "
           f"on {ndev} device(s)")
 

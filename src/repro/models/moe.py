@@ -31,12 +31,13 @@ from repro.models.layers import Params, dense_params, swiglu, swiglu_params
 
 
 from repro.models.shard_hints import constrain as _constrain
+from repro.models.shard_hints import get_abstract_mesh
 
 
 def _dispatch_groups(n: int) -> int:
     """Number of dispatch groups = ambient `data` axis size (1 if absent
     or indivisible)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or "data" not in mesh.axis_names:
         return 1
     g = mesh.shape["data"]
@@ -90,15 +91,26 @@ def _group_combine(ye, flat_idx, weight, m: int, k: int):
 
 
 def moe_forward(cfg: ModelConfig, p: Params, x: jnp.ndarray,
-                capacity_factor: float | None = None):
-    """x: [B, T, D] -> (y [B, T, D], aux_loss scalar)."""
+                capacity_factor: float | None = None,
+                dropless: bool = False):
+    """x: [B, T, D] -> (y [B, T, D], aux_loss scalar).
+
+    ``dropless=True`` sizes the per-expert capacity so no token can be
+    dropped (each token occupies at most one slot per expert, so cap = m
+    suffices). Serving paths use it: capacity dropping is a training
+    throughput tradeoff, and it breaks prefill/decode equivalence — the
+    same token drops in a crowded prefill but not in a 1-token decode."""
     b, t, d = x.shape
     e, k = cfg.num_experts, cfg.num_experts_per_tok
     n = b * t
     g = _dispatch_groups(n)
     m = n // g                                              # tokens/group
-    cf = cfg.capacity_factor if capacity_factor is None else capacity_factor
-    cap = max(int(m * k * cf / e), 1)
+    if dropless:
+        cap = m
+    else:
+        cf = (cfg.capacity_factor if capacity_factor is None
+              else capacity_factor)
+        cap = max(int(m * k * cf / e), 1)
     # round capacity to a lane-friendly multiple of 8
     cap = (cap + 7) // 8 * 8
 

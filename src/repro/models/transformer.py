@@ -393,7 +393,7 @@ def prefill(cfg: ModelConfig, params: Params, batch: Batch):
             x = x + a
             h = rms_norm(x, lp["norm2"], cfg.norm_eps)
             if "moe" in lp:
-                y, _ = moe_mod.moe_forward(cfg, lp["moe"], h)
+                y, _ = moe_mod.moe_forward(cfg, lp["moe"], h, dropless=True)
             else:
                 y = swiglu(lp["mlp"], h)
             return x + y, kv
@@ -454,7 +454,7 @@ def decode_step(cfg: ModelConfig, params: Params, token, cache, pos):
             x = x + a
             h = rms_norm(x, lp["norm2"], cfg.norm_eps)
             if "moe" in lp:
-                y, _ = moe_mod.moe_forward(cfg, lp["moe"], h)
+                y, _ = moe_mod.moe_forward(cfg, lp["moe"], h, dropless=True)
             else:
                 y = swiglu(lp["mlp"], h)
             return x + y, new_kv

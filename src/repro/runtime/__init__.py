@@ -1,0 +1,30 @@
+"""Adaptive cascade runtime — the control plane around the serving engine.
+
+Composes with ``repro.serving.engine.CascadeEngine`` (see DESIGN.md):
+  * calibration — offline (t_local, t_remote, k) selection on a Pareto sweep
+  * controller  — online EMA/PID budget tracking + drift detection
+  * transport   — fault-aware remote tier (windows, retries, breaker)
+  * cache       — content-keyed dedup of billed remote calls
+"""
+
+from repro.runtime.cache import CacheStats, RemoteResponseCache, content_key
+from repro.runtime.calibration import (OperatingPoint, calibrate,
+                                       pareto_frontier,
+                                       select_operating_point,
+                                       sweep_operating_points)
+from repro.runtime.controller import (AdaptiveController, ControllerConfig,
+                                      ControllerState,
+                                      population_stability_index)
+from repro.runtime.transport import (CircuitBreaker, CircuitOpenError,
+                                     RemoteCallError, RemoteTimeout,
+                                     RemoteTransport, TransportConfig,
+                                     TransportStats)
+
+__all__ = [
+    "AdaptiveController", "CacheStats", "CircuitBreaker", "CircuitOpenError",
+    "ControllerConfig", "ControllerState", "OperatingPoint",
+    "RemoteCallError", "RemoteResponseCache", "RemoteTimeout",
+    "RemoteTransport", "TransportConfig", "TransportStats", "calibrate",
+    "content_key", "pareto_frontier", "population_stability_index",
+    "select_operating_point", "sweep_operating_points",
+]

@@ -1,0 +1,97 @@
+"""Content-keyed remote-response cache (runtime control plane, DESIGN.md §4).
+
+Escalating the same input twice must not be billed twice: remote tiers are
+metered per request (CheapET-3 frames the remote model as a billed service),
+so the runtime keys every escalated request by the *content* of its
+remote-tier input and serves duplicates from an LRU cache. Hit/miss counts
+are folded into the engine's `CascadeStats` so the cost model only bills
+genuine remote invocations.
+
+Keys are content hashes over the request pytree (arrays hashed with their
+dtype/shape so `[1, 2]` int32 and `[1, 2]` float32 never collide).
+"""
+
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+
+def content_key(row: Any) -> bytes:
+    """Stable content hash of one request's (pytree) remote input."""
+    h = hashlib.blake2b(digest_size=16)
+    _update(h, row)
+    return h.digest()
+
+
+def _update(h, node: Any) -> None:
+    if isinstance(node, dict):
+        for k in sorted(node):
+            h.update(repr(k).encode())
+            _update(h, node[k])
+    elif isinstance(node, (list, tuple)):
+        h.update(b"[")
+        for item in node:
+            _update(h, item)
+        h.update(b"]")
+    else:
+        a = np.asarray(node)
+        h.update(str(a.dtype).encode())
+        h.update(repr(a.shape).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(self.hits + self.misses, 1)
+
+
+class RemoteResponseCache:
+    """Bounded LRU of remote responses keyed by request content.
+
+    ``key_fn`` maps one request's remote-input pytree to the hashable
+    content that identifies it (default: the whole pytree). Override it
+    when the pytree carries non-semantic fields — e.g. a per-request uid
+    — that would make every key unique and the cache structurally cold.
+    """
+
+    def __init__(self, capacity: int = 4096, key_fn=content_key):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self.key_fn = key_fn
+        self.stats = CacheStats()
+        self._store: OrderedDict[bytes, np.ndarray] = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+    def get(self, key: bytes) -> np.ndarray | None:
+        hit = self._store.get(key)
+        if hit is None:
+            self.stats.misses += 1
+            return None
+        self._store.move_to_end(key)
+        self.stats.hits += 1
+        return hit
+
+    def put(self, key: bytes, value: np.ndarray) -> None:
+        if key in self._store:
+            self._store.move_to_end(key)
+        self._store[key] = np.asarray(value)
+        if len(self._store) > self.capacity:
+            self._store.popitem(last=False)
+            self.stats.evictions += 1
+
+    def clear(self) -> None:
+        self._store.clear()

@@ -1,0 +1,147 @@
+"""Offline cascade calibration: cost-vs-accuracy Pareto sweeps
+(runtime control plane, DESIGN.md §1).
+
+Given a labelled validation set scored by both tiers — 1st-level
+supervisor confidences + correctness for the local model, 2nd-level
+confidences + correctness for the remote model — sweep the
+``(t_local, t_remote)`` grid with exact Algorithm-1 semantics
+(``core.cascade.bisupervised_batch``, paper RQ1/RQ2 style), build the
+Pareto frontier over (remote fraction, accepted accuracy, rejection rate),
+and select the operating point for a target remote-call budget. The
+selected point is returned with the serving-mode capacity
+``k = ceil(rho * B)`` so it can be handed straight to the engine, and is
+also the recommended warm start for the online ``AdaptiveController``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.cascade import escalation_capacity
+
+
+@dataclass(frozen=True)
+class OperatingPoint:
+    t_local: float
+    t_remote: float
+    remote_fraction: float    # realised escalation rate on the val set
+    rejection_rate: float     # REJECTED fraction (fallback path)
+    accuracy: float           # accuracy over accepted inputs
+    system_accuracy: float    # accuracy over ALL inputs (rejected = wrong)
+    cost_per_request: float
+
+    def capacity(self, batch_size: int) -> int:
+        """Serving-mode escalation cap for this point (DESIGN.md §2)."""
+        return escalation_capacity(batch_size, max(self.remote_fraction,
+                                                   1e-6))
+
+
+def _quantile_grid(values: np.ndarray, n: int) -> np.ndarray:
+    """Candidate thresholds at n evenly spaced quantiles, plus the open
+    ends (never/always escalate or reject)."""
+    v = np.asarray(values, np.float64)
+    qs = np.quantile(v, np.linspace(0.0, 1.0, n))
+    return np.unique(np.concatenate(
+        [[v.min() - 1e-9], qs, [v.max() + 1e-9]]))
+
+
+def sweep_operating_points(local_conf: np.ndarray, local_correct: np.ndarray,
+                           remote_conf: np.ndarray, remote_correct: np.ndarray,
+                           *, grid: int = 33,
+                           remote_cost_per_request: float = 0.0048
+                           ) -> list[OperatingPoint]:
+    """Exhaustive (t_local, t_remote) sweep with Algorithm-1 semantics.
+
+    All arrays are [n] over the validation set; correctness is 0/1.
+    Vectorised: for each t_local the escalated set is fixed, and every
+    t_remote candidate only re-partitions it into REMOTE vs REJECTED.
+    """
+    lc = np.asarray(local_conf, np.float64)
+    lok = np.asarray(local_correct, bool)
+    rc = np.asarray(remote_conf, np.float64)
+    rok = np.asarray(remote_correct, bool)
+    n = lc.shape[0]
+
+    points: list[OperatingPoint] = []
+    for tl in _quantile_grid(lc, grid):
+        use_local = lc > tl
+        esc = ~use_local
+        n_esc = int(esc.sum())
+        local_hits = int(lok[use_local].sum())
+        for tr in _quantile_grid(rc[esc] if n_esc else rc, grid):
+            remote_ok = esc & (rc > tr)
+            accepted = use_local | remote_ok
+            n_acc = int(accepted.sum())
+            hits = local_hits + int(rok[remote_ok].sum())
+            points.append(OperatingPoint(
+                t_local=float(tl), t_remote=float(tr),
+                remote_fraction=n_esc / n,
+                rejection_rate=1.0 - n_acc / n,
+                accuracy=hits / max(n_acc, 1),
+                system_accuracy=hits / n,
+                cost_per_request=n_esc / n * remote_cost_per_request))
+    return points
+
+
+def pareto_frontier(points: Sequence[OperatingPoint]
+                    ) -> list[OperatingPoint]:
+    """Non-dominated subset: maximise accepted accuracy, minimise remote
+    fraction and rejection rate. Sorted by ascending remote fraction."""
+    # distinct threshold pairs can land on identical metrics; keep one
+    seen: set[tuple] = set()
+    pts = []
+    for p in sorted(points, key=lambda p: (p.remote_fraction,
+                                           p.rejection_rate, -p.accuracy)):
+        m = (p.remote_fraction, p.rejection_rate, p.accuracy)
+        if m not in seen:
+            seen.add(m)
+            pts.append(p)
+    front: list[OperatingPoint] = []
+    for p in pts:
+        dominated = any(q.accuracy >= p.accuracy
+                        and q.remote_fraction <= p.remote_fraction
+                        and q.rejection_rate <= p.rejection_rate
+                        and (q.accuracy > p.accuracy
+                             or q.remote_fraction < p.remote_fraction
+                             or q.rejection_rate < p.rejection_rate)
+                        for q in pts)
+        if not dominated:
+            front.append(p)
+    return front
+
+
+def select_operating_point(points: Sequence[OperatingPoint],
+                           budget: float, *,
+                           max_rejection_rate: float | None = None
+                           ) -> OperatingPoint:
+    """Best accepted accuracy subject to remote_fraction <= budget (and an
+    optional rejection-rate ceiling); ties broken toward cheaper points.
+    Falls back to the cheapest point if the budget excludes everything."""
+    feasible = [p for p in points if p.remote_fraction <= budget + 1e-12]
+    if max_rejection_rate is not None:
+        hard = [p for p in feasible
+                if p.rejection_rate <= max_rejection_rate + 1e-12]
+        feasible = hard or feasible
+    if not feasible:
+        feasible = [min(points, key=lambda p: p.remote_fraction)]
+    return max(feasible, key=lambda p: (p.accuracy, -p.remote_fraction,
+                                        -p.rejection_rate))
+
+
+def calibrate(local_conf, local_correct, remote_conf, remote_correct, *,
+              budget: float, batch_size: int, grid: int = 33,
+              max_rejection_rate: float | None = None,
+              remote_cost_per_request: float = 0.0048
+              ) -> tuple[OperatingPoint, int, list[OperatingPoint]]:
+    """One-call calibration: sweep, take the frontier, pick the budget
+    point. Returns (point, capacity k for ``batch_size``, frontier)."""
+    pts = sweep_operating_points(
+        local_conf, local_correct, remote_conf, remote_correct,
+        grid=grid, remote_cost_per_request=remote_cost_per_request)
+    front = pareto_frontier(pts)
+    best = select_operating_point(front, budget,
+                                  max_rejection_rate=max_rejection_rate)
+    return best, best.capacity(batch_size), front

@@ -1,0 +1,192 @@
+"""Online budget controller for the cascade (runtime control plane,
+DESIGN.md §2).
+
+The paper (§4.5) calls thresholds *runtime-tunable configuration* but the
+seed engine froze ``t_remote`` and the escalation capacity at construction.
+This controller closes the loop: it tracks the realised remote fraction
+against a budget and retunes, once per control window,
+
+  * ``t_local``   — quantile tracking on a rolling buffer of 1st-level
+    supervisor scores, feed-forward corrected by a PI term on the EMA of
+    the budget error (classic EMA/PID hybrid: the quantile adapts to the
+    score distribution, the PI term absorbs cap saturation and mix shift);
+  * ``capacity``  — the per-batch escalation cap k, kept at
+    ``ceil(min(1, slack * rho) * B)`` so bursts cannot blow the budget;
+  * ``t_remote``  — quantile of recently observed 2nd-level scores at the
+    target rejection (false-alarm) rate, mirroring the nominal-quantile
+    calibration of ``core.thresholds`` but online.
+
+Drift detection: the controller keeps a reference histogram of 1st-level
+scores and compares each window's histogram via the Population Stability
+Index. On PSI > ``drift_threshold`` it declares a drift event, drops the
+PI integral (stale under the new distribution), rebases the reference and
+recalibrates ``t_local`` directly from the drifted window.
+
+Until the first window completes the controller reports ``t_local = None``
+and the engine falls back to budget-exact capacity-k selection (the seed
+behaviour) — a safe warm start.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cascade import escalation_capacity
+
+
+@dataclass(frozen=True)
+class ControllerConfig:
+    target_remote_fraction: float = 0.2
+    window: int = 256             # requests per control update
+    ema_alpha: float = 0.4        # EMA weight of the newest window
+    kp: float = 0.8               # proportional gain on budget error
+    ki: float = 0.3               # integral gain
+    integral_clip: float = 0.25
+    history: int = 4096           # rolling score-buffer length
+    drift_bins: int = 16
+    drift_threshold: float = 0.25  # PSI above this = drift event
+    capacity_slack: float = 2.0   # per-batch cap = slack * rho * B
+    target_rejection_rate: float = 0.05  # 2nd-level nominal false-alarm
+
+
+@dataclass
+class ControllerState:
+    t_local: float | None = None
+    t_remote: float | None = None
+    rho: float = 0.0              # current feed-forward escalation rate
+    ema_fraction: float = 0.0
+    integral: float = 0.0
+    windows: int = 0
+    drift_events: int = 0
+    last_psi: float = 0.0
+
+
+def population_stability_index(p_counts: np.ndarray,
+                               q_counts: np.ndarray) -> float:
+    """PSI between two histograms (same binning); symmetric-ish drift score."""
+    p = p_counts / max(p_counts.sum(), 1)
+    q = q_counts / max(q_counts.sum(), 1)
+    eps = 1e-4
+    p, q = np.clip(p, eps, None), np.clip(q, eps, None)
+    p, q = p / p.sum(), q / q.sum()
+    return float(np.sum((p - q) * np.log(p / q)))
+
+
+class AdaptiveController:
+    """EMA/PI budget controller with histogram drift detection."""
+
+    def __init__(self, config: ControllerConfig = ControllerConfig()):
+        self.config = config
+        self.state = ControllerState(rho=config.target_remote_fraction)
+        self._scores: deque[float] = deque(maxlen=config.history)
+        self._remote_scores: deque[float] = deque(maxlen=config.history)
+        self._win_scores: list[float] = []
+        self._win_escalated = 0
+        self._win_requests = 0
+        self._ref_hist: np.ndarray | None = None
+        self._bin_edges: np.ndarray | None = None
+
+    # -- knobs the engine reads each batch ---------------------------------
+    @property
+    def t_local(self) -> float | None:
+        return self.state.t_local
+
+    @property
+    def t_remote(self) -> float | None:
+        return self.state.t_remote
+
+    def capacity(self, batch_size: int) -> int:
+        # before the first update t_local is None and the engine selects
+        # exactly `capacity` rows, so slack must not apply (it would bake
+        # a slack-times overshoot into the warm start)
+        slack = self.config.capacity_slack if self.state.t_local is not None \
+            else 1.0
+        rho_cap = min(1.0, slack * self.state.rho)
+        return escalation_capacity(batch_size, max(rho_cap, 1e-6))
+
+    # -- observations the engine feeds back --------------------------------
+    def observe(self, local_conf: np.ndarray, escalated: int,
+                requests: int, remote_conf: np.ndarray | None = None) -> None:
+        """Record one served batch (real rows only) and update per window."""
+        conf = np.asarray(local_conf, np.float64).ravel()
+        self._scores.extend(conf.tolist())
+        self._win_scores.extend(conf.tolist())
+        self._win_escalated += int(escalated)
+        self._win_requests += int(requests)
+        if remote_conf is not None:
+            rc = np.asarray(remote_conf, np.float64).ravel()
+            self._remote_scores.extend(rc[np.isfinite(rc)].tolist())
+        # one update over everything accumulated — a window is "at least
+        # cfg.window requests", never split (splitting would manufacture
+        # empty phantom windows that drag the EMA toward zero)
+        if self._win_requests >= self.config.window:
+            self._update()
+
+    # -- one control update ------------------------------------------------
+    def _update(self) -> None:
+        cfg, st = self.config, self.state
+        frac = self._win_escalated / max(self._win_requests, 1)
+        if st.windows == 0:
+            st.ema_fraction = frac
+        else:
+            st.ema_fraction = (cfg.ema_alpha * frac
+                               + (1 - cfg.ema_alpha) * st.ema_fraction)
+        err = st.ema_fraction - cfg.target_remote_fraction
+        st.integral = float(np.clip(st.integral + err,
+                                    -cfg.integral_clip, cfg.integral_clip))
+
+        drifted = self._detect_drift(np.asarray(self._win_scores))
+        if drifted:
+            st.drift_events += 1
+            st.integral = 0.0
+            st.ema_fraction = cfg.target_remote_fraction
+            err = 0.0
+
+        # feed-forward escalation rate, PI-corrected, then realised as a
+        # quantile of the recent score distribution
+        st.rho = float(np.clip(
+            cfg.target_remote_fraction - cfg.kp * err - cfg.ki * st.integral,
+            0.0, 1.0))
+        scores = (np.asarray(self._win_scores) if drifted
+                  else np.asarray(self._scores))
+        if scores.size:
+            st.t_local = float(np.quantile(scores, st.rho))
+        if len(self._remote_scores) >= 8:
+            st.t_remote = float(np.quantile(
+                np.asarray(self._remote_scores), cfg.target_rejection_rate))
+
+        st.windows += 1
+        self._win_scores = []
+        self._win_escalated = 0
+        self._win_requests = 0
+
+    def _detect_drift(self, win_scores: np.ndarray) -> bool:
+        cfg, st = self.config, self.state
+        if win_scores.size == 0:
+            return False
+        if self._bin_edges is None:
+            lo, hi = float(win_scores.min()), float(win_scores.max())
+            span = max(hi - lo, 1e-6)
+            self._bin_edges = np.linspace(lo - 0.1 * span, hi + 0.1 * span,
+                                          cfg.drift_bins + 1)
+            self._ref_hist = np.histogram(win_scores, self._bin_edges)[0]
+            return False
+        hist = np.histogram(win_scores, self._bin_edges)[0]
+        st.last_psi = population_stability_index(self._ref_hist, hist)
+        if st.last_psi > cfg.drift_threshold:
+            # rebase the reference on the drifted distribution
+            lo, hi = float(win_scores.min()), float(win_scores.max())
+            span = max(hi - lo, 1e-6)
+            self._bin_edges = np.linspace(lo - 0.1 * span, hi + 0.1 * span,
+                                          cfg.drift_bins + 1)
+            self._ref_hist = np.histogram(win_scores, self._bin_edges)[0]
+            self._scores = deque(win_scores.tolist(),
+                                 maxlen=self.config.history)
+            return True
+        # slow reference update so benign wander doesn't accumulate into
+        # a spurious drift flag
+        self._ref_hist = 0.9 * self._ref_hist + 0.1 * hist
+        return False

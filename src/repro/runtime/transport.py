@@ -1,0 +1,211 @@
+"""Fault-aware remote-tier transport (runtime control plane, DESIGN.md §3).
+
+The paper treats the remote DNN as an infallible local callable; real
+deployments (DDNN-style cloud/edge tiers, CheapET-3's billed web API) see
+timeouts, transient errors and outages. This module wraps the remote
+callable in:
+
+  * bounded in-flight windows — the escalated sub-batch is shipped in
+    chunks of at most ``max_in_flight`` requests, so a single failure only
+    degrades its window, never the whole batch;
+  * per-window deadline + bounded retries with backoff;
+  * a circuit breaker: after ``breaker_failures`` consecutive window
+    failures the breaker opens and remote calls short-circuit locally for
+    ``breaker_reset_s``; a single half-open probe then decides whether to
+    close it again.
+
+A failed window does NOT drop its requests: the engine maps them to the
+REJECTED/fallback path of Algorithm 1 (the 2nd-level supervisor's "raise
+Exception" branch), which the scheduler resolves via the fallback callable.
+
+The clock and sleep functions are injectable so tests and benchmarks can
+run outage episodes deterministically without wall-clock waits.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+
+class RemoteCallError(Exception):
+    """Remote tier invocation failed (transient or terminal)."""
+
+
+class RemoteTimeout(RemoteCallError):
+    """Remote tier exceeded its deadline (raise from fault hooks too)."""
+
+
+class CircuitOpenError(RemoteCallError):
+    """Call short-circuited: the breaker is open."""
+
+
+CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+
+@dataclass(frozen=True)
+class TransportConfig:
+    max_in_flight: int = 8        # requests per transport window
+    timeout_s: float = 2.0        # per-window deadline
+    max_retries: int = 2          # retries per window (beyond first try)
+    retry_backoff_s: float = 0.02
+    breaker_failures: int = 3     # consecutive window failures to open
+    breaker_reset_s: float = 5.0  # open -> half-open after this long
+
+
+@dataclass
+class TransportStats:
+    windows: int = 0
+    requests: int = 0
+    failed_requests: int = 0
+    retries: int = 0
+    timeouts: int = 0
+    errors: int = 0
+    short_circuited: int = 0      # requests rejected while breaker open
+    breaker_opens: int = 0
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker with a single half-open probe."""
+
+    def __init__(self, failures: int, reset_s: float,
+                 clock: Callable[[], float] = time.monotonic):
+        self.failure_threshold = max(1, failures)
+        self.reset_s = reset_s
+        self._clock = clock
+        self.state = CLOSED
+        self.consecutive_failures = 0
+        self.opens = 0
+        self._opened_at = 0.0
+
+    def allow(self) -> bool:
+        if self.state == OPEN:
+            if self._clock() - self._opened_at >= self.reset_s:
+                self.state = HALF_OPEN     # admit one probe
+                return True
+            return False
+        return True
+
+    def record_success(self) -> None:
+        self.state = CLOSED
+        self.consecutive_failures = 0
+
+    def record_failure(self) -> None:
+        self.consecutive_failures += 1
+        if (self.state == HALF_OPEN
+                or self.consecutive_failures >= self.failure_threshold):
+            if self.state != OPEN:
+                self.opens += 1
+            self.state = OPEN
+            self._opened_at = self._clock()
+
+
+def _rows(batch: Any) -> int:
+    if isinstance(batch, dict):
+        return _rows(next(iter(batch.values())))
+    return int(np.asarray(batch).shape[0])
+
+
+def _slice(batch: Any, lo: int, hi: int) -> Any:
+    if isinstance(batch, dict):
+        return {k: _slice(v, lo, hi) for k, v in batch.items()}
+    return batch[lo:hi]
+
+
+class RemoteTransport:
+    """Windowed, retried, breaker-guarded wrapper over a remote callable.
+
+    ``call(batch)`` returns ``(logits [n, C] float32, ok [n] bool)``:
+    per-request success flags instead of an exception, so partial failures
+    degrade to per-request fallback rather than batch loss. Rows with
+    ``ok == False`` have zero logits and must not be trusted.
+    """
+
+    def __init__(self, remote_apply: Callable, config: TransportConfig
+                 = TransportConfig(), *,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        self.remote_apply = remote_apply
+        self.config = config
+        self.stats = TransportStats()
+        self._clock = clock
+        self._sleep = sleep
+        self.breaker = CircuitBreaker(config.breaker_failures,
+                                      config.breaker_reset_s, clock=clock)
+
+    # -- single window -----------------------------------------------------
+    def _call_window(self, window: Any) -> np.ndarray:
+        """One attempt: invoke the remote tier, enforcing the deadline."""
+        t0 = self._clock()
+        out = np.asarray(self.remote_apply(window))
+        if self._clock() - t0 > self.config.timeout_s:
+            raise RemoteTimeout(
+                f"remote window exceeded {self.config.timeout_s}s deadline")
+        return out
+
+    def _call_with_retries(self, window: Any) -> np.ndarray:
+        """One window: retries absorb transient faults; only a window that
+        exhausts its retries counts as a breaker failure (so a single
+        flaky window never opens the breaker on its own)."""
+        last: Exception | None = None
+        for attempt in range(1 + self.config.max_retries):
+            if not self.breaker.allow():
+                raise CircuitOpenError("circuit breaker open")
+            try:
+                out = self._call_window(window)
+            except RemoteTimeout as e:
+                self.stats.timeouts += 1
+                last = e
+            except CircuitOpenError:
+                raise
+            except Exception as e:  # transient transport / remote error
+                self.stats.errors += 1
+                last = e
+            else:
+                self.breaker.record_success()
+                return out
+            if attempt < self.config.max_retries:
+                self.stats.retries += 1
+                if self.config.retry_backoff_s > 0:
+                    self._sleep(self.config.retry_backoff_s * (attempt + 1))
+        self.breaker.record_failure()
+        raise RemoteCallError(f"remote window failed after "
+                              f"{1 + self.config.max_retries} attempts: "
+                              f"{last!r}") from last
+
+    # -- public API --------------------------------------------------------
+    def call(self, batch: Any) -> tuple[np.ndarray | None, np.ndarray]:
+        n = _rows(batch)
+        ok = np.zeros((n,), bool)
+        outs: list[tuple[int, np.ndarray]] = []
+        w = max(1, self.config.max_in_flight)
+        for lo in range(0, n, w):
+            hi = min(lo + w, n)
+            self.stats.windows += 1
+            self.stats.requests += hi - lo
+            if not self.breaker.allow():
+                self.stats.short_circuited += hi - lo
+                self.stats.failed_requests += hi - lo
+                continue
+            try:
+                out = self._call_with_retries(_slice(batch, lo, hi))
+            except CircuitOpenError:
+                self.stats.short_circuited += hi - lo
+                self.stats.failed_requests += hi - lo
+                continue
+            except RemoteCallError:
+                self.stats.failed_requests += hi - lo
+                continue
+            ok[lo:hi] = True
+            outs.append((lo, out))
+        self.stats.breaker_opens = self.breaker.opens
+        if not outs:
+            return None, ok
+        width = outs[0][1].shape[1:]
+        logits = np.zeros((n,) + width, np.float32)
+        for lo, out in outs:
+            logits[lo:lo + out.shape[0]] = out
+        return logits, ok

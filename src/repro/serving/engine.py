@@ -3,14 +3,21 @@
 The engine composes:
   * a LOCAL tier: cheap classifier (surrogate) evaluated for every request,
   * a 1st-level supervisor on the local logits,
-  * capacity-based escalation (core.cascade) to a REMOTE tier — a sharded
-    in-framework model (or any callable),
+  * escalation to a REMOTE tier — either a fused in-jit callable (offline /
+    trusted deployments) or a fault-aware ``repro.runtime`` transport with
+    caching and an online budget controller (DESIGN.md §2-§4),
   * a 2nd-level supervisor on the remote metadata,
   * per-request cost/latency accounting mirroring the paper's billing
-    model (Table 7 / §5.6).
+    model (Table 7 / §5.6) — padded scheduler rows are never billed.
 
-The jitted fast path is `make_cascade_step`; the Python-level
-`CascadeEngine` adds queueing, runtime-tunable thresholds and accounting.
+Two serve paths (DESIGN.md §2):
+  * fused   — ``make_cascade_step``: local + remote in one jitted step with
+    a static escalation capacity k (the seed behaviour; remote tier is an
+    infallible callable).
+  * runtime — local tier jitted, escalated sub-batch routed host-side
+    through ``RemoteResponseCache`` -> ``RemoteTransport``; failed windows
+    degrade to the REJECTED/fallback path; an ``AdaptiveController``
+    retunes ``t_local``/``t_remote``/capacity per control window.
 """
 
 from __future__ import annotations
@@ -29,16 +36,23 @@ from repro.core.supervisors import SOFTMAX_SUPERVISORS
 
 @dataclass(frozen=True)
 class CostModel:
-    """Latency/cost constants (paper Table 7 / GPT-3 style billing)."""
+    """Latency/cost constants (paper Table 7 / GPT-3 style billing).
+
+    Cache hits are re-served, not re-billed: they cost ``cache_hit_
+    latency_s`` and $0 (DESIGN.md §4)."""
     local_latency_s: float = 0.05
     remote_latency_s: float = 0.32       # incl. network round trip
     remote_cost_per_request: float = 0.0048
+    cache_hit_latency_s: float = 0.001
 
 
 @dataclass
 class CascadeStats:
-    requests: int = 0
-    remote_calls: int = 0
+    requests: int = 0                # genuine (non-padding) requests
+    escalations: int = 0             # requests routed past the local tier
+    remote_calls: int = 0            # billed remote invocations
+    cache_hits: int = 0              # escalations served from cache ($0)
+    transport_failures: int = 0      # escalations lost to transport faults
     rejected: int = 0
     total_cost: float = 0.0
     total_latency_s: float = 0.0
@@ -46,6 +60,10 @@ class CascadeStats:
     @property
     def remote_fraction(self) -> float:
         return self.remote_calls / max(self.requests, 1)
+
+    @property
+    def escalation_fraction(self) -> float:
+        return self.escalations / max(self.requests, 1)
 
     @property
     def mean_latency_s(self) -> float:
@@ -92,38 +110,184 @@ def make_cascade_step(local_apply: Callable, remote_apply: Callable,
     return step
 
 
-class CascadeEngine:
-    """Host-side engine: batching, runtime thresholds, accounting."""
+def make_local_step(local_apply: Callable, supervisor="max_softmax"):
+    """Jit-able local-tier-only step for the runtime serve path."""
+    sup = (supervisor if callable(supervisor)
+           else SOFTMAX_SUPERVISORS[supervisor])
 
-    def __init__(self, local_apply, remote_apply, *, batch_size: int,
+    def step(local_batch):
+        logits = local_apply(local_batch)
+        return {"local_conf": sup(logits),
+                "local_pred": jnp.argmax(logits, -1),
+                "local_logits": logits}
+
+    return step
+
+
+class CascadeEngine:
+    """Host-side engine: batching, runtime thresholds, accounting.
+
+    Legacy fused construction (remote tier = bare infallible callable,
+    static capacity)::
+
+        CascadeEngine(local_apply, remote_apply, batch_size=32,
+                      remote_fraction_budget=0.25, t_remote=0.9)
+
+    Runtime construction (fault-aware transport, optional controller and
+    response cache — DESIGN.md §2)::
+
+        CascadeEngine(local_apply, batch_size=32,
+                      remote_fraction_budget=0.25, t_remote=0.9,
+                      transport=RemoteTransport(remote_apply),
+                      controller=AdaptiveController(),
+                      cache=RemoteResponseCache())
+    """
+
+    def __init__(self, local_apply, remote_apply=None, *, batch_size: int,
                  remote_fraction_budget: float,
                  t_remote: float, cost: CostModel = CostModel(),
-                 supervisor="max_softmax"):
+                 supervisor="max_softmax", transport=None, controller=None,
+                 cache=None):
+        if remote_apply is None and transport is None:
+            raise ValueError("need a remote tier: remote_apply or transport")
         self.batch_size = batch_size
         self.capacity = escalation_capacity(batch_size,
                                             remote_fraction_budget)
         self.t_remote = t_remote            # runtime-tunable (paper §4.5)
+        self.t_local: float | None = None   # runtime-tunable escalation gate
         self.cost = cost
         self.stats = CascadeStats()
-        self._step = jax.jit(make_cascade_step(
-            local_apply, remote_apply, self.capacity, supervisor))
+        self.transport = transport
+        self.controller = controller
+        self.cache = cache
+        if transport is None:
+            self._step = jax.jit(make_cascade_step(
+                local_apply, remote_apply, self.capacity, supervisor))
+            self._supervisor = (supervisor if callable(supervisor)
+                                else SOFTMAX_SUPERVISORS[supervisor])
+        else:
+            self._local_step = jax.jit(make_local_step(local_apply,
+                                                       supervisor))
+            self._supervisor = (supervisor if callable(supervisor)
+                                else SOFTMAX_SUPERVISORS[supervisor])
 
     def set_remote_threshold(self, t: float) -> None:
         """Runtime reconfiguration (paper §4.5)."""
         self.t_remote = t
 
-    def serve(self, batch: dict[str, Any]) -> dict[str, np.ndarray]:
+    def set_local_threshold(self, t: float | None) -> None:
+        """Runtime escalation gate (runtime path; None = capacity-k)."""
+        self.t_local = t
+
+    # ------------------------------------------------------------------
+    def serve(self, batch: dict[str, Any],
+              real_rows: int | None = None) -> dict[str, np.ndarray]:
+        """Serve one batch; ``real_rows`` marks how many leading rows are
+        genuine — padded replicas beyond it are served (static jit shapes)
+        but never counted or billed."""
+        if self.transport is None:
+            return self._serve_fused(batch, real_rows)
+        return self._serve_runtime(batch, real_rows)
+
+    # -- fused path (seed semantics + padding-aware accounting) --------
+    def _serve_fused(self, batch, real_rows):
         out = jax.device_get(self._step(batch))
         b = out["prediction"].shape[0]
+        real = b if real_rows is None else min(real_rows, b)
         escalated = out["escalated"]
         accepted = (~escalated) | (out["remote_conf"] > self.t_remote)
-        n_remote = int(escalated.sum())
-        self.stats.requests += b
-        self.stats.remote_calls += n_remote
-        self.stats.rejected += int((~accepted).sum())
-        self.stats.total_cost += n_remote * self.cost.remote_cost_per_request
-        self.stats.total_latency_s += (
-            b * self.cost.local_latency_s
-            + n_remote * self.cost.remote_latency_s)
+        n_remote = int(escalated[:real].sum())
+        self._account(real, n_remote, n_remote, 0, 0,
+                      int((~accepted[:real]).sum()))
+        if self.controller is not None:
+            self.controller.observe(out["local_conf"][:real], n_remote,
+                                    real, out["remote_conf"][:real])
         out["accepted"] = accepted
         return out
+
+    # -- runtime path (transport + cache + controller) -----------------
+    def _serve_runtime(self, batch, real_rows):
+        local = jax.device_get(self._local_step(batch["local"]))
+        conf = np.asarray(local["local_conf"])
+        pred = np.asarray(local["local_pred"]).copy()
+        b = conf.shape[0]
+        real = b if real_rows is None else min(real_rows, b)
+
+        # --- escalation set: controller threshold, capped by capacity ---
+        capacity = (self.controller.capacity(self.batch_size)
+                    if self.controller is not None else self.capacity)
+        # calibrated warm start: engine t_local applies until the
+        # controller has produced its own (mirrors t_remote below)
+        t_local = self.t_local
+        if self.controller is not None and self.controller.t_local is not None:
+            t_local = self.controller.t_local
+        order = np.argsort(conf[:real], kind="stable")
+        if t_local is None:
+            k = min(capacity, real)
+        else:
+            k = min(int((conf[:real] < t_local).sum()), capacity, real)
+        idx = order[:k]                      # k lowest-confidence real rows
+
+        remote_conf = np.full((b,), np.inf, np.float32)
+        n_hits = n_sent = n_failed = 0
+        if k > 0:
+            host = jax.tree.map(np.asarray, batch["remote"])
+            rows = [jax.tree.map(lambda a: a[i], host) for i in idx]
+            keys = ([self.cache.key_fn(r) for r in rows]
+                    if self.cache is not None else [None] * k)
+            cached = [None if key is None else self.cache.get(key)
+                      for key in keys]
+            miss = [j for j, c in enumerate(cached) if c is None]
+            if miss:
+                sub = jax.tree.map(
+                    lambda *leaves: np.stack(leaves), *[rows[j] for j in miss])
+                logits, ok = self.transport.call(sub)
+                n_sent = int(ok.sum())
+                n_failed = len(miss) - n_sent
+                for w, j in enumerate(miss):
+                    if ok[w]:
+                        cached[j] = logits[w]
+                        if self.cache is not None:
+                            self.cache.put(keys[j], logits[w])
+            n_hits = k - len(miss)
+            got = [j for j, c in enumerate(cached) if c is not None]
+            if got:
+                rlogits = jnp.asarray(np.stack([cached[j] for j in got]))
+                rconf = np.asarray(self._supervisor(rlogits))
+                rpred = np.asarray(jnp.argmax(rlogits, -1))
+                remote_conf[idx[got]] = rconf
+                pred[idx[got]] = rpred
+            failed = [j for j, c in enumerate(cached) if c is None]
+            # transport-lost escalations: 2nd supervisor can never trust
+            # them -> REJECTED -> scheduler fallback (Algorithm 1 line 12)
+            remote_conf[idx[failed]] = -np.inf
+
+        escalated = np.zeros((b,), bool)
+        escalated[idx] = True
+        t_remote = self.t_remote
+        if self.controller is not None and self.controller.t_remote is not None:
+            t_remote = self.controller.t_remote
+        accepted = (~escalated) | (remote_conf > t_remote)
+
+        self._account(real, k, n_sent, n_hits, n_failed,
+                      int((~accepted[:real]).sum()))
+        if self.controller is not None:
+            self.controller.observe(conf[:real], k, real, remote_conf[:real])
+        return {"prediction": pred, "local_pred": local["local_pred"],
+                "local_conf": conf, "remote_conf": remote_conf,
+                "escalated": escalated, "accepted": accepted}
+
+    # ------------------------------------------------------------------
+    def _account(self, real, escalations, remote_calls, cache_hits,
+                 transport_failures, rejected):
+        st = self.stats
+        st.requests += real
+        st.escalations += escalations
+        st.remote_calls += remote_calls
+        st.cache_hits += cache_hits
+        st.transport_failures += transport_failures
+        st.rejected += rejected
+        st.total_cost += remote_calls * self.cost.remote_cost_per_request
+        st.total_latency_s += (real * self.cost.local_latency_s
+                               + remote_calls * self.cost.remote_latency_s
+                               + cache_hits * self.cost.cache_hit_latency_s)

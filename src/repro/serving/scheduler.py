@@ -4,6 +4,11 @@ Requests arrive one by one (each carrying both input views); the scheduler
 packs fixed-size microbatches (padding the tail with replicas so jitted
 shapes never change), runs the engine and routes per-request results,
 including the REJECTED -> fallback path (paper Algorithm 1 line 12).
+Transport failures surface as REJECTED too (DESIGN.md §3), so an outage
+degrades to fallback answers instead of dropped requests.
+
+The engine is told how many rows are genuine (``real_rows``) so padded
+replicas are never counted in the stats or billed against the remote tier.
 """
 
 from __future__ import annotations
@@ -44,6 +49,7 @@ class MicrobatchScheduler:
         self.fallback = fallback
         self.queue: list[Request] = []
         self.responses: dict[int, Response] = {}
+        self.fallbacks = 0
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -63,8 +69,8 @@ class MicrobatchScheduler:
                 "local": _stack([r.local_input for r in padded]),
                 "remote": _stack([r.remote_input for r in padded]),
             }
-            res = self.engine.serve(batch)
-            for i, req in enumerate(chunk[:real]):
+            res = self.engine.serve(batch, real_rows=real)
+            for i, req in enumerate(chunk):
                 escalated = bool(res["escalated"][i])
                 accepted = bool(res["accepted"][i])
                 if not escalated:
@@ -75,6 +81,7 @@ class MicrobatchScheduler:
                     pred = int(res["prediction"][i])
                 else:
                     src = "fallback"
+                    self.fallbacks += 1
                     pred = (self.fallback(req) if self.fallback
                             else -1)  # "raise Exception" analogue
                 resp = Response(req.uid, pred, src,

@@ -1,0 +1,424 @@
+"""Adaptive cascade runtime: offline calibration, online budget control,
+fault-aware transport (circuit breaker), response cache — plus the
+scheduler's REJECTED -> fallback path, padding-aware accounting and
+TriSupervised tier-routing invariants (no hypothesis required)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import (EDGE, LOCAL, REJECTED, REMOTE, TriThresholds,
+                                trisupervised_batch)
+from repro.runtime.cache import RemoteResponseCache, content_key
+from repro.runtime.calibration import (calibrate, pareto_frontier,
+                                       select_operating_point,
+                                       sweep_operating_points)
+from repro.runtime.controller import (AdaptiveController, ControllerConfig,
+                                      population_stability_index)
+from repro.runtime.transport import (CLOSED, HALF_OPEN, OPEN, CircuitBreaker,
+                                     RemoteTimeout, RemoteTransport,
+                                     TransportConfig)
+from repro.serving.engine import CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+
+# ------------------------------------------------------------ helpers
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def runtime_engine(remote=remote_apply, *, batch=8, budget=0.5,
+                   t_remote=0.0, tconf=None, **kw):
+    transport = RemoteTransport(remote, tconf or TransportConfig(
+        retry_backoff_s=0.0, max_retries=1, breaker_failures=2))
+    return CascadeEngine(local_apply, batch_size=batch,
+                         remote_fraction_budget=budget, t_remote=t_remote,
+                         transport=transport, **kw), transport
+
+
+# ------------------------------------------------------------ cache
+
+def test_cache_content_keys_and_lru():
+    a = np.arange(6, dtype=np.int32)
+    assert content_key(a) == content_key(a.copy())
+    assert content_key(a) != content_key(a.astype(np.float32))
+    assert content_key({"t": a, "i": 0}) == content_key({"i": 0, "t": a})
+    cache = RemoteResponseCache(capacity=2)
+    k1, k2, k3 = (content_key(np.float32([i])) for i in range(3))
+    cache.put(k1, np.float32([1.0]))
+    cache.put(k2, np.float32([2.0]))
+    assert cache.get(k1) is not None      # refreshes k1
+    cache.put(k3, np.float32([3.0]))      # evicts k2 (LRU)
+    assert cache.get(k2) is None
+    assert cache.get(k1) is not None
+    assert cache.stats.evictions == 1
+    assert cache.stats.hits == 2 and cache.stats.misses == 1
+
+
+def test_engine_cache_dedups_billing():
+    rng = np.random.default_rng(0)
+    cache = RemoteResponseCache(256)
+    eng, _ = runtime_engine(batch=8, budget=0.5, cache=cache)
+    x, _ = make_stream(rng, 8, hard_frac=1.0)
+    eng.serve({"local": x, "remote": x})
+    first_billed = eng.stats.remote_calls
+    assert first_billed == 4              # capacity = 50% of 8
+    eng.serve({"local": x, "remote": x})  # identical content
+    assert eng.stats.remote_calls == first_billed       # no new billing
+    assert eng.stats.cache_hits == 4
+    assert eng.stats.escalations == 8
+    np.testing.assert_allclose(
+        eng.stats.total_cost,
+        first_billed * eng.cost.remote_cost_per_request)
+
+
+# ------------------------------------------------------------ transport
+
+def test_circuit_breaker_state_machine():
+    t = {"now": 0.0}
+    br = CircuitBreaker(failures=2, reset_s=10.0, clock=lambda: t["now"])
+    assert br.state == CLOSED and br.allow()
+    br.record_failure()
+    assert br.state == CLOSED
+    br.record_failure()
+    assert br.state == OPEN and not br.allow()
+    t["now"] = 11.0
+    assert br.allow() and br.state == HALF_OPEN
+    br.record_failure()                    # probe fails -> straight open
+    assert br.state == OPEN
+    t["now"] = 22.0
+    assert br.allow()
+    br.record_success()
+    assert br.state == CLOSED and br.consecutive_failures == 0
+
+
+def test_transport_retries_then_succeeds():
+    attempts = {"n": 0}
+
+    def flaky(x):
+        attempts["n"] += 1
+        if attempts["n"] == 1:
+            raise ConnectionError("transient")
+        return remote_apply(x)
+
+    tr = RemoteTransport(flaky, TransportConfig(
+        max_in_flight=8, max_retries=2, retry_backoff_s=0.0))
+    logits, ok = tr.call(np.float32(np.eye(4)))
+    assert ok.all()
+    assert tr.stats.retries == 1 and tr.stats.errors == 1
+    np.testing.assert_allclose(logits, 5.0 * np.eye(4))
+
+
+def test_transport_partial_window_failure():
+    calls = {"n": 0}
+
+    def half_broken(x):
+        calls["n"] += 1
+        if calls["n"] % 2 == 0:
+            raise RemoteTimeout("down")
+        return remote_apply(x)
+
+    tr = RemoteTransport(half_broken, TransportConfig(
+        max_in_flight=2, max_retries=0, retry_backoff_s=0.0,
+        breaker_failures=100))
+    logits, ok = tr.call(np.float32(np.eye(4)))    # 2 windows of 2
+    assert ok.tolist() == [True, True, False, False]
+    assert tr.stats.failed_requests == 2
+    np.testing.assert_allclose(logits[:2], 5.0 * np.eye(4)[:2])
+
+
+def test_breaker_short_circuits_and_recovers():
+    t = {"now": 0.0}
+    down = {"on": True}
+
+    def remote(x):
+        t["now"] += 0.01
+        if down["on"]:
+            raise RemoteTimeout("outage")
+        return remote_apply(x)
+
+    tr = RemoteTransport(remote, TransportConfig(
+        max_in_flight=4, max_retries=0, retry_backoff_s=0.0,
+        breaker_failures=1, breaker_reset_s=1.0),
+        clock=lambda: t["now"], sleep=lambda s: None)
+    _, ok = tr.call(np.float32(np.eye(4)))
+    assert not ok.any() and tr.breaker.state == OPEN
+    _, ok = tr.call(np.float32(np.eye(4)))        # still open: no attempts
+    assert tr.stats.short_circuited >= 4
+    down["on"] = False
+    t["now"] += 2.0                                # past reset window
+    logits, ok = tr.call(np.float32(np.eye(4)))    # half-open probe wins
+    assert ok.all() and tr.breaker.state == CLOSED
+
+
+# ------------------------------------------------- scheduler + fallback
+
+def test_outage_degrades_to_fallback_without_drops():
+    rng = np.random.default_rng(1)
+    eng, tr = runtime_engine(lambda x: (_ for _ in ()).throw(
+        RemoteTimeout("down")), batch=8, budget=0.5)
+    sched = MicrobatchScheduler(eng, fallback=lambda req: -7)
+    x, _ = make_stream(rng, 20)
+    for i in range(20):
+        sched.submit(Request(uid=i, local_input=x[i], remote_input=x[i]))
+    responses = sched.flush()
+    assert sorted(r.uid for r in responses) == list(range(20))   # no drops
+    srcs = {r.source for r in responses}
+    assert srcs == {"local", "fallback"}          # outage -> no "remote"
+    for r in responses:
+        if r.source == "fallback":
+            assert r.prediction == -7
+    assert sched.fallbacks == sum(r.source == "fallback" for r in responses)
+    assert eng.stats.transport_failures == sched.fallbacks
+    assert eng.stats.remote_calls == 0 and eng.stats.total_cost == 0.0
+
+
+def test_scheduler_fallback_receives_original_request():
+    rng = np.random.default_rng(2)
+    eng, _ = runtime_engine(lambda x: (_ for _ in ()).throw(
+        RemoteTimeout("down")), batch=4, budget=0.5)
+    seen: list[int] = []
+
+    def fallback(req: Request) -> int:
+        seen.append(req.uid)
+        return 100 + req.uid
+
+    sched = MicrobatchScheduler(eng, fallback=fallback)
+    x, _ = make_stream(rng, 8, hard_frac=1.0)
+    for i in range(8):
+        sched.submit(Request(uid=i, local_input=x[i], remote_input=x[i]))
+    responses = sched.flush()
+    fb = [r for r in responses if r.source == "fallback"]
+    assert len(fb) == len(seen) > 0
+    for r in fb:
+        assert r.prediction == 100 + r.uid        # the request itself
+
+def test_scheduler_without_fallback_returns_sentinel():
+    rng = np.random.default_rng(3)
+    eng, _ = runtime_engine(lambda x: (_ for _ in ()).throw(
+        RemoteTimeout("down")), batch=4, budget=0.5)
+    sched = MicrobatchScheduler(eng, fallback=None)
+    x, _ = make_stream(rng, 4, hard_frac=1.0)
+    for i in range(4):
+        sched.submit(Request(uid=i, local_input=x[i], remote_input=x[i]))
+    preds = {r.prediction for r in sched.flush() if r.source == "fallback"}
+    assert preds == {-1}
+
+
+# ------------------------------------------------- padding accounting
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_padded_rows_not_billed(fused):
+    rng = np.random.default_rng(4)
+    if fused:
+        eng = CascadeEngine(local_apply, lambda x: 5.0 * jnp.asarray(x),
+                            batch_size=8, remote_fraction_budget=0.5,
+                            t_remote=0.0)
+    else:
+        eng, _ = runtime_engine(batch=8, budget=0.5)
+    sched = MicrobatchScheduler(eng)
+    x, _ = make_stream(rng, 11, hard_frac=1.0)    # 8 + 3 (padded to 8)
+    for i in range(11):
+        sched.submit(Request(uid=i, local_input=x[i], remote_input=x[i]))
+    responses = sched.flush()
+    assert len(responses) == 11
+    assert eng.stats.requests == 11               # padded replicas unbilled
+    assert eng.stats.remote_calls <= 8            # k=4 + k<=4 real in tail
+    np.testing.assert_allclose(
+        eng.stats.total_cost,
+        eng.stats.remote_calls * eng.cost.remote_cost_per_request)
+    np.testing.assert_allclose(
+        eng.stats.total_latency_s,
+        11 * eng.cost.local_latency_s
+        + eng.stats.remote_calls * eng.cost.remote_latency_s)
+
+
+def test_fused_padded_tail_escalations_capped_to_real_rows():
+    eng = CascadeEngine(local_apply, lambda x: 5.0 * jnp.asarray(x),
+                        batch_size=8, remote_fraction_budget=1.0,
+                        t_remote=0.0)
+    rng = np.random.default_rng(5)
+    x, _ = make_stream(rng, 3, hard_frac=1.0)
+    batch = {"local": np.concatenate([x, np.repeat(x[-1:], 5, 0)]),
+             "remote": np.concatenate([x, np.repeat(x[-1:], 5, 0)])}
+    eng.serve(batch, real_rows=3)
+    assert eng.stats.requests == 3
+    assert eng.stats.remote_calls == 3            # not 8
+
+
+# ------------------------------------------------- controller
+
+def _conf_stream(rng, n, easy_frac):
+    """Synthetic 1st-level confidences: mixture of easy (high) / hard."""
+    easy = rng.random(n) < easy_frac
+    return np.where(easy, rng.uniform(0.8, 1.0, n),
+                    rng.uniform(0.3, 0.7, n))
+
+
+def test_controller_tracks_budget_under_drift():
+    rng = np.random.default_rng(6)
+    cfg = ControllerConfig(target_remote_fraction=0.2, window=256)
+    ctl = AdaptiveController(cfg)
+    b = 32
+
+    def run_phase(easy_frac, batches):
+        esc = req = 0
+        for _ in range(batches):
+            conf = _conf_stream(rng, b, easy_frac)
+            cap = ctl.capacity(b)
+            t = ctl.t_local
+            if t is None:
+                k = min(cap, b)
+            else:
+                k = min(int((conf < t).sum()), cap)
+            ctl.observe(conf, k, b)
+            esc += k
+            req += b
+        return esc / req
+
+    run_phase(0.9, 64)                    # settle on the easy mix
+    frac_easy = run_phase(0.9, 64)
+    assert abs(frac_easy - 0.2) <= 0.03
+    run_phase(0.5, 64)                    # drift: many more hard inputs
+    frac_hard = run_phase(0.5, 64)
+    assert abs(frac_hard - 0.2) <= 0.03
+    assert ctl.state.drift_events >= 1
+    assert ctl.state.windows > 0
+
+
+def test_controller_retunes_remote_threshold():
+    rng = np.random.default_rng(7)
+    cfg = ControllerConfig(target_remote_fraction=0.5, window=64,
+                           target_rejection_rate=0.1)
+    ctl = AdaptiveController(cfg)
+    rconf = rng.uniform(0.0, 1.0, 256)
+    for lo in range(0, 256, 32):
+        conf = _conf_stream(rng, 32, 0.5)
+        ctl.observe(conf, 16, 32, remote_conf=rconf[lo:lo + 32])
+    assert ctl.t_remote is not None
+    # ~10% of the observed 2nd-level scores fall below the threshold
+    assert abs((rconf < ctl.t_remote).mean() - 0.1) < 0.06
+
+
+def test_psi_detects_shift():
+    p = np.array([10, 80, 10, 0], float)
+    assert population_stability_index(p, p) == pytest.approx(0.0, abs=1e-6)
+    q = np.array([0, 10, 80, 10], float)
+    assert population_stability_index(p, q) > 0.25
+
+
+# ------------------------------------------------- calibration
+
+def _val_set(rng, n=512):
+    """Local is right on easy inputs (high conf), remote nearly always."""
+    hard = rng.random(n) < 0.4
+    local_conf = np.where(hard, rng.uniform(0.2, 0.6, n),
+                          rng.uniform(0.7, 1.0, n))
+    local_correct = rng.random(n) < np.where(hard, 0.3, 0.95)
+    remote_conf = rng.uniform(0.5, 1.0, n)
+    remote_correct = rng.random(n) < 0.97
+    return local_conf, local_correct, remote_conf, remote_correct
+
+
+def test_calibration_pareto_and_budget_selection():
+    rng = np.random.default_rng(8)
+    lc, lok, rc, rok = _val_set(rng)
+    pts = sweep_operating_points(lc, lok, rc, rok, grid=17)
+    front = pareto_frontier(pts)
+    assert 0 < len(front) <= len(pts)
+    for p in front:       # no frontier point dominated by another
+        assert not any(q.accuracy >= p.accuracy
+                       and q.remote_fraction <= p.remote_fraction
+                       and q.rejection_rate <= p.rejection_rate
+                       and q is not p for q in front)
+    point = select_operating_point(front, budget=0.3)
+    assert point.remote_fraction <= 0.3 + 1e-9
+    # spending budget should never pick something worse than local-only
+    local_only = min(front, key=lambda p: p.remote_fraction)
+    assert point.accuracy >= local_only.accuracy - 1e-9
+
+
+def test_calibrate_returns_capacity_and_respects_budget():
+    rng = np.random.default_rng(9)
+    lc, lok, rc, rok = _val_set(rng)
+    point, k, front = calibrate(lc, lok, rc, rok, budget=0.25,
+                                batch_size=32, grid=17)
+    assert 1 <= k <= 32
+    assert k == int(-(-point.remote_fraction * 32 // 1)) or k == 1
+    assert point.remote_fraction <= 0.25 + 1e-9
+    # cost model consistency
+    assert point.cost_per_request == pytest.approx(
+        point.remote_fraction * 0.0048)
+
+
+def test_calibrated_point_reproduces_on_fresh_sample():
+    """The selected thresholds transfer: realised remote fraction on an
+    i.i.d. fresh draw stays near the calibration estimate."""
+    rng = np.random.default_rng(10)
+    lc, lok, rc, rok = _val_set(rng, n=2048)
+    point, _, _ = calibrate(lc, lok, rc, rok, budget=0.35, batch_size=32)
+    lc2, _, _, _ = _val_set(rng, n=2048)
+    realised = (lc2 <= point.t_local).mean()
+    assert abs(realised - point.remote_fraction) < 0.05
+
+
+# ------------------------------------------------- trisupervised invariants
+
+def _tri_outputs(rng, n=64):
+    conf = lambda: rng.uniform(0, 1, n)
+    th = TriThresholds(t_local=rng.uniform(0.3, 0.9),
+                       t_edge=rng.uniform(0.3, 0.9),
+                       t_remote=rng.uniform(0.3, 0.9))
+    preds = [rng.integers(0, 5, n) for _ in range(3)]
+    out = trisupervised_batch(
+        jnp.asarray(preds[0]), jnp.asarray(conf()),
+        jnp.asarray(preds[1]), jnp.asarray(conf()),
+        jnp.asarray(preds[2]), jnp.asarray(conf()), th)
+    return {k: np.asarray(v) for k, v in out.items()}, preds
+
+
+def test_trisupervised_each_input_served_by_exactly_one_tier():
+    rng = np.random.default_rng(11)
+    for _ in range(20):
+        out, preds = _tri_outputs(rng)
+        src = out["source"]
+        assert np.isin(src, [LOCAL, EDGE, REMOTE, REJECTED]).all()
+        # the returned prediction comes from the serving tier
+        np.testing.assert_array_equal(out["prediction"][src == LOCAL],
+                                      preds[0][src == LOCAL])
+        np.testing.assert_array_equal(out["prediction"][src == EDGE],
+                                      preds[1][src == EDGE])
+        remote_served = (src == REMOTE) | (src == REJECTED)
+        np.testing.assert_array_equal(out["prediction"][remote_served],
+                                      preds[2][remote_served])
+        # accepted <-> not rejected
+        np.testing.assert_array_equal(out["accepted"], src != REJECTED)
+
+
+def test_trisupervised_call_set_inclusion():
+    """remote_called subset of edge_called; cheaper tiers consulted first."""
+    rng = np.random.default_rng(12)
+    for _ in range(20):
+        out, _ = _tri_outputs(rng)
+        edge, remote, src = (out["edge_called"], out["remote_called"],
+                             out["source"])
+        assert not (remote & ~edge).any()          # remote ⊆ edge
+        assert not edge[src == LOCAL].any()        # local-served: no calls
+        assert remote[(src == REMOTE) | (src == REJECTED)].all()
+        assert not remote[src == EDGE].any()
