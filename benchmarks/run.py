@@ -10,6 +10,8 @@
   kernels     kernel microbench (ours)
   runtime     adaptive cascade runtime (budget tracking under drift,
               circuit breaker, remote-response cache — DESIGN.md)
+  serving     pipelined vs serial serving path (throughput, p50/p95 wall
+              latency — DESIGN.md §5; also writes BENCH_serving.json)
   roofline    dry-run roofline summary (reads results/dryrun_matrix.jsonl
               if present)
 """
@@ -23,10 +25,11 @@ import sys
 import time
 
 from benchmarks import (inventory, kernels_bench, latency, rac,
-                        runtime_bench, supervised, supervisor_comparison)
+                        runtime_bench, serving_bench, supervised,
+                        supervisor_comparison)
 
 ALL = ("inventory", "rac", "supervised", "supervisors", "latency",
-       "kernels", "runtime", "roofline")
+       "kernels", "runtime", "serving", "roofline")
 
 
 def roofline_summary(verbose: bool = True) -> list[dict]:
@@ -58,6 +61,8 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default="",
                     help=f"comma-separated subset of {ALL}")
+    ap.add_argument("--json", default="results/benchmarks.json",
+                    help="machine-readable results path")
     args = ap.parse_args(argv)
     which = args.only.split(",") if args.only else list(ALL)
 
@@ -78,16 +83,20 @@ def main(argv=None) -> int:
             results[name] = kernels_bench.run()
         elif name == "runtime":
             results[name] = runtime_bench.run()
+        elif name == "serving":
+            results[name] = serving_bench.run(requests=512)
         elif name == "roofline":
             results[name] = roofline_summary()
         else:
             print(f"unknown benchmark {name!r}", file=sys.stderr)
             return 2
-    os.makedirs("results", exist_ok=True)
-    with open("results/benchmarks.json", "w") as f:
+    out_dir = os.path.dirname(args.json)
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+    with open(args.json, "w") as f:
         json.dump(results, f, indent=1, default=str)
     print(f"\n[benchmarks] all done in {time.perf_counter() - t0:.1f}s; "
-          f"JSON -> results/benchmarks.json")
+          f"JSON -> {args.json}")
     return 0
 
 

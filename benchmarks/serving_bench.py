@@ -1,0 +1,181 @@
+"""Pipelined serving-path benchmark (ISSUE 2 acceptance; DESIGN.md §5).
+
+Synthetic load at ~20% escalation against a fake remote with a real
+0.3s round-trip latency. Two engines serve the SAME request stream:
+
+  serial    — the runtime path, one microbatch at a time: local step,
+              then block on the remote window before the next batch's
+              local step can dispatch;
+  pipelined — ``pipeline_depth`` microbatches in flight: batch i+1's
+              local tier (fused confidence gate) runs while batch i's
+              escalations are on the wire; windows drain in submission
+              order.
+
+Throughput is the headline metric; the run also VERIFIES the two paths
+produce bitwise-identical predictions/routing and identical billing
+stats — overlap must never change what the cascade answers or charges.
+
+Machine-readable results (throughput, p50/p95 measured wall latency,
+remote fraction, speedup) are written to ``BENCH_serving.json`` so the
+perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.serving_bench \
+        [--requests 1024] [--depth 8] [--remote-latency 0.3] \
+        [--json BENCH_serving.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import RemoteTransport, TransportConfig
+from repro.serving.engine import CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+BATCH = 32
+NCLS = 8
+TARGET = 0.20           # escalation fraction (capacity-k, no controller)
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)     # noisy view of the features
+
+
+def make_remote(latency_s: float):
+    def remote(x):
+        time.sleep(latency_s)              # the wire + the big model
+        return 5.0 * np.asarray(x)
+    return remote
+
+
+def make_load(rng, n, hard_frac=0.3):
+    """Feature batches whose argmax is the label; hard rows have small
+    margins -> low 1st-level confidence. All rows distinct (the cache
+    must not blur the serial/pipelined billing comparison)."""
+    labels = rng.integers(0, NCLS, n)
+    x = rng.normal(0, 0.05, (n, NCLS))
+    margin = np.where(rng.random(n) < hard_frac,
+                      rng.uniform(0.05, 0.4, n), rng.uniform(2.0, 4.0, n))
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def _serve(xs, depth: int, latency_s: float):
+    transport = RemoteTransport(
+        make_remote(latency_s),
+        TransportConfig(max_in_flight=BATCH, retry_backoff_s=0.0,
+                        timeout_s=max(2.0, 10 * latency_s),
+                        max_concurrent=max(depth, 1)))
+    engine = CascadeEngine(local_apply, batch_size=BATCH,
+                           remote_fraction_budget=TARGET, t_remote=0.0,
+                           transport=transport)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -1,
+                                pipeline_depth=depth)
+    # warm the jit cache with one out-of-band batch, then reset accounting
+    engine.serve({"local": xs[:BATCH], "remote": xs[:BATCH]})
+    engine.stats = type(engine.stats)()
+    t0 = time.perf_counter()
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    responses = sched.flush()
+    wall = time.perf_counter() - t0
+    transport.shutdown()
+    return responses, engine, wall
+
+
+def _metrics(tag, responses, engine, wall, n) -> dict:
+    st = engine.stats
+    return {
+        "path": tag,
+        "requests": n,
+        "wall_s": wall,
+        "throughput_rps": n / wall,
+        "p50_wall_latency_s": st.wall_percentile(50),
+        "p95_wall_latency_s": st.wall_percentile(95),
+        "mean_wall_latency_s": st.mean_wall_latency_s,
+        "modelled_mean_latency_s": st.mean_latency_s,
+        "remote_fraction": st.remote_fraction,
+        "escalation_fraction": st.escalation_fraction,
+        "remote_calls": st.remote_calls,
+        "total_cost": st.total_cost,
+    }
+
+
+def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
+        remote_latency_s: float = 0.3,
+        json_path: str | None = "BENCH_serving.json") -> dict:
+    rng = np.random.default_rng(0)
+    xs, _ = make_load(rng, requests)
+
+    r_ser, eng_ser, w_ser = _serve(xs, depth=1, latency_s=remote_latency_s)
+    r_pip, eng_pip, w_pip = _serve(xs, depth=depth,
+                                   latency_s=remote_latency_s)
+
+    identical = ([(r.uid, r.prediction, r.source) for r in r_ser]
+                 == [(r.uid, r.prediction, r.source) for r in r_pip])
+    billing_fields = ("requests", "escalations", "remote_calls",
+                      "cache_hits", "transport_failures", "rejected",
+                      "total_cost")
+    billing_identical = all(getattr(eng_ser.stats, f)
+                            == getattr(eng_pip.stats, f)
+                            for f in billing_fields)
+
+    n = len(xs)
+    serial = _metrics("serial", r_ser, eng_ser, w_ser, n)
+    pipelined = _metrics("pipelined", r_pip, eng_pip, w_pip, n)
+    report = {
+        "batch_size": BATCH,
+        "pipeline_depth": depth,
+        "remote_latency_s": remote_latency_s,
+        "target_escalation_fraction": TARGET,
+        "serial": serial,
+        "pipelined": pipelined,
+        "speedup": serial["wall_s"] / pipelined["wall_s"],
+        "predictions_identical": identical,
+        "billing_identical": billing_identical,
+        "passed_2x": (serial["wall_s"] / pipelined["wall_s"] >= 2.0
+                      and identical and billing_identical),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+    if verbose:
+        print(f"\n--- Serving: pipelined vs serial runtime path "
+              f"({n} requests, {TARGET:.0%} escalation, "
+              f"{remote_latency_s}s fake remote, depth {depth}) ---")
+        print(f"{'path':>10} {'req/s':>8} {'wall':>7} {'p50':>7} {'p95':>7} "
+              f"{'remote%':>8}")
+        for m in (serial, pipelined):
+            print(f"{m['path']:>10} {m['throughput_rps']:8.1f} "
+                  f"{m['wall_s']:6.1f}s {m['p50_wall_latency_s']*1e3:6.0f}m "
+                  f"{m['p95_wall_latency_s']*1e3:6.0f}m "
+                  f"{m['remote_fraction']:8.2f}")
+        print(f"speedup {report['speedup']:.2f}x; predictions identical: "
+              f"{identical}; billing identical: {billing_identical}"
+              + (f"; JSON -> {json_path}" if json_path else ""))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=1024)
+    ap.add_argument("--depth", type=int, default=8,
+                    help="pipelined in-flight microbatch window")
+    ap.add_argument("--remote-latency", type=float, default=0.3,
+                    help="fake remote round-trip seconds")
+    ap.add_argument("--json", default="BENCH_serving.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args(argv)
+    report = run(requests=args.requests, depth=args.depth,
+                 remote_latency_s=args.remote_latency,
+                 json_path=args.json or None)
+    return 0 if report["passed_2x"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

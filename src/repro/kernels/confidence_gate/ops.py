@@ -1,0 +1,64 @@
+"""Jit'd public wrapper for the fused confidence-gate kernel.
+
+On TPU dispatches to the Pallas kernels; elsewhere (this CPU container)
+falls back to the jnp oracle, so the serving engine uses one API
+everywhere. Pads the batch/class dims to block multiples when needed
+(class padding uses -1e30 so softmax mass and argmax are unaffected;
+batch padding is excluded from selection via ``n_valid``).
+
+Callable supervisors (e.g. a bound MDSA, paper §4.2) always take the
+jnp path — the Pallas scoring kernel is specialised to the softmax
+family it can compute from online statistics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.confidence_gate.kernel import (SUPERVISORS,
+                                                  confidence_gate_pallas)
+from repro.kernels.confidence_gate.ref import confidence_gate_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def confidence_gate(logits: jnp.ndarray, t_local=None, n_valid=None, *,
+                    supervisor="max_softmax", k: int | None = None,
+                    bb: int = 8, vb: int = 128, force_pallas: bool = False,
+                    interpret: bool = False) -> dict[str, jnp.ndarray]:
+    """logits [B, C] -> {conf [B], pred [B], idx [k]}.
+
+    ``idx`` holds up to ``k`` escalation candidates: row indices ascending
+    by confidence, only rows ``< n_valid`` with ``conf < t_local``
+    (``t_local=None`` disables the threshold); unused slots are -1.
+    ``t_local``/``n_valid`` may be traced values — retuning never
+    recompiles.
+    """
+    b, v = logits.shape
+    k = b if k is None else min(int(k), b)
+    if callable(supervisor) or not (force_pallas or _on_tpu()):
+        return confidence_gate_ref(logits, t_local, n_valid,
+                                   supervisor=supervisor, k=k)
+    if supervisor not in SUPERVISORS:
+        raise ValueError(f"unknown supervisor {supervisor!r}; "
+                         f"expected one of {SUPERVISORS}")
+    t = jnp.float32(jnp.inf) if t_local is None else \
+        jnp.asarray(t_local, jnp.float32)
+    n = jnp.int32(b) if n_valid is None else jnp.asarray(n_valid, jnp.int32)
+    pad_b = (-b) % bb
+    pad_v = (-v) % vb
+    if pad_v:
+        logits = jnp.pad(logits, ((0, 0), (0, pad_v)), constant_values=-1e30)
+    if pad_b:
+        logits = jnp.pad(logits, ((0, pad_b), (0, 0)))
+        n = jnp.minimum(n, b)                  # padded rows never escalate
+    out = confidence_gate_pallas(logits, t, n, supervisor=supervisor, k=k,
+                                 bb=bb, vb=vb,
+                                 interpret=interpret or not _on_tpu())
+    if pad_b:
+        out = {"conf": out["conf"][:b], "pred": out["pred"][:b],
+               "idx": out["idx"]}
+    return out

@@ -10,9 +10,11 @@ requests; the 2nd-level supervisor filters untrusted remote predictions
 cache and controller telemetry.
 
 Runtime control plane (DESIGN.md):
-  --adaptive     enable the online budget controller (EMA/PID + drift)
-  --calibrate    offline Pareto sweep picking (t_local, t_remote, k)
-  --fused        bypass the transport: seed-style fully-jitted cascade
+  --adaptive        enable the online budget controller (EMA/PID + drift)
+  --calibrate       offline Pareto sweep picking (t_local, t_remote, k)
+  --fused           bypass the transport: seed-style fully-jitted cascade
+  --pipeline-depth  overlap local compute with remote round trips
+                    (N microbatches in flight, FIFO drain — DESIGN.md §5)
 
 On this CPU container use ``--smoke`` (reduced remote config).
 
@@ -38,7 +40,8 @@ from repro.models import surrogate as S
 from repro.models import transformer as T
 from repro.runtime import (AdaptiveController, ControllerConfig,
                            RemoteResponseCache, RemoteTransport,
-                           TransportConfig, calibrate, content_key)
+                           TransportConfig, calibrate, content_key,
+                           content_keys)
 from repro.serving.engine import CascadeEngine, CostModel
 from repro.serving.scheduler import MicrobatchScheduler, Request
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
@@ -83,6 +86,9 @@ def main(argv=None) -> int:
                     help="offline Pareto sweep for (t_local, t_remote, k)")
     ap.add_argument("--cache-size", type=int, default=4096,
                     help="remote response cache entries (0 disables)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="in-flight microbatches (>1 overlaps the local "
+                         "tier with remote round trips — DESIGN.md §5)")
     ap.add_argument("--max-in-flight", type=int, default=8,
                     help="remote transport window size")
     ap.add_argument("--remote-timeout", type=float, default=2.0,
@@ -96,6 +102,9 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
     if args.fused and args.adaptive:
         ap.error("--adaptive needs the transport serve path; drop --fused")
+    if args.fused and args.pipeline_depth > 1:
+        ap.error("--pipeline-depth needs the transport serve path; "
+                 "drop --fused")
 
     # ---- task + local surrogate (paper §4.1: input-domain-reduced) ----
     vocab, seq, ncls = 512, 48, 8
@@ -177,7 +186,10 @@ def main(argv=None) -> int:
             # key on token content only: the per-request "idx" (oracle-head
             # plumbing) would make every key unique and the cache cold
             cache = RemoteResponseCache(
-                args.cache_size, key_fn=lambda row: content_key(row["tokens"]))
+                args.cache_size,
+                key_fn=lambda row: content_key(row["tokens"]),
+                key_batch_fn=lambda batch, n: content_keys(batch["tokens"],
+                                                           n))
     if args.adaptive:
         controller = AdaptiveController(ControllerConfig(
             target_remote_fraction=args.remote_budget,
@@ -192,7 +204,8 @@ def main(argv=None) -> int:
                         cache=cache)
     if t_local is not None:
         eng.set_local_threshold(t_local)
-    sched = MicrobatchScheduler(eng, fallback=lambda r: -1)
+    sched = MicrobatchScheduler(eng, fallback=lambda r: -1,
+                                pipeline_depth=args.pipeline_depth)
 
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -219,6 +232,11 @@ def main(argv=None) -> int:
           f"would be ${st.requests * eng.cost.remote_cost_per_request:.4f})")
     print(f"[serve] modelled mean latency: {st.mean_latency_s * 1e3:.0f} ms "
           f"(remote-only {eng.cost.remote_latency_s * 1e3:.0f} ms)")
+    print(f"[serve] measured wall latency: "
+          f"p50 {st.wall_percentile(50) * 1e3:.0f} ms, "
+          f"p95 {st.wall_percentile(95) * 1e3:.0f} ms "
+          f"(throughput {len(responses) / max(wall, 1e-9):.0f} req/s, "
+          f"pipeline depth {args.pipeline_depth})")
     if transport is not None:
         ts = transport.stats
         print(f"[serve] transport: {ts.windows} windows, "

@@ -7,7 +7,8 @@ Composes with ``repro.serving.engine.CascadeEngine`` (see DESIGN.md):
   * cache       — content-keyed dedup of billed remote calls
 """
 
-from repro.runtime.cache import CacheStats, RemoteResponseCache, content_key
+from repro.runtime.cache import (CacheStats, RemoteResponseCache,
+                                 content_key, content_keys)
 from repro.runtime.calibration import (OperatingPoint, calibrate,
                                        pareto_frontier,
                                        select_operating_point,
@@ -18,13 +19,14 @@ from repro.runtime.controller import (AdaptiveController, ControllerConfig,
 from repro.runtime.transport import (CircuitBreaker, CircuitOpenError,
                                      RemoteCallError, RemoteTimeout,
                                      RemoteTransport, TransportConfig,
-                                     TransportStats)
+                                     TransportFuture, TransportStats)
 
 __all__ = [
     "AdaptiveController", "CacheStats", "CircuitBreaker", "CircuitOpenError",
     "ControllerConfig", "ControllerState", "OperatingPoint",
     "RemoteCallError", "RemoteResponseCache", "RemoteTimeout",
-    "RemoteTransport", "TransportConfig", "TransportStats", "calibrate",
-    "content_key", "pareto_frontier", "population_stability_index",
+    "RemoteTransport", "TransportConfig", "TransportFuture",
+    "TransportStats", "calibrate", "content_key", "content_keys",
+    "pareto_frontier", "population_stability_index",
     "select_operating_point", "sweep_operating_points",
 ]

@@ -28,6 +28,45 @@ def content_key(row: Any) -> bytes:
     return h.digest()
 
 
+def content_keys(batch: Any, rows: int) -> list[bytes]:
+    """Batched ``content_key`` over the leading axis of a stacked pytree.
+
+    Produces byte-identical digests to ``content_key(row_i)`` where
+    ``row_i`` is the i-th row of every leaf, but walks the tree ONCE:
+    per-leaf header bytes (dtype + row shape) are computed a single time
+    and each row is hashed from a contiguous slice — no per-row
+    ``tree.map`` materialisation, no per-row re-layout. This is the hot
+    path of the vectorised escalation gather (DESIGN.md §5).
+    """
+    hs = [hashlib.blake2b(digest_size=16) for _ in range(rows)]
+    _update_batched(hs, batch)
+    return [h.digest() for h in hs]
+
+
+def _update_batched(hs: list, node: Any) -> None:
+    if isinstance(node, dict):
+        for k in sorted(node):
+            enc = repr(k).encode()
+            for h in hs:
+                h.update(enc)
+            _update_batched(hs, node[k])
+    elif isinstance(node, (list, tuple)):
+        for h in hs:
+            h.update(b"[")
+        for item in node:
+            _update_batched(hs, item)
+        for h in hs:
+            h.update(b"]")
+    else:
+        a = np.ascontiguousarray(np.asarray(node))
+        if a.shape[0] < len(hs):
+            raise ValueError(f"leaf has {a.shape[0]} rows; need {len(hs)}")
+        head = str(a.dtype).encode() + repr(a.shape[1:]).encode()
+        for i, h in enumerate(hs):
+            h.update(head)
+            h.update(a[i].tobytes())
+
+
 def _update(h, node: Any) -> None:
     if isinstance(node, dict):
         for k in sorted(node):
@@ -43,6 +82,15 @@ def _update(h, node: Any) -> None:
         h.update(str(a.dtype).encode())
         h.update(repr(a.shape).encode())
         h.update(np.ascontiguousarray(a).tobytes())
+
+
+def _row(node: Any, i: int) -> Any:
+    """Slice row i out of a stacked pytree (custom-key_fn fallback)."""
+    if isinstance(node, dict):
+        return {k: _row(v, i) for k, v in node.items()}
+    if isinstance(node, (list, tuple)):
+        return type(node)(_row(v, i) for v in node)
+    return np.asarray(node)[i]
 
 
 @dataclass
@@ -63,15 +111,33 @@ class RemoteResponseCache:
     content that identifies it (default: the whole pytree). Override it
     when the pytree carries non-semantic fields — e.g. a per-request uid
     — that would make every key unique and the cache structurally cold.
+
+    ``key_batch_fn(batch, rows) -> list[bytes]`` is the vectorised
+    counterpart over a stacked sub-batch; supply it alongside a custom
+    ``key_fn`` to keep the serving hot path free of per-row pytree
+    slicing (the default pairing ``content_key``/``content_keys`` is
+    wired automatically).
     """
 
-    def __init__(self, capacity: int = 4096, key_fn=content_key):
+    def __init__(self, capacity: int = 4096, key_fn=content_key,
+                 key_batch_fn=None):
         if capacity < 1:
             raise ValueError("cache capacity must be >= 1")
         self.capacity = capacity
         self.key_fn = key_fn
+        if key_batch_fn is None and key_fn is content_key:
+            key_batch_fn = content_keys
+        self.key_batch_fn = key_batch_fn
         self.stats = CacheStats()
         self._store: OrderedDict[bytes, np.ndarray] = OrderedDict()
+
+    def keys_for(self, batch: Any, rows: int) -> list[bytes]:
+        """Keys for the leading ``rows`` of a stacked request pytree —
+        batched when a ``key_batch_fn`` is available, else a per-row
+        fallback through ``key_fn``."""
+        if self.key_batch_fn is not None:
+            return self.key_batch_fn(batch, rows)
+        return [self.key_fn(_row(batch, i)) for i in range(rows)]
 
     def __len__(self) -> int:
         return len(self._store)

@@ -18,13 +18,23 @@ A failed window does NOT drop its requests: the engine maps them to the
 REJECTED/fallback path of Algorithm 1 (the 2nd-level supervisor's "raise
 Exception" branch), which the scheduler resolves via the fallback callable.
 
+For the pipelined serving path (DESIGN.md §5) the transport also exposes a
+non-blocking futures API: ``submit(batch)`` schedules the same windowed /
+retried / breaker-guarded ``call`` on a thread pool and returns a
+``TransportFuture``; ``poll``/``result`` drain it. Breaker and stats
+mutations are lock-protected so concurrent in-flight windows stay
+consistent; the remote callable itself runs unlocked and must be
+thread-safe when ``max_concurrent > 1``.
+
 The clock and sleep functions are injectable so tests and benchmarks can
 run outage episodes deterministically without wall-clock waits.
 """
 
 from __future__ import annotations
 
+import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -54,6 +64,7 @@ class TransportConfig:
     retry_backoff_s: float = 0.02
     breaker_failures: int = 3     # consecutive window failures to open
     breaker_reset_s: float = 5.0  # open -> half-open after this long
+    max_concurrent: int = 8       # submit() thread-pool width
 
 
 @dataclass
@@ -115,6 +126,24 @@ def _slice(batch: Any, lo: int, hi: int) -> Any:
     return batch[lo:hi]
 
 
+class TransportFuture:
+    """Handle for one in-flight ``submit``; resolves to ``(logits, ok)``.
+
+    ``result`` never raises for remote faults — failures surface as
+    ``ok == False`` rows, exactly like the synchronous ``call``.
+    """
+
+    def __init__(self, future: Future, n: int):
+        self._future = future
+        self.n = n                # requests riding on this future
+
+    def done(self) -> bool:
+        return self._future.done()
+
+    def result(self, timeout: float | None = None):
+        return self._future.result(timeout)
+
+
 class RemoteTransport:
     """Windowed, retried, breaker-guarded wrapper over a remote callable.
 
@@ -122,6 +151,11 @@ class RemoteTransport:
     per-request success flags instead of an exception, so partial failures
     degrade to per-request fallback rather than batch loss. Rows with
     ``ok == False`` have zero logits and must not be trusted.
+
+    ``submit(batch)`` is the non-blocking variant: the same call runs on
+    a thread pool and the returned ``TransportFuture`` resolves to the
+    identical ``(logits, ok)`` pair — the pipelined engine keeps several
+    microbatches in flight this way (DESIGN.md §5).
     """
 
     def __init__(self, remote_apply: Callable, config: TransportConfig
@@ -133,6 +167,8 @@ class RemoteTransport:
         self.stats = TransportStats()
         self._clock = clock
         self._sleep = sleep
+        self._lock = threading.RLock()
+        self._pool: ThreadPoolExecutor | None = None
         self.breaker = CircuitBreaker(config.breaker_failures,
                                       config.breaker_reset_s, clock=clock)
 
@@ -152,26 +188,33 @@ class RemoteTransport:
         flaky window never opens the breaker on its own)."""
         last: Exception | None = None
         for attempt in range(1 + self.config.max_retries):
-            if not self.breaker.allow():
+            with self._lock:
+                allowed = self.breaker.allow()
+            if not allowed:
                 raise CircuitOpenError("circuit breaker open")
             try:
                 out = self._call_window(window)
             except RemoteTimeout as e:
-                self.stats.timeouts += 1
+                with self._lock:
+                    self.stats.timeouts += 1
                 last = e
             except CircuitOpenError:
                 raise
             except Exception as e:  # transient transport / remote error
-                self.stats.errors += 1
+                with self._lock:
+                    self.stats.errors += 1
                 last = e
             else:
-                self.breaker.record_success()
+                with self._lock:
+                    self.breaker.record_success()
                 return out
             if attempt < self.config.max_retries:
-                self.stats.retries += 1
+                with self._lock:
+                    self.stats.retries += 1
                 if self.config.retry_backoff_s > 0:
                     self._sleep(self.config.retry_backoff_s * (attempt + 1))
-        self.breaker.record_failure()
+        with self._lock:
+            self.breaker.record_failure()
         raise RemoteCallError(f"remote window failed after "
                               f"{1 + self.config.max_retries} attempts: "
                               f"{last!r}") from last
@@ -184,24 +227,30 @@ class RemoteTransport:
         w = max(1, self.config.max_in_flight)
         for lo in range(0, n, w):
             hi = min(lo + w, n)
-            self.stats.windows += 1
-            self.stats.requests += hi - lo
-            if not self.breaker.allow():
-                self.stats.short_circuited += hi - lo
-                self.stats.failed_requests += hi - lo
+            with self._lock:
+                self.stats.windows += 1
+                self.stats.requests += hi - lo
+                allowed = self.breaker.allow()
+            if not allowed:
+                with self._lock:
+                    self.stats.short_circuited += hi - lo
+                    self.stats.failed_requests += hi - lo
                 continue
             try:
                 out = self._call_with_retries(_slice(batch, lo, hi))
             except CircuitOpenError:
-                self.stats.short_circuited += hi - lo
-                self.stats.failed_requests += hi - lo
+                with self._lock:
+                    self.stats.short_circuited += hi - lo
+                    self.stats.failed_requests += hi - lo
                 continue
             except RemoteCallError:
-                self.stats.failed_requests += hi - lo
+                with self._lock:
+                    self.stats.failed_requests += hi - lo
                 continue
             ok[lo:hi] = True
             outs.append((lo, out))
-        self.stats.breaker_opens = self.breaker.opens
+        with self._lock:
+            self.stats.breaker_opens = self.breaker.opens
         if not outs:
             return None, ok
         width = outs[0][1].shape[1:]
@@ -209,3 +258,25 @@ class RemoteTransport:
         for lo, out in outs:
             logits[lo:lo + out.shape[0]] = out
         return logits, ok
+
+    def submit(self, batch: Any) -> TransportFuture:
+        """Non-blocking ``call``: schedule the batch on the thread pool and
+        return a future resolving to the same ``(logits, ok)`` pair."""
+        with self._lock:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=max(1, self.config.max_concurrent),
+                    thread_name_prefix="remote-transport")
+            pool = self._pool
+        return TransportFuture(pool.submit(self.call, batch), _rows(batch))
+
+    def poll(self, future: TransportFuture) -> bool:
+        """True iff the future's (logits, ok) is ready to drain."""
+        return future.done()
+
+    def shutdown(self, wait: bool = True) -> None:
+        """Tear down the submit() pool (in-flight calls finish if wait)."""
+        with self._lock:
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=wait)

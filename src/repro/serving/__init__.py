@@ -1,10 +1,11 @@
 """Two-tier cascade serving runtime."""
 
 from repro.serving.engine import (CascadeEngine, CascadeStats, CostModel,
-                                  make_cascade_step, make_local_step)
+                                  make_cascade_step, make_gated_local_step,
+                                  make_local_step)
 from repro.serving.generate import greedy_generate
 from repro.serving.scheduler import MicrobatchScheduler, Request, Response
 
 __all__ = ["CascadeEngine", "CascadeStats", "CostModel", "make_cascade_step",
-           "make_local_step", "greedy_generate", "MicrobatchScheduler",
-           "Request", "Response"]
+           "make_gated_local_step", "make_local_step", "greedy_generate",
+           "MicrobatchScheduler", "Request", "Response"]

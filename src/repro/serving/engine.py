@@ -10,18 +10,28 @@ The engine composes:
   * per-request cost/latency accounting mirroring the paper's billing
     model (Table 7 / §5.6) — padded scheduler rows are never billed.
 
-Two serve paths (DESIGN.md §2):
-  * fused   — ``make_cascade_step``: local + remote in one jitted step with
-    a static escalation capacity k (the seed behaviour; remote tier is an
-    infallible callable).
-  * runtime — local tier jitted, escalated sub-batch routed host-side
-    through ``RemoteResponseCache`` -> ``RemoteTransport``; failed windows
-    degrade to the REJECTED/fallback path; an ``AdaptiveController``
-    retunes ``t_local``/``t_remote``/capacity per control window.
+Three serve paths (DESIGN.md §2, §5):
+  * fused     — ``make_cascade_step``: local + remote in one jitted step
+    with a static escalation capacity k (the seed behaviour; remote tier
+    is an infallible callable).
+  * runtime   — local tier jitted behind the fused ``confidence_gate``
+    kernel (only the compact (conf, pred, idx) triple crosses the host
+    boundary), escalated sub-batch routed host-side through
+    ``RemoteResponseCache`` -> ``RemoteTransport``; failed windows degrade
+    to the REJECTED/fallback path; an ``AdaptiveController`` retunes
+    ``t_local``/``t_remote``/capacity per control window.
+  * pipelined — the runtime path split at the transport boundary:
+    ``begin_serve`` dispatches local compute + non-blocking remote
+    submission, ``complete_next`` drains in-flight windows strictly in
+    submission order, so batch i+1's local tier overlaps batch i's remote
+    round trip while accounting and controller observations stay
+    deterministic.
 """
 
 from __future__ import annotations
 
+import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -32,6 +42,7 @@ import numpy as np
 from repro.core.cascade import (combine_escalated, escalation_capacity,
                                 gather_requests, select_escalations)
 from repro.core.supervisors import SOFTMAX_SUPERVISORS
+from repro.kernels.confidence_gate.ops import confidence_gate
 
 
 @dataclass(frozen=True)
@@ -55,7 +66,12 @@ class CascadeStats:
     transport_failures: int = 0      # escalations lost to transport faults
     rejected: int = 0
     total_cost: float = 0.0
-    total_latency_s: float = 0.0
+    total_latency_s: float = 0.0     # modelled (CostModel constants)
+    wall_latency_s: float = 0.0      # measured request-seconds (timers)
+    # ring buffer of recent per-window wall times: percentiles stay
+    # representative of CURRENT behaviour on long-running servers
+    wall_samples: deque = field(
+        default_factory=lambda: deque(maxlen=65536), repr=False)
 
     @property
     def remote_fraction(self) -> float:
@@ -68,6 +84,25 @@ class CascadeStats:
     @property
     def mean_latency_s(self) -> float:
         return self.total_latency_s / max(self.requests, 1)
+
+    # -- measured wall-clock latency (vs the modelled numbers above) ----
+    def record_wall(self, window_wall_s: float, real: int) -> None:
+        """Fold one served window's measured wall time into the stats.
+        In pipelined mode this spans submit -> drain, so per-request wall
+        latency includes pipeline residency, not just compute."""
+        self.wall_latency_s += window_wall_s * real
+        self.wall_samples.append(float(window_wall_s))
+
+    @property
+    def mean_wall_latency_s(self) -> float:
+        return self.wall_latency_s / max(self.requests, 1)
+
+    def wall_percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of recent per-window wall latency."""
+        if not self.wall_samples:
+            return 0.0
+        return float(np.percentile(np.fromiter(self.wall_samples,
+                                               np.float64), q))
 
 
 def make_cascade_step(local_apply: Callable, remote_apply: Callable,
@@ -111,7 +146,8 @@ def make_cascade_step(local_apply: Callable, remote_apply: Callable,
 
 
 def make_local_step(local_apply: Callable, supervisor="max_softmax"):
-    """Jit-able local-tier-only step for the runtime serve path."""
+    """Jit-able local-tier-only step (legacy runtime path; returns the
+    full logits — prefer make_gated_local_step on the hot path)."""
     sup = (supervisor if callable(supervisor)
            else SOFTMAX_SUPERVISORS[supervisor])
 
@@ -122,6 +158,62 @@ def make_local_step(local_apply: Callable, supervisor="max_softmax"):
                 "local_logits": logits}
 
     return step
+
+
+def make_gated_local_step(local_apply: Callable, supervisor="max_softmax"):
+    """Jit-able local tier fused with the confidence gate: supervisor
+    scoring + thresholded ascending escalation ranking happen on device,
+    and only the compact ``(conf [B], pred [B], idx [B])`` triple crosses
+    the host boundary — never the ``[B, C]`` logits (DESIGN.md §5).
+
+    step(local_batch, t_local [f32 scalar, +inf = no threshold],
+         n_valid [i32 scalar]) -> {conf, pred, idx}; the scalars are
+    traced, so runtime retuning never recompiles.
+    """
+
+    def step(local_batch, t_local, n_valid):
+        logits = local_apply(local_batch)
+        return confidence_gate(logits, t_local, n_valid,
+                               supervisor=supervisor)
+
+    return step
+
+
+def _leading_rows(tree: Any) -> int:
+    if isinstance(tree, dict):
+        return _leading_rows(next(iter(tree.values())))
+    return int(tree.shape[0]) if hasattr(tree, "shape") else \
+        int(np.asarray(tree).shape[0])
+
+
+class _Resolved:
+    """Adapter giving a synchronous transport result the future API."""
+
+    def __init__(self, result):
+        self._result = result
+
+    def done(self) -> bool:
+        return True
+
+    def result(self, timeout=None):
+        return self._result
+
+
+@dataclass
+class _InFlight:
+    """One microbatch between begin_serve and its FIFO completion."""
+    t0: float
+    b: int                      # padded batch rows
+    real: int                   # genuine leading rows
+    conf: np.ndarray            # [b] 1st-level confidences
+    local_pred: np.ndarray      # [b] local predictions (never mutated)
+    pred: np.ndarray            # [b] served predictions (remote scattered)
+    idx: np.ndarray             # [k] escalated row indices (asc. conf)
+    k: int
+    keys: list | None           # cache keys per escalated row
+    cached: list | None         # cache hits / filled-in remote responses
+    miss: list                  # positions within idx that went remote
+    pending: Any                # TransportFuture | _Resolved | None
 
 
 class CascadeEngine:
@@ -141,13 +233,18 @@ class CascadeEngine:
                       transport=RemoteTransport(remote_apply),
                       controller=AdaptiveController(),
                       cache=RemoteResponseCache())
+
+    The runtime path can serve synchronously (``serve``) or pipelined
+    (``begin_serve`` / ``complete_next`` — DESIGN.md §5): completions
+    drain strictly in submission order, so results, stats and controller
+    state do not depend on remote completion order.
     """
 
     def __init__(self, local_apply, remote_apply=None, *, batch_size: int,
                  remote_fraction_budget: float,
                  t_remote: float, cost: CostModel = CostModel(),
                  supervisor="max_softmax", transport=None, controller=None,
-                 cache=None):
+                 cache=None, clock: Callable[[], float] = time.perf_counter):
         if remote_apply is None and transport is None:
             raise ValueError("need a remote tier: remote_apply or transport")
         self.batch_size = batch_size
@@ -160,16 +257,16 @@ class CascadeEngine:
         self.transport = transport
         self.controller = controller
         self.cache = cache
+        self._clock = clock
+        self._inflight: deque[_InFlight] = deque()
+        self._supervisor = (supervisor if callable(supervisor)
+                            else SOFTMAX_SUPERVISORS[supervisor])
         if transport is None:
             self._step = jax.jit(make_cascade_step(
                 local_apply, remote_apply, self.capacity, supervisor))
-            self._supervisor = (supervisor if callable(supervisor)
-                                else SOFTMAX_SUPERVISORS[supervisor])
         else:
-            self._local_step = jax.jit(make_local_step(local_apply,
-                                                       supervisor))
-            self._supervisor = (supervisor if callable(supervisor)
-                                else SOFTMAX_SUPERVISORS[supervisor])
+            self._local_step = jax.jit(make_gated_local_step(local_apply,
+                                                             supervisor))
 
     def set_remote_threshold(self, t: float) -> None:
         """Runtime reconfiguration (paper §4.5)."""
@@ -187,10 +284,41 @@ class CascadeEngine:
         but never counted or billed."""
         if self.transport is None:
             return self._serve_fused(batch, real_rows)
-        return self._serve_runtime(batch, real_rows)
+        if self._inflight:
+            raise RuntimeError("pipelined windows in flight; drain them "
+                               "with complete_next() before serve()")
+        return self._complete(self._begin(batch, real_rows,
+                                          asynchronous=False))
+
+    # -- pipelined runtime path (DESIGN.md §5) -------------------------
+    def begin_serve(self, batch: dict[str, Any],
+                    real_rows: int | None = None) -> _InFlight:
+        """Dispatch one microbatch: local tier + confidence gate, cache
+        lookups, and a NON-blocking remote submission for the misses.
+        Returns after local compute; the remote round trip stays on the
+        wire while subsequent batches begin."""
+        if self.transport is None:
+            raise RuntimeError("pipelined serving needs the runtime path "
+                               "(construct the engine with transport=...)")
+        fl = self._begin(batch, real_rows, asynchronous=True)
+        self._inflight.append(fl)
+        return fl
+
+    def complete_next(self) -> dict[str, np.ndarray] | None:
+        """Drain the OLDEST in-flight window (blocks until its remote
+        responses land). FIFO draining keeps accounting and controller
+        observations independent of remote completion order."""
+        if not self._inflight:
+            return None
+        return self._complete(self._inflight.popleft())
+
+    @property
+    def inflight(self) -> int:
+        return len(self._inflight)
 
     # -- fused path (seed semantics + padding-aware accounting) --------
     def _serve_fused(self, batch, real_rows):
+        t0 = self._clock()
         out = jax.device_get(self._step(batch))
         b = out["prediction"].shape[0]
         real = b if real_rows is None else min(real_rows, b)
@@ -199,82 +327,105 @@ class CascadeEngine:
         n_remote = int(escalated[:real].sum())
         self._account(real, n_remote, n_remote, 0, 0,
                       int((~accepted[:real]).sum()))
+        self.stats.record_wall(self._clock() - t0, real)
         if self.controller is not None:
             self.controller.observe(out["local_conf"][:real], n_remote,
                                     real, out["remote_conf"][:real])
         out["accepted"] = accepted
         return out
 
-    # -- runtime path (transport + cache + controller) -----------------
-    def _serve_runtime(self, batch, real_rows):
-        local = jax.device_get(self._local_step(batch["local"]))
-        conf = np.asarray(local["local_conf"])
-        pred = np.asarray(local["local_pred"]).copy()
-        b = conf.shape[0]
+    # -- runtime path: dispatch half -----------------------------------
+    def _begin(self, batch, real_rows, *, asynchronous: bool) -> _InFlight:
+        t0 = self._clock()
+        b = _leading_rows(batch["local"])
         real = b if real_rows is None else min(real_rows, b)
 
         # --- escalation set: controller threshold, capped by capacity ---
         capacity = (self.controller.capacity(self.batch_size)
                     if self.controller is not None else self.capacity)
         # calibrated warm start: engine t_local applies until the
-        # controller has produced its own (mirrors t_remote below)
+        # controller has produced its own (mirrors t_remote at complete)
         t_local = self.t_local
         if self.controller is not None and self.controller.t_local is not None:
             t_local = self.controller.t_local
-        order = np.argsort(conf[:real], kind="stable")
-        if t_local is None:
-            k = min(capacity, real)
-        else:
-            k = min(int((conf[:real] < t_local).sum()), capacity, real)
-        idx = order[:k]                      # k lowest-confidence real rows
+        t = np.float32(np.inf) if t_local is None else np.float32(t_local)
 
-        remote_conf = np.full((b,), np.inf, np.float32)
-        n_hits = n_sent = n_failed = 0
+        gate = jax.device_get(self._local_step(batch["local"], t,
+                                               np.int32(real)))
+        conf = np.asarray(gate["conf"])
+        local_pred = np.asarray(gate["pred"])
+        pred = local_pred.copy()
+        cand = np.asarray(gate["idx"])
+        cand = cand[cand >= 0]          # eligible rows, ascending by conf
+        k = int(min(cand.size, capacity, real))
+        idx = cand[:k]
+
+        keys = cached = None
+        miss: list[int] = []
+        pending = None
         if k > 0:
             host = jax.tree.map(np.asarray, batch["remote"])
-            rows = [jax.tree.map(lambda a: a[i], host) for i in idx]
-            keys = ([self.cache.key_fn(r) for r in rows]
-                    if self.cache is not None else [None] * k)
-            cached = [None if key is None else self.cache.get(key)
-                      for key in keys]
+            sub = jax.tree.map(lambda a: a[idx], host)   # batched gather
+            if self.cache is not None:
+                keys = self.cache.keys_for(sub, k)
+                cached = [self.cache.get(key) for key in keys]
+            else:
+                keys = [None] * k
+                cached = [None] * k
             miss = [j for j, c in enumerate(cached) if c is None]
             if miss:
-                sub = jax.tree.map(
-                    lambda *leaves: np.stack(leaves), *[rows[j] for j in miss])
-                logits, ok = self.transport.call(sub)
+                marr = np.asarray(miss)
+                sub_miss = jax.tree.map(lambda a: a[marr], sub)
+                pending = (self.transport.submit(sub_miss) if asynchronous
+                           else _Resolved(self.transport.call(sub_miss)))
+        return _InFlight(t0=t0, b=b, real=real, conf=conf,
+                         local_pred=local_pred, pred=pred, idx=idx, k=k,
+                         keys=keys, cached=cached, miss=miss,
+                         pending=pending)
+
+    # -- runtime path: completion half ---------------------------------
+    def _complete(self, fl: _InFlight) -> dict[str, np.ndarray]:
+        remote_conf = np.full((fl.b,), np.inf, np.float32)
+        n_hits = n_sent = n_failed = 0
+        if fl.k > 0:
+            cached = fl.cached
+            if fl.miss:
+                logits, ok = fl.pending.result()
                 n_sent = int(ok.sum())
-                n_failed = len(miss) - n_sent
-                for w, j in enumerate(miss):
+                n_failed = len(fl.miss) - n_sent
+                for w, j in enumerate(fl.miss):
                     if ok[w]:
                         cached[j] = logits[w]
                         if self.cache is not None:
-                            self.cache.put(keys[j], logits[w])
-            n_hits = k - len(miss)
+                            self.cache.put(fl.keys[j], logits[w])
+            n_hits = fl.k - len(fl.miss)
             got = [j for j, c in enumerate(cached) if c is not None]
             if got:
                 rlogits = jnp.asarray(np.stack([cached[j] for j in got]))
                 rconf = np.asarray(self._supervisor(rlogits))
                 rpred = np.asarray(jnp.argmax(rlogits, -1))
-                remote_conf[idx[got]] = rconf
-                pred[idx[got]] = rpred
+                remote_conf[fl.idx[got]] = rconf
+                fl.pred[fl.idx[got]] = rpred
             failed = [j for j, c in enumerate(cached) if c is None]
             # transport-lost escalations: 2nd supervisor can never trust
             # them -> REJECTED -> scheduler fallback (Algorithm 1 line 12)
-            remote_conf[idx[failed]] = -np.inf
+            remote_conf[fl.idx[failed]] = -np.inf
 
-        escalated = np.zeros((b,), bool)
-        escalated[idx] = True
+        escalated = np.zeros((fl.b,), bool)
+        escalated[fl.idx] = True
         t_remote = self.t_remote
         if self.controller is not None and self.controller.t_remote is not None:
             t_remote = self.controller.t_remote
         accepted = (~escalated) | (remote_conf > t_remote)
 
-        self._account(real, k, n_sent, n_hits, n_failed,
-                      int((~accepted[:real]).sum()))
+        self._account(fl.real, fl.k, n_sent, n_hits, n_failed,
+                      int((~accepted[:fl.real]).sum()))
+        self.stats.record_wall(self._clock() - fl.t0, fl.real)
         if self.controller is not None:
-            self.controller.observe(conf[:real], k, real, remote_conf[:real])
-        return {"prediction": pred, "local_pred": local["local_pred"],
-                "local_conf": conf, "remote_conf": remote_conf,
+            self.controller.observe(fl.conf[:fl.real], fl.k, fl.real,
+                                    remote_conf[:fl.real])
+        return {"prediction": fl.pred, "local_pred": fl.local_pred,
+                "local_conf": fl.conf, "remote_conf": remote_conf,
                 "escalated": escalated, "accepted": accepted}
 
     # ------------------------------------------------------------------

@@ -7,13 +7,23 @@ including the REJECTED -> fallback path (paper Algorithm 1 line 12).
 Transport failures surface as REJECTED too (DESIGN.md §3), so an outage
 degrades to fallback answers instead of dropped requests.
 
-The engine is told how many rows are genuine (``real_rows``) so padded
+The queue is a deque (an O(n^2) list-slice drain lived here once); the
+engine is told how many rows are genuine (``real_rows``) so padded
 replicas are never counted in the stats or billed against the remote tier.
+
+``flush(pipeline_depth=N)`` drives the engine's pipelined runtime path
+(DESIGN.md §5): up to N microbatches stay in flight — batch i+1's local
+tier runs while batch i's escalations are on the wire — and windows are
+drained strictly in submission order, so responses, stats and controller
+observations are identical regardless of remote completion order.
+``pipeline_depth`` doubles as the backpressure bound: submission stalls
+on the oldest window once N are outstanding.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable
 
 import numpy as np
@@ -44,10 +54,12 @@ class Response:
 
 
 class MicrobatchScheduler:
-    def __init__(self, engine, fallback: Callable[[Request], int] | None = None):
+    def __init__(self, engine, fallback: Callable[[Request], int] | None = None,
+                 pipeline_depth: int = 1):
         self.engine = engine
         self.fallback = fallback
-        self.queue: list[Request] = []
+        self.pipeline_depth = max(1, pipeline_depth)
+        self.queue: deque[Request] = deque()
         self.responses: dict[int, Response] = {}
         self.fallbacks = 0
 
@@ -58,35 +70,69 @@ class MicrobatchScheduler:
         b = self.engine.batch_size
         return reqs + [reqs[-1]] * (b - len(reqs))
 
-    def flush(self) -> list[Response]:
+    def _next_chunk(self) -> tuple[list[Request], dict[str, Any]]:
+        b = self.engine.batch_size
+        chunk = [self.queue.popleft()
+                 for _ in range(min(b, len(self.queue)))]
+        padded = self._pad(chunk)
+        batch = {
+            "local": _stack([r.local_input for r in padded]),
+            "remote": _stack([r.remote_input for r in padded]),
+        }
+        return chunk, batch
+
+    def _route(self, chunk: list[Request], res: dict) -> list[Response]:
+        out: list[Response] = []
+        for i, req in enumerate(chunk):
+            escalated = bool(res["escalated"][i])
+            accepted = bool(res["accepted"][i])
+            if not escalated:
+                src = "local"
+                pred = int(res["local_pred"][i])
+            elif accepted:
+                src = "remote"
+                pred = int(res["prediction"][i])
+            else:
+                src = "fallback"
+                self.fallbacks += 1
+                pred = (self.fallback(req) if self.fallback
+                        else -1)  # "raise Exception" analogue
+            resp = Response(req.uid, pred, src,
+                            float(res["local_conf"][i]),
+                            float(res["remote_conf"][i]))
+            self.responses[req.uid] = resp
+            out.append(resp)
+        return out
+
+    def flush(self, pipeline_depth: int | None = None) -> list[Response]:
+        depth = (self.pipeline_depth if pipeline_depth is None
+                 else max(1, pipeline_depth))
+        if depth > 1 and self.engine.transport is not None:
+            return self._flush_pipelined(depth)
         out: list[Response] = []
         while self.queue:
-            chunk = self.queue[: self.engine.batch_size]
-            self.queue = self.queue[self.engine.batch_size:]
-            real = len(chunk)
-            padded = self._pad(chunk)
-            batch = {
-                "local": _stack([r.local_input for r in padded]),
-                "remote": _stack([r.remote_input for r in padded]),
-            }
-            res = self.engine.serve(batch, real_rows=real)
-            for i, req in enumerate(chunk):
-                escalated = bool(res["escalated"][i])
-                accepted = bool(res["accepted"][i])
-                if not escalated:
-                    src = "local"
-                    pred = int(res["local_pred"][i])
-                elif accepted:
-                    src = "remote"
-                    pred = int(res["prediction"][i])
-                else:
-                    src = "fallback"
-                    self.fallbacks += 1
-                    pred = (self.fallback(req) if self.fallback
-                            else -1)  # "raise Exception" analogue
-                resp = Response(req.uid, pred, src,
-                                float(res["local_conf"][i]),
-                                float(res["remote_conf"][i]))
-                self.responses[req.uid] = resp
-                out.append(resp)
+            chunk, batch = self._next_chunk()
+            res = self.engine.serve(batch, real_rows=len(chunk))
+            out.extend(self._route(chunk, res))
+        return out
+
+    def _flush_pipelined(self, depth: int) -> list[Response]:
+        """Overlapped drain: keep up to ``depth`` microbatches in flight,
+        completing the oldest (FIFO) whenever the window is full or the
+        queue is empty. Responses come back in submission order."""
+        if self.engine.inflight:
+            # windows begun outside this flush (or left over from an
+            # aborted one) would silently pair with the wrong requests
+            raise RuntimeError(f"engine has {self.engine.inflight} "
+                               "in-flight windows not owned by this "
+                               "scheduler; drain complete_next() first")
+        out: list[Response] = []
+        pending: deque[list[Request]] = deque()
+        while self.queue or pending:
+            while self.queue and len(pending) < depth:
+                chunk, batch = self._next_chunk()
+                self.engine.begin_serve(batch, real_rows=len(chunk))
+                pending.append(chunk)
+            res = self.engine.complete_next()
+            out.extend(self._route(pending.popleft(), res))
         return out

@@ -9,6 +9,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.supervisors import SOFTMAX_SUPERVISORS
+from repro.kernels.confidence_gate.ops import confidence_gate
+from repro.kernels.confidence_gate.ref import confidence_gate_ref
 from repro.kernels.decode_attention.ops import decode_attn
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention.ops import attention
@@ -49,6 +52,76 @@ def test_maxconf_extreme_logits_stable():
     got = maxconf(logits, force_pallas=True, interpret=True)
     assert bool(jnp.all(jnp.isfinite(got["max_softmax"])))
     np.testing.assert_allclose(float(got["max_softmax"][0]), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------- confidence gate
+
+@pytest.mark.parametrize("supervisor", sorted(SOFTMAX_SUPERVISORS))
+@pytest.mark.parametrize("b,v", [(8, 128), (4, 512), (3, 100), (16, 1000)])
+def test_confidence_gate_matches_ref(supervisor, b, v):
+    logits = rnd(jax.random.fold_in(KEY, b * v), (b, v), scale=4.0)
+    got = confidence_gate(logits, supervisor=supervisor,
+                          force_pallas=True, interpret=True)
+    want = confidence_gate_ref(logits, supervisor=supervisor)
+    np.testing.assert_allclose(np.asarray(got["conf"]),
+                               np.asarray(want["conf"]),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got["pred"]),
+                                  np.asarray(want["pred"]))
+    np.testing.assert_array_equal(np.asarray(got["idx"]),
+                                  np.asarray(want["idx"]))
+
+
+@pytest.mark.parametrize("supervisor", sorted(SOFTMAX_SUPERVISORS))
+def test_confidence_gate_threshold_and_validity(supervisor):
+    """t_local gates eligibility; rows >= n_valid (padding) never appear;
+    unused slots are -1; idx ascends by confidence."""
+    b, v = 12, 256
+    logits = rnd(jax.random.fold_in(KEY, 99), (b, v), scale=4.0)
+    conf = np.asarray(SOFTMAX_SUPERVISORS[supervisor](logits))
+    n_valid, k = 9, 6
+    # threshold between two rows' confidences, never ON one (a t equal to
+    # a row's exact conf would flip on last-ulp kernel/ref differences)
+    srt = np.sort(conf[:n_valid])
+    t = float(0.5 * (srt[3] + srt[4]))
+    got = confidence_gate(logits, t, n_valid, supervisor=supervisor, k=k,
+                          force_pallas=True, interpret=True)
+    want = confidence_gate_ref(logits, t, n_valid, supervisor=supervisor,
+                               k=k)
+    np.testing.assert_array_equal(np.asarray(got["idx"]),
+                                  np.asarray(want["idx"]))
+    idx = np.asarray(got["idx"])
+    sel = idx[idx >= 0]
+    assert (sel < n_valid).all()
+    assert (conf[sel] < t).all()
+    assert (np.diff(conf[sel]) >= 0).all()          # ascending confidence
+    # every eligible valid row not selected has conf >= the selected max
+    rest = np.setdiff1d(np.arange(n_valid), sel)
+    if sel.size and sel.size < k:
+        assert (conf[rest] >= t).all()              # gate exhausted
+
+
+def test_confidence_gate_extreme_logits_stable():
+    logits = jnp.array([[1e4, -1e4, 0.0] + [0.0] * 125] * 8)
+    for sup in sorted(SOFTMAX_SUPERVISORS):
+        got = confidence_gate(logits, supervisor=sup, force_pallas=True,
+                              interpret=True)
+        assert bool(jnp.all(jnp.isfinite(got["conf"]))), sup
+
+
+def test_confidence_gate_callable_supervisor_falls_back():
+    """Callable supervisors (paper §4.2) take the jnp path everywhere."""
+    def margin(logits):
+        top2 = jax.lax.top_k(logits, 2)[0]
+        return top2[..., 0] - top2[..., 1]
+
+    logits = rnd(KEY, (8, 64), scale=2.0)
+    got = confidence_gate(logits, supervisor=margin, k=4, force_pallas=True)
+    want = confidence_gate_ref(logits, supervisor=margin, k=4)
+    np.testing.assert_allclose(np.asarray(got["conf"]),
+                               np.asarray(want["conf"]), rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got["idx"]),
+                                  np.asarray(want["idx"]))
 
 
 # -------------------------------------------------------------------- mdsa

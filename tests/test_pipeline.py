@@ -1,0 +1,328 @@
+"""Pipelined serving path (DESIGN.md §5): transport futures, overlapped
+engine windows, FIFO drain determinism — in-flight windows completing out
+of order must produce the same per-request responses, stats and
+controller state as serial execution — plus wall-clock latency tracking
+and the batched cache-key fast path."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteResponseCache, RemoteTimeout,
+                           RemoteTransport, TransportConfig, content_key,
+                           content_keys)
+from repro.serving.engine import CascadeEngine, CascadeStats
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+BILLING = ("requests", "escalations", "remote_calls", "cache_hits",
+           "transport_failures", "rejected", "total_cost")
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def build(remote=remote_apply, *, batch=8, budget=0.5, depth=1,
+          controller=None, cache=None, tconf=None):
+    transport = RemoteTransport(remote, tconf or TransportConfig(
+        retry_backoff_s=0.0, max_retries=0, breaker_failures=10**6,
+        timeout_s=60.0))
+    engine = CascadeEngine(local_apply, batch_size=batch,
+                           remote_fraction_budget=budget, t_remote=0.0,
+                           transport=transport, controller=controller,
+                           cache=cache)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7,
+                                pipeline_depth=depth)
+    return sched, engine, transport
+
+
+def serve_all(sched, xs):
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    return sched.flush()
+
+
+def routing(responses):
+    return [(r.uid, r.prediction, r.source) for r in responses]
+
+
+# ---------------------------------------------------- transport futures
+
+def test_transport_submit_returns_future_with_call_semantics():
+    tr = RemoteTransport(remote_apply, TransportConfig(retry_backoff_s=0.0))
+    x = np.float32(np.eye(4))
+    fut = tr.submit(x)
+    logits, ok = fut.result(timeout=10.0)
+    assert ok.all() and fut.done()
+    np.testing.assert_allclose(logits, 5.0 * np.eye(4))
+    assert fut.n == 4
+    l2, ok2 = tr.call(x)                    # sync path: same answers
+    np.testing.assert_allclose(logits, l2)
+    tr.shutdown()
+
+
+def test_transport_submits_run_concurrently():
+    gate = threading.Barrier(3, timeout=10.0)
+
+    def slow_remote(x):
+        gate.wait()                         # deadlocks unless concurrent
+        return remote_apply(x)
+
+    tr = RemoteTransport(slow_remote, TransportConfig(
+        retry_backoff_s=0.0, max_retries=0, max_concurrent=3))
+    futs = [tr.submit(np.float32(np.eye(4))) for _ in range(3)]
+    for f in futs:
+        _, ok = f.result(timeout=10.0)
+        assert ok.all()
+    tr.shutdown()
+
+
+def test_transport_future_fault_surfaces_as_ok_false():
+    def down(x):
+        raise RemoteTimeout("down")
+
+    tr = RemoteTransport(down, TransportConfig(retry_backoff_s=0.0,
+                                               max_retries=0))
+    logits, ok = tr.submit(np.float32(np.eye(4))).result(timeout=10.0)
+    assert not ok.any() and logits is None   # never raises
+    tr.shutdown()
+
+
+# --------------------------------------- pipelined == serial equivalence
+
+def test_pipelined_matches_serial_fixed_thresholds():
+    """No controller: deep pipeline must be bitwise-identical to serial
+    in responses AND billing, even when later windows complete first."""
+    rng = np.random.default_rng(0)
+    xs, _ = make_stream(rng, 64)
+
+    calls = {"n": 0}
+
+    def reordering_remote(x):
+        # earlier submissions sleep longer -> completion order inverted
+        calls["n"] += 1
+        time.sleep(0.03 * max(0, 4 - calls["n"]))
+        return remote_apply(x)
+
+    s_ser, e_ser, _ = build(batch=8, depth=1)
+    s_pip, e_pip, tr = build(reordering_remote, batch=8, depth=4)
+    r_ser = serve_all(s_ser, xs)
+    r_pip = serve_all(s_pip, xs)
+    assert routing(r_ser) == routing(r_pip)
+    for f in BILLING:
+        assert getattr(e_ser.stats, f) == getattr(e_pip.stats, f), f
+    tr.shutdown()
+
+
+def test_pipelined_depth1_matches_serial_with_controller_and_faults():
+    """depth=1 drains each window before the next submit, so even the
+    controller's closed loop sees exactly the serial observation order
+    under seeded per-content transport faults."""
+    rng = np.random.default_rng(1)
+    xs, _ = make_stream(rng, 96)
+
+    def flaky(x):                 # deterministic per-content fault hook
+        x = np.asarray(x)
+        if float(x.sum()) % 1.0 < 0.25:
+            raise RemoteTimeout("content-keyed fault")
+        return remote_apply(x)
+
+    def make(depth):
+        ctl = AdaptiveController(ControllerConfig(
+            target_remote_fraction=0.3, window=32))
+        return build(flaky, batch=8, budget=0.5, depth=depth,
+                     controller=ctl, tconf=TransportConfig(
+                         retry_backoff_s=0.0, max_retries=0,
+                         max_in_flight=2, breaker_failures=10**6,
+                         timeout_s=60.0))
+
+    s_ser, e_ser, _ = make(1)
+    r_ser = serve_all(s_ser, xs)
+    s_pip, e_pip, tr = make(1)
+    for i, row in enumerate(xs):
+        s_pip.submit(Request(uid=i, local_input=row, remote_input=row))
+    r_pip = s_pip.flush(pipeline_depth=1)
+    assert routing(r_ser) == routing(r_pip)
+    for f in BILLING:
+        assert getattr(e_ser.stats, f) == getattr(e_pip.stats, f), f
+    assert e_ser.controller.state == e_pip.controller.state
+    tr.shutdown()
+
+
+def test_pipelined_deterministic_across_completion_orders():
+    """Same stream, same depth, adversarially different remote completion
+    orders: FIFO drain must make responses, stats AND controller state
+    identical — completion order can never leak into accounting."""
+    rng = np.random.default_rng(2)
+    xs, _ = make_stream(rng, 96)
+
+    def delays_a(i):
+        return 0.002 * (i % 5)
+
+    def delays_b(i):
+        return 0.002 * (4 - i % 5)          # inverted completion order
+
+    def run(delays):
+        calls = {"n": 0}
+        lock = threading.Lock()
+
+        def remote(x):
+            with lock:
+                calls["n"] += 1
+                i = calls["n"]
+            time.sleep(delays(i))
+            x = np.asarray(x)
+            if float(x.sum()) % 1.0 < 0.2:  # seeded per-content faults
+                raise RemoteTimeout("content-keyed fault")
+            return remote_apply(x)
+
+        ctl = AdaptiveController(ControllerConfig(
+            target_remote_fraction=0.3, window=32))
+        sched, engine, tr = build(remote, batch=8, budget=0.5, depth=4,
+                                  controller=ctl)
+        resp = serve_all(sched, xs)
+        tr.shutdown()
+        return resp, engine
+
+    r_a, e_a = run(delays_a)
+    r_b, e_b = run(delays_b)
+    assert routing(r_a) == routing(r_b)
+    for f in BILLING:
+        assert getattr(e_a.stats, f) == getattr(e_b.stats, f), f
+    assert e_a.controller.state == e_b.controller.state
+
+
+def test_pipelined_outage_degrades_to_fallback_without_drops():
+    rng = np.random.default_rng(3)
+    xs, _ = make_stream(rng, 20)            # padding tail too
+
+    def down(x):
+        raise RemoteTimeout("down")
+
+    sched, engine, tr = build(down, batch=8, depth=4)
+    responses = serve_all(sched, xs)
+    assert sorted(r.uid for r in responses) == list(range(20))  # no drops
+    assert {r.source for r in responses} == {"local", "fallback"}
+    for r in responses:
+        if r.source == "fallback":
+            assert r.prediction == -7
+    assert engine.stats.remote_calls == 0 and engine.stats.total_cost == 0
+    assert engine.stats.transport_failures == sched.fallbacks
+    tr.shutdown()
+
+
+def test_engine_rejects_serve_while_windows_in_flight():
+    rng = np.random.default_rng(4)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    _, engine, tr = build(batch=8)
+    engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    with pytest.raises(RuntimeError):
+        engine.serve({"local": xs, "remote": xs})
+    assert engine.inflight == 1
+    assert engine.complete_next() is not None
+    assert engine.complete_next() is None   # drained
+    tr.shutdown()
+
+
+# ------------------------------------------------ wall-clock latency
+
+def test_wall_clock_latency_tracked_alongside_modelled():
+    rng = np.random.default_rng(5)
+    xs, _ = make_stream(rng, 32)
+
+    def slow(x):
+        time.sleep(0.01)
+        return remote_apply(x)
+
+    sched, engine, tr = build(slow, batch=8, depth=1)
+    serve_all(sched, xs)
+    st = engine.stats
+    assert st.wall_latency_s > 0.0
+    assert st.mean_wall_latency_s > 0.0
+    assert len(st.wall_samples) == 4        # one per microbatch window
+    assert st.wall_percentile(95) >= st.wall_percentile(50) > 0.0
+    # modelled latency still follows the CostModel constants, untouched
+    np.testing.assert_allclose(
+        st.total_latency_s,
+        st.requests * engine.cost.local_latency_s
+        + st.remote_calls * engine.cost.remote_latency_s)
+    tr.shutdown()
+
+
+def test_wall_stats_empty_percentile_is_zero():
+    st = CascadeStats()
+    assert st.wall_percentile(50) == 0.0
+    assert st.mean_wall_latency_s == 0.0
+
+
+# ------------------------------------------------ batched cache keys
+
+def test_content_keys_match_per_row_content_key():
+    rng = np.random.default_rng(6)
+    batch = {"tokens": rng.integers(0, 99, (5, 7)).astype(np.int32),
+             "extra": [np.float32(rng.normal(0, 1, (5, 3))),
+                       np.arange(5, dtype=np.int64)]}
+    got = content_keys(batch, 5)
+    want = [content_key({"tokens": batch["tokens"][i],
+                         "extra": [batch["extra"][0][i],
+                                   batch["extra"][1][i]]})
+            for i in range(5)]
+    assert got == want
+
+
+def test_cache_keys_for_batched_and_fallback_agree():
+    rng = np.random.default_rng(7)
+    batch = rng.normal(0, 1, (6, 4)).astype(np.float32)
+    fast = RemoteResponseCache(16)                   # content_key pairing
+    slow = RemoteResponseCache(16, key_fn=content_key, key_batch_fn=None)
+    slow.key_batch_fn = None                         # force per-row path
+    assert fast.keys_for(batch, 6) == slow.keys_for(batch, 6)
+    assert fast.keys_for(batch, 6) == [content_key(batch[i])
+                                       for i in range(6)]
+
+
+def test_pipelined_cache_still_dedups_within_drained_windows():
+    """Serial-equivalent cache billing at depth=1; at depth>1 lookups may
+    race puts from still-in-flight windows (documented bounded staleness)
+    but repeats across already-drained windows must still hit."""
+    rng = np.random.default_rng(8)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    cache = RemoteResponseCache(64)
+    sched, engine, tr = build(batch=8, depth=4, cache=cache)
+    serve_all(sched, xs)                    # all escalate, all miss
+    billed_first = engine.stats.remote_calls
+    serve_all(sched, xs)                    # identical content again
+    assert engine.stats.remote_calls == billed_first
+    assert engine.stats.cache_hits >= 4
+    tr.shutdown()
+
+
+# ------------------------------------------------ scheduler queue drain
+
+def test_flush_drains_large_queue_in_order():
+    rng = np.random.default_rng(9)
+    xs, _ = make_stream(rng, 203)           # non-multiple tail
+    sched, engine, tr = build(batch=8, depth=4)
+    responses = serve_all(sched, xs)
+    assert [r.uid for r in responses] == list(range(203))
+    assert engine.stats.requests == 203
+    assert len(sched.queue) == 0
+    tr.shutdown()
