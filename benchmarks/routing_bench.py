@@ -1,0 +1,250 @@
+"""Multi-remote routing benchmark (ISSUE 3 acceptance; DESIGN.md §6).
+
+Two fake remote backends serve the SAME pipelined request stream:
+
+  primary   — cheap and slow  ($0.002/call, 80 ms round trip);
+  secondary — expensive, fast ($0.008/call, 20 ms round trip).
+
+Policy ``cheapest-available`` prefers the primary. Mid-run the primary
+suffers an outage: its breaker opens and the router speculatively fails
+over to the secondary *at submit time*; after the outage ends the
+half-open probe closes the breaker and traffic fails back to the cheap
+backend automatically. A single-remote baseline (primary only, same
+outage) shows what the registry buys: escalations that the baseline
+degrades to fallback are instead served — at the secondary's price.
+
+The run VERIFIES the routing acceptance criteria:
+  * zero dropped requests in all phases;
+  * failover to the secondary while the primary breaker is open;
+  * automatic fail-back after half-open recovery;
+  * per-backend billing sums exactly to ``total_cost``
+    (``escalations = Σ_backends remote_calls + cache_hits + failures``).
+
+Machine-readable results (throughput, realised $ cost, per-backend
+calls / p95 latency / latency EMA, fallback counts vs the single-remote
+baseline) are written to ``BENCH_routing.json``.
+
+    PYTHONPATH=src python -m benchmarks.routing_bench \
+        [--requests 576] [--depth 4] [--json BENCH_routing.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import RemoteBackend, RemoteRouter, RemoteTimeout, \
+    TransportConfig
+from repro.serving.engine import CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+BATCH = 32
+NCLS = 8
+TARGET = 0.20                   # escalation fraction (capacity-k)
+PRIMARY_COST, PRIMARY_LAT = 0.002, 0.08
+SECONDARY_COST, SECONDARY_LAT = 0.008, 0.02
+BREAKER_RESET_S = 0.4
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def make_load(rng, n, hard_frac=0.3):
+    labels = rng.integers(0, NCLS, n)
+    x = rng.normal(0, 0.05, (n, NCLS))
+    margin = np.where(rng.random(n) < hard_frac,
+                      rng.uniform(0.05, 0.4, n), rng.uniform(2.0, 4.0, n))
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def make_backends(outage):
+    def primary_fn(x):
+        if outage["on"]:
+            raise RemoteTimeout("primary outage")
+        time.sleep(PRIMARY_LAT)
+        return 5.0 * np.asarray(x)
+
+    def secondary_fn(x):
+        time.sleep(SECONDARY_LAT)
+        return 5.0 * np.asarray(x)
+
+    tconf = TransportConfig(max_in_flight=BATCH, max_retries=0,
+                            retry_backoff_s=0.0, timeout_s=10.0,
+                            breaker_failures=2,
+                            breaker_reset_s=BREAKER_RESET_S)
+    primary = RemoteBackend("primary", primary_fn, tconf,
+                            cost_per_request=PRIMARY_COST,
+                            latency_s=PRIMARY_LAT)
+    secondary = RemoteBackend("secondary", secondary_fn, tconf,
+                              cost_per_request=SECONDARY_COST,
+                              latency_s=SECONDARY_LAT)
+    return primary, secondary
+
+
+def _run(xs_phases, outage, router, depth):
+    """Serve three phases (pre / outage / post) through one engine."""
+    engine = CascadeEngine(local_apply, batch_size=BATCH,
+                           remote_fraction_budget=TARGET, t_remote=0.0,
+                           transport=router)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -1,
+                                pipeline_depth=depth)
+    # warm the jit cache out of band, then reset accounting
+    engine.serve({"local": xs_phases[0][:BATCH],
+                  "remote": xs_phases[0][:BATCH]})
+    engine.stats = type(engine.stats)()
+
+    uid = 0
+    answered = 0
+    fallbacks = {}
+    calls_after = {}
+    t0 = time.perf_counter()
+    for phase, xs in zip(("pre", "outage", "post"), xs_phases):
+        outage["on"] = phase == "outage"
+        if phase == "post":
+            time.sleep(BREAKER_RESET_S + 0.1)   # let the breaker half-open
+        for row in xs:
+            sched.submit(Request(uid=uid, local_input=row, remote_input=row))
+            uid += 1
+        responses = sched.flush()
+        answered += len(responses)
+        fallbacks[phase] = sum(r.source == "fallback" for r in responses)
+        calls_after[phase] = {
+            u: engine.stats.per_backend[u].remote_calls
+            if u in engine.stats.per_backend else 0
+            for u in ("primary", "secondary")}
+    wall = time.perf_counter() - t0
+    engine.close()
+    return {"engine": engine, "wall": wall, "submitted": uid,
+            "answered": answered, "fallbacks": fallbacks,
+            "calls_after_phase": calls_after}
+
+
+def run(verbose: bool = True, requests: int = 576, depth: int = 4,
+        json_path: str | None = "BENCH_routing.json") -> dict:
+    rng = np.random.default_rng(0)
+    per_phase = max(requests // 3, BATCH)
+    xs_phases = [make_load(rng, per_phase)[0] for _ in range(3)]
+
+    # --- routed: two-backend registry, cheapest-available ---
+    outage = {"on": False}
+    primary, secondary = make_backends(outage)
+    router = RemoteRouter([primary, secondary],
+                          policy="cheapest-available")
+    routed = _run(xs_phases, outage, router, depth)
+
+    # --- baseline: single remote (primary only), same outage ---
+    outage_b = {"on": False}
+    primary_b, _ = make_backends(outage_b)
+    router_b = RemoteRouter([primary_b])
+    baseline = _run(xs_phases, outage_b, router_b, depth)
+
+    st = routed["engine"].stats
+    ca = routed["calls_after_phase"]
+    backends = {}
+    for b in router:
+        u = st.per_backend.get(b.name)
+        backends[b.name] = {
+            "cost_per_request": b.cost_per_request,
+            "remote_calls": u.remote_calls if u else 0,
+            "cache_hits": u.cache_hits if u else 0,
+            "transport_failures": u.transport_failures if u else 0,
+            "billed_cost": u.cost if u else 0.0,
+            "p95_remote_latency_s": b.stats.latency_percentile(95),
+            "latency_ema_s": b.stats.latency_ema_s,
+            "breaker_opens": b.stats.breaker_opens,
+        }
+    attributed = sum(u.remote_calls + u.cache_hits + u.transport_failures
+                     for u in st.per_backend.values())
+    checks = {
+        "zero_dropped": (routed["answered"] == routed["submitted"]
+                         and baseline["answered"] == baseline["submitted"]),
+        # the secondary only serves while the primary breaker is open
+        "failover_to_secondary": (ca["outage"]["secondary"]
+                                  > ca["pre"]["secondary"] == 0),
+        # the primary serves again after half-open recovery
+        "failback_to_primary": (ca["post"]["primary"]
+                                > ca["outage"]["primary"]),
+        "billing_sums_to_total": abs(
+            st.total_cost - sum(v["billed_cost"]
+                                for v in backends.values())) < 1e-9,
+        "escalations_attributed": attributed == st.escalations,
+        # escalations the baseline lost to fallback, the router served
+        "fewer_fallbacks_than_baseline": (
+            routed["fallbacks"]["outage"]
+            < baseline["fallbacks"]["outage"]),
+    }
+    st_b = baseline["engine"].stats
+    report = {
+        "batch_size": BATCH,
+        "pipeline_depth": depth,
+        "target_escalation_fraction": TARGET,
+        "requests": routed["submitted"],
+        "routed": {
+            "policy": router.policy,
+            "wall_s": routed["wall"],
+            "throughput_rps": routed["submitted"] / routed["wall"],
+            "total_cost": st.total_cost,
+            "remote_calls": st.remote_calls,
+            "transport_failures": st.transport_failures,
+            "fallbacks": routed["fallbacks"],
+            "router_failovers": router.stats.failovers,
+            "router_unrouted": router.stats.unrouted,
+            "backends": backends,
+        },
+        "single_remote_baseline": {
+            "wall_s": baseline["wall"],
+            "throughput_rps": baseline["submitted"] / baseline["wall"],
+            "total_cost": st_b.total_cost,
+            "remote_calls": st_b.remote_calls,
+            "transport_failures": st_b.transport_failures,
+            "fallbacks": baseline["fallbacks"],
+        },
+        "checks": checks,
+        "passed": all(checks.values()),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+    if verbose:
+        print(f"\n--- Routing: failover vs single remote "
+              f"({routed['submitted']} requests, {TARGET:.0%} escalation, "
+              f"mid-run primary outage, depth {depth}) ---")
+        print(f"{'path':>10} {'req/s':>8} {'cost':>9} {'fallbacks':>22}")
+        print(f"{'routed':>10} {report['routed']['throughput_rps']:8.1f} "
+              f"${st.total_cost:8.4f} {str(routed['fallbacks']):>22}")
+        print(f"{'baseline':>10} "
+              f"{report['single_remote_baseline']['throughput_rps']:8.1f} "
+              f"${st_b.total_cost:8.4f} {str(baseline['fallbacks']):>22}")
+        for name, v in backends.items():
+            print(f"  {name}: {v['remote_calls']} calls "
+                  f"(${v['billed_cost']:.4f}), "
+                  f"{v['transport_failures']} failures, "
+                  f"p95 {v['p95_remote_latency_s'] * 1e3:.0f} ms, "
+                  f"ema {0.0 if v['latency_ema_s'] is None else v['latency_ema_s'] * 1e3:.0f} ms, "
+                  f"breaker opens {v['breaker_opens']}")
+        print(f"checks: {checks}"
+              + (f"; JSON -> {json_path}" if json_path else ""))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=576)
+    ap.add_argument("--depth", type=int, default=4,
+                    help="pipelined in-flight microbatch window")
+    ap.add_argument("--json", default="BENCH_routing.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args(argv)
+    report = run(requests=args.requests, depth=args.depth,
+                 json_path=args.json or None)
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -12,6 +12,9 @@
               circuit breaker, remote-response cache — DESIGN.md)
   serving     pipelined vs serial serving path (throughput, p50/p95 wall
               latency — DESIGN.md §5; also writes BENCH_serving.json)
+  routing     multi-remote failover vs single remote under a primary
+              outage (throughput, realised $ cost, per-backend p95 —
+              DESIGN.md §6; also writes BENCH_routing.json)
   roofline    dry-run roofline summary (reads results/dryrun_matrix.jsonl
               if present)
 """
@@ -25,11 +28,11 @@ import sys
 import time
 
 from benchmarks import (inventory, kernels_bench, latency, rac,
-                        runtime_bench, serving_bench, supervised,
-                        supervisor_comparison)
+                        routing_bench, runtime_bench, serving_bench,
+                        supervised, supervisor_comparison)
 
 ALL = ("inventory", "rac", "supervised", "supervisors", "latency",
-       "kernels", "runtime", "serving", "roofline")
+       "kernels", "runtime", "serving", "routing", "roofline")
 
 
 def roofline_summary(verbose: bool = True) -> list[dict]:
@@ -85,6 +88,8 @@ def main(argv=None) -> int:
             results[name] = runtime_bench.run()
         elif name == "serving":
             results[name] = serving_bench.run(requests=512)
+        elif name == "routing":
+            results[name] = routing_bench.run()
         elif name == "roofline":
             results[name] = roofline_summary()
         else:

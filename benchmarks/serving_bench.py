@@ -103,6 +103,12 @@ def _metrics(tag, responses, engine, wall, n) -> dict:
         "escalation_fraction": st.escalation_fraction,
         "remote_calls": st.remote_calls,
         "total_cost": st.total_cost,
+        # per-backend measured remote latency (TransportStats), so the
+        # latency-ema routing policy is observable in bench JSON
+        "backend_remote_latency": {
+            b.name: {"p95_s": b.stats.latency_percentile(95),
+                     "ema_s": b.stats.latency_ema_s}
+            for b in engine.router},
     }
 
 

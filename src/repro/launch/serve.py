@@ -15,6 +15,13 @@ Runtime control plane (DESIGN.md):
   --fused           bypass the transport: seed-style fully-jitted cascade
   --pipeline-depth  overlap local compute with remote round trips
                     (N microbatches in flight, FIFO drain — DESIGN.md §5)
+  --remote          repeatable "name:cost:latency" backend spec building a
+                    multi-remote registry (cost $/req, latency modelled s;
+                    either may be empty for the CostModel default) —
+                    DESIGN.md §6
+  --route-policy    primary-failover | cheapest-available | latency-ema
+  --cost-budget     hold a dollar budget ($/req) instead of a remote
+                    fraction (controller + calibration)
 
 On this CPU container use ``--smoke`` (reduced remote config).
 
@@ -38,8 +45,9 @@ from repro.data.synthetic import make_classification_task
 from repro.launch.mesh import axis_type_kwargs
 from repro.models import surrogate as S
 from repro.models import transformer as T
-from repro.runtime import (AdaptiveController, ControllerConfig,
-                           RemoteResponseCache, RemoteTransport,
+from repro.runtime import (ROUTE_POLICIES, AdaptiveController,
+                           ControllerConfig, RemoteBackend,
+                           RemoteResponseCache, RemoteRouter,
                            TransportConfig, calibrate, content_key,
                            content_keys)
 from repro.serving.engine import CascadeEngine, CostModel
@@ -63,6 +71,19 @@ def train_surrogate(cfg, toks, labels, steps=60, lr=3e-3, seed=0):
     for i in range(steps):
         params, opt, loss = step(params, opt, toks, labels)
     return params, float(loss)
+
+
+def parse_remote_spec(spec: str) -> tuple[str, float | None, float | None]:
+    """One ``--remote`` spec: ``name[:cost[:latency]]`` — cost in $/call,
+    latency in modelled round-trip seconds; empty fields fall back to the
+    ``CostModel`` defaults."""
+    parts = spec.split(":")
+    if len(parts) > 3 or not parts[0]:
+        raise ValueError(f"bad --remote spec {spec!r}; "
+                         f"expected name[:cost[:latency]]")
+    cost = float(parts[1]) if len(parts) > 1 and parts[1] else None
+    latency = float(parts[2]) if len(parts) > 2 and parts[2] else None
+    return parts[0], cost, latency
 
 
 def main(argv=None) -> int:
@@ -99,12 +120,34 @@ def main(argv=None) -> int:
                     help="consecutive window failures that open the breaker")
     ap.add_argument("--breaker-reset", type=float, default=5.0,
                     help="seconds before the open breaker half-opens")
+    # ---- multi-remote registry (DESIGN.md §6) ----
+    ap.add_argument("--remote", action="append", default=None,
+                    metavar="NAME:COST:LATENCY",
+                    help="remote backend spec, repeatable: per-call $ and "
+                         "modelled round-trip s (empty fields = CostModel "
+                         "defaults), e.g. --remote cheap:0.002:0.4 "
+                         "--remote fast:0.008:0.1")
+    ap.add_argument("--route-policy", default="primary-failover",
+                    choices=ROUTE_POLICIES,
+                    help="backend preference order for each escalation "
+                         "window")
+    ap.add_argument("--cost-budget", type=float, default=None,
+                    help="dollar budget ($/request): controller and "
+                         "--calibrate hold realised spend here instead of "
+                         "the remote fraction")
     args = ap.parse_args(argv)
     if args.fused and args.adaptive:
         ap.error("--adaptive needs the transport serve path; drop --fused")
     if args.fused and args.pipeline_depth > 1:
         ap.error("--pipeline-depth needs the transport serve path; "
                  "drop --fused")
+    if args.fused and (args.remote or args.cost_budget is not None):
+        ap.error("--remote/--cost-budget need the transport serve path; "
+                 "drop --fused")
+    if (args.cost_budget is not None and not args.adaptive
+            and not args.calibrate):
+        ap.error("--cost-budget is only enforced by the controller or the "
+                 "offline sweep; add --adaptive and/or --calibrate")
 
     # ---- task + local surrogate (paper §4.1: input-domain-reduced) ----
     vocab, seq, ncls = 512, 48, 8
@@ -155,33 +198,22 @@ def main(argv=None) -> int:
         np.exp(cal_logits) / np.exp(cal_logits).sum(-1, keepdims=True), -1)
     t_remote = nominal_quantile_threshold(cal_conf, args.fpr)
 
-    t_local = None
-    if args.calibrate:
-        # offline Pareto sweep on a labelled validation slice (DESIGN.md §1)
-        nval = cal_logits.shape[0]
-        val_logits = np.asarray(local_apply(jnp.asarray(local_toks[:nval])))
-        val_sm = np.exp(val_logits) / np.exp(val_logits).sum(-1, keepdims=1)
-        point, k, front = calibrate(
-            local_conf=val_sm.max(-1),
-            local_correct=val_logits.argmax(-1) == labels[:nval],
-            remote_conf=cal_conf,
-            remote_correct=cal_logits.argmax(-1) == labels[:nval],
-            budget=args.remote_budget, batch_size=args.batch,
-            max_rejection_rate=args.fpr)
-        t_local, t_remote = point.t_local, point.t_remote
-        print(f"[serve] calibrated operating point: t_local={t_local:.4f} "
-              f"t_remote={t_remote:.4f} k={k} "
-              f"(val remote fraction {point.remote_fraction:.2f}, "
-              f"accepted acc {point.accuracy:.3f}; "
-              f"frontier has {len(front)} points)")
-
-    transport = controller = cache = None
+    # ---- multi-remote registry + routing policy (DESIGN.md §6) ----
+    router = controller = cache = None
     if not args.fused:
-        transport = RemoteTransport(remote_apply, TransportConfig(
+        tconf = TransportConfig(
             max_in_flight=args.max_in_flight, timeout_s=args.remote_timeout,
             max_retries=args.remote_retries,
             breaker_failures=args.breaker_failures,
-            breaker_reset_s=args.breaker_reset))
+            breaker_reset_s=args.breaker_reset)
+        specs = [parse_remote_spec(s) for s in (args.remote or ["remote"])]
+        router = RemoteRouter(
+            [RemoteBackend(name, remote_apply, tconf, cost_per_request=c,
+                           latency_s=l) for name, c, l in specs],
+            policy=args.route_policy)
+        print(f"[serve] remote registry: "
+              f"{[b.name for b in router.candidates()]} "
+              f"(policy {router.policy})")
         if args.cache_size > 0:
             # key on token content only: the per-request "idx" (oracle-head
             # plumbing) would make every key unique and the cache cold
@@ -193,14 +225,43 @@ def main(argv=None) -> int:
     if args.adaptive:
         controller = AdaptiveController(ControllerConfig(
             target_remote_fraction=args.remote_budget,
-            window=args.control_window, target_rejection_rate=args.fpr))
+            window=args.control_window, target_rejection_rate=args.fpr,
+            cost_budget_per_request=args.cost_budget))
+
+    t_local = None
+    if args.calibrate:
+        # offline Pareto sweep on a labelled validation slice (DESIGN.md §1)
+        # — priced at the policy-preferred backend's per-call cost when a
+        # registry is configured, selected by $ when --cost-budget is set
+        nval = cal_logits.shape[0]
+        val_logits = np.asarray(local_apply(jnp.asarray(local_toks[:nval])))
+        val_sm = np.exp(val_logits) / np.exp(val_logits).sum(-1, keepdims=1)
+        esc_cost = CostModel().remote_cost_per_request
+        if router is not None:
+            esc_cost = router.expected_cost_per_escalation(esc_cost)
+        point, k, front = calibrate(
+            local_conf=val_sm.max(-1),
+            local_correct=val_logits.argmax(-1) == labels[:nval],
+            remote_conf=cal_conf,
+            remote_correct=cal_logits.argmax(-1) == labels[:nval],
+            budget=(None if args.cost_budget is not None
+                    else args.remote_budget),
+            cost_budget=args.cost_budget, batch_size=args.batch,
+            max_rejection_rate=args.fpr, remote_cost_per_request=esc_cost)
+        t_local, t_remote = point.t_local, point.t_remote
+        print(f"[serve] calibrated operating point: t_local={t_local:.4f} "
+              f"t_remote={t_remote:.4f} k={k} "
+              f"(val remote fraction {point.remote_fraction:.2f}, "
+              f"${point.cost_per_request:.5f}/req, "
+              f"accepted acc {point.accuracy:.3f}; "
+              f"frontier has {len(front)} points)")
 
     eng = CascadeEngine(local_apply,
-                        remote_apply if transport is None else None,
+                        remote_apply if router is None else None,
                         batch_size=args.batch,
                         remote_fraction_budget=args.remote_budget,
                         t_remote=t_remote, cost=CostModel(),
-                        transport=transport, controller=controller,
+                        transport=router, controller=controller,
                         cache=cache)
     if t_local is not None:
         eng.set_local_threshold(t_local)
@@ -208,12 +269,15 @@ def main(argv=None) -> int:
                                 pipeline_depth=args.pipeline_depth)
 
     t0 = time.perf_counter()
-    for i in range(args.requests):
-        sched.submit(Request(
-            uid=i, local_input=local_toks[i],
-            remote_input={"tokens": toks[i] % rcfg.vocab_size,
-                          "idx": np.int32(i)}))
-    responses = sched.flush()
+    try:
+        for i in range(args.requests):
+            sched.submit(Request(
+                uid=i, local_input=local_toks[i],
+                remote_input={"tokens": toks[i] % rcfg.vocab_size,
+                              "idx": np.int32(i)}))
+        responses = sched.flush()
+    finally:
+        eng.close()     # drain windows + shut down every backend pool
     wall = time.perf_counter() - t0
 
     correct = sum(r.prediction == labels[r.uid] for r in responses
@@ -237,11 +301,22 @@ def main(argv=None) -> int:
           f"p95 {st.wall_percentile(95) * 1e3:.0f} ms "
           f"(throughput {len(responses) / max(wall, 1e-9):.0f} req/s, "
           f"pipeline depth {args.pipeline_depth})")
-    if transport is not None:
-        ts = transport.stats
-        print(f"[serve] transport: {ts.windows} windows, "
-              f"{ts.failed_requests} failed reqs, {ts.retries} retries, "
-              f"{ts.timeouts} timeouts, breaker opens {ts.breaker_opens}")
+    if router is not None:
+        rs = router.stats
+        print(f"[serve] router: picks {rs.picks}, "
+              f"failovers {rs.failovers}, unrouted {rs.unrouted}")
+        for b in router:
+            ts, u = b.stats, st.per_backend.get(b.name)
+            line = (f"[serve]   {b.name}: {ts.windows} windows, "
+                    f"{ts.failed_requests} failed reqs, "
+                    f"{ts.retries} retries, "
+                    f"breaker opens {ts.breaker_opens}, "
+                    f"p95 remote {ts.latency_percentile(95) * 1e3:.0f} ms")
+            if u is not None:
+                line += (f"; billed ${u.cost:.4f} "
+                         f"({u.remote_calls} calls, {u.cache_hits} hits, "
+                         f"{u.transport_failures} failures)")
+            print(line)
     if cache is not None:
         print(f"[serve] cache: {cache.stats.hits} hits / "
               f"{cache.stats.misses} misses "
@@ -252,6 +327,14 @@ def main(argv=None) -> int:
               f"ema remote fraction {cs.ema_fraction:.3f}, "
               f"t_local={cs.t_local}, t_remote={cs.t_remote}, "
               f"{cs.drift_events} drift events")
+        if args.cost_budget is not None:
+            per_esc = cs.ema_cost_per_escalation
+            print(f"[serve] dollar budget: target "
+                  f"${args.cost_budget:.5f}/req, realised "
+                  f"${st.total_cost / max(st.requests, 1):.5f}/req "
+                  f"(learned $/escalation "
+                  f"{'n/a' if per_esc is None else f'{per_esc:.5f}'}, "
+                  f"effective target fraction {cs.effective_target})")
     return 0
 
 

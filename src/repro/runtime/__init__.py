@@ -3,8 +3,11 @@
 Composes with ``repro.serving.engine.CascadeEngine`` (see DESIGN.md):
   * calibration — offline (t_local, t_remote, k) selection on a Pareto sweep
   * controller  — online EMA/PID budget tracking + drift detection
-  * transport   — fault-aware remote tier (windows, retries, breaker)
-  * cache       — content-keyed dedup of billed remote calls
+  * transport   — fault-aware remote tiers (windows, retries, breakers) and
+    the multi-remote registry/router (named backends, cost/latency-aware
+    policies, breaker-driven failover)
+  * cache       — content-keyed dedup of billed remote calls (entries
+    remember which backend filled them, so hits attribute correctly)
 """
 
 from repro.runtime.cache import (CacheStats, RemoteResponseCache,
@@ -16,16 +19,19 @@ from repro.runtime.calibration import (OperatingPoint, calibrate,
 from repro.runtime.controller import (AdaptiveController, ControllerConfig,
                                       ControllerState,
                                       population_stability_index)
-from repro.runtime.transport import (CircuitBreaker, CircuitOpenError,
-                                     RemoteCallError, RemoteTimeout,
-                                     RemoteTransport, TransportConfig,
+from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
+                                     CircuitOpenError, RemoteBackend,
+                                     RemoteCallError, RemoteRouter,
+                                     RemoteTimeout, RemoteTransport,
+                                     RouterStats, TransportConfig,
                                      TransportFuture, TransportStats)
 
 __all__ = [
-    "AdaptiveController", "CacheStats", "CircuitBreaker", "CircuitOpenError",
-    "ControllerConfig", "ControllerState", "OperatingPoint",
-    "RemoteCallError", "RemoteResponseCache", "RemoteTimeout",
-    "RemoteTransport", "TransportConfig", "TransportFuture",
+    "ROUTE_POLICIES", "AdaptiveController", "CacheStats", "CircuitBreaker",
+    "CircuitOpenError", "ControllerConfig", "ControllerState",
+    "OperatingPoint", "RemoteBackend", "RemoteCallError",
+    "RemoteResponseCache", "RemoteRouter", "RemoteTimeout",
+    "RemoteTransport", "RouterStats", "TransportConfig", "TransportFuture",
     "TransportStats", "calibrate", "content_key", "content_keys",
     "pareto_frontier", "population_stability_index",
     "select_operating_point", "sweep_operating_points",

@@ -9,6 +9,11 @@ genuine remote invocations.
 
 Keys are content hashes over the request pytree (arrays hashed with their
 dtype/shape so `[1, 2]` int32 and `[1, 2]` float32 never collide).
+
+With a multi-remote registry (DESIGN.md §6) every entry also remembers the
+*source* — the name of the backend that filled it — so a cache hit
+attributes to the right backend in the engine's per-backend accounting
+(hits stay $0-billed regardless of source).
 """
 
 from __future__ import annotations
@@ -129,7 +134,9 @@ class RemoteResponseCache:
             key_batch_fn = content_keys
         self.key_batch_fn = key_batch_fn
         self.stats = CacheStats()
-        self._store: OrderedDict[bytes, np.ndarray] = OrderedDict()
+        # key -> (response, source backend name | None)
+        self._store: OrderedDict[bytes,
+                                 tuple[np.ndarray, str | None]] = OrderedDict()
 
     def keys_for(self, batch: Any, rows: int) -> list[bytes]:
         """Keys for the leading ``rows`` of a stacked request pytree —
@@ -142,7 +149,10 @@ class RemoteResponseCache:
     def __len__(self) -> int:
         return len(self._store)
 
-    def get(self, key: bytes) -> np.ndarray | None:
+    def lookup(self, key: bytes) -> tuple[np.ndarray, str | None] | None:
+        """Like ``get`` but returns ``(value, source)`` where ``source``
+        is the backend name recorded at ``put`` time (None for entries
+        stored without attribution)."""
         hit = self._store.get(key)
         if hit is None:
             self.stats.misses += 1
@@ -151,10 +161,15 @@ class RemoteResponseCache:
         self.stats.hits += 1
         return hit
 
-    def put(self, key: bytes, value: np.ndarray) -> None:
+    def get(self, key: bytes) -> np.ndarray | None:
+        hit = self.lookup(key)
+        return None if hit is None else hit[0]
+
+    def put(self, key: bytes, value: np.ndarray,
+            source: str | None = None) -> None:
         if key in self._store:
             self._store.move_to_end(key)
-        self._store[key] = np.asarray(value)
+        self._store[key] = (np.asarray(value), source)
         if len(self._store) > self.capacity:
             self._store.popitem(last=False)
             self.stats.evictions += 1

@@ -114,13 +114,24 @@ def pareto_frontier(points: Sequence[OperatingPoint]
 
 
 def select_operating_point(points: Sequence[OperatingPoint],
-                           budget: float, *,
+                           budget: float | None = None, *,
+                           cost_budget: float | None = None,
                            max_rejection_rate: float | None = None
                            ) -> OperatingPoint:
-    """Best accepted accuracy subject to remote_fraction <= budget (and an
-    optional rejection-rate ceiling); ties broken toward cheaper points.
-    Falls back to the cheapest point if the budget excludes everything."""
-    feasible = [p for p in points if p.remote_fraction <= budget + 1e-12]
+    """Best accepted accuracy subject to a budget (and an optional
+    rejection-rate ceiling); ties broken toward cheaper points. The budget
+    is either a remote *fraction* (``budget``) or a **dollar** ceiling on
+    modelled $ per request (``cost_budget`` — per-backend pricing enters
+    via ``remote_cost_per_request`` at sweep time, e.g. the router's
+    ``expected_cost_per_escalation``). Falls back to the cheapest point if
+    the budget excludes everything."""
+    if (budget is None) == (cost_budget is None):
+        raise ValueError("give exactly one of budget / cost_budget")
+    if cost_budget is not None:
+        feasible = [p for p in points
+                    if p.cost_per_request <= cost_budget + 1e-12]
+    else:
+        feasible = [p for p in points if p.remote_fraction <= budget + 1e-12]
     if max_rejection_rate is not None:
         hard = [p for p in feasible
                 if p.rejection_rate <= max_rejection_rate + 1e-12]
@@ -132,16 +143,20 @@ def select_operating_point(points: Sequence[OperatingPoint],
 
 
 def calibrate(local_conf, local_correct, remote_conf, remote_correct, *,
-              budget: float, batch_size: int, grid: int = 33,
+              budget: float | None = None, batch_size: int, grid: int = 33,
+              cost_budget: float | None = None,
               max_rejection_rate: float | None = None,
               remote_cost_per_request: float = 0.0048
               ) -> tuple[OperatingPoint, int, list[OperatingPoint]]:
     """One-call calibration: sweep, take the frontier, pick the budget
-    point. Returns (point, capacity k for ``batch_size``, frontier)."""
+    point — a remote-fraction ``budget`` or a dollar ``cost_budget``
+    (price escalations with the deployment's real per-call cost, e.g.
+    ``router.expected_cost_per_escalation``). Returns (point, capacity k
+    for ``batch_size``, frontier)."""
     pts = sweep_operating_points(
         local_conf, local_correct, remote_conf, remote_correct,
         grid=grid, remote_cost_per_request=remote_cost_per_request)
     front = pareto_frontier(pts)
-    best = select_operating_point(front, budget,
+    best = select_operating_point(front, budget, cost_budget=cost_budget,
                                   max_rejection_rate=max_rejection_rate)
     return best, best.capacity(batch_size), front

@@ -25,6 +25,15 @@ recalibrates ``t_local`` directly from the drifted window.
 Until the first window completes the controller reports ``t_local = None``
 and the engine falls back to budget-exact capacity-k selection (the seed
 behaviour) — a safe warm start.
+
+Dollar budgets (DESIGN.md §6): with a multi-remote registry the price of
+an escalation depends on which backend served it, so a remote-*fraction*
+budget no longer pins spend. When ``cost_budget_per_request`` is set the
+controller learns the realised blended $ per escalation (EMA over windows
+of the per-window billed cost the engine reports via ``observe(cost=...)``)
+and re-derives the effective target fraction each window as
+``cost_budget / ema_cost_per_escalation`` — the existing fraction loop then
+holds a **dollar** budget across failovers and price mixes.
 """
 
 from __future__ import annotations
@@ -50,6 +59,11 @@ class ControllerConfig:
     drift_threshold: float = 0.25  # PSI above this = drift event
     capacity_slack: float = 2.0   # per-batch cap = slack * rho * B
     target_rejection_rate: float = 0.05  # 2nd-level nominal false-alarm
+    # dollar budget: target realised $ per request; None = fraction mode.
+    # The effective target fraction becomes cost_budget / learned blended
+    # $-per-escalation, clipped to [0, target_remote_fraction ceiling 1].
+    cost_budget_per_request: float | None = None
+    cost_ema_alpha: float = 0.3   # EMA weight for $-per-escalation
 
 
 @dataclass
@@ -62,6 +76,9 @@ class ControllerState:
     windows: int = 0
     drift_events: int = 0
     last_psi: float = 0.0
+    # dollar-budget telemetry (None until the first costed window)
+    ema_cost_per_escalation: float | None = None
+    effective_target: float | None = None
 
 
 def population_stability_index(p_counts: np.ndarray,
@@ -86,6 +103,7 @@ class AdaptiveController:
         self._win_scores: list[float] = []
         self._win_escalated = 0
         self._win_requests = 0
+        self._win_cost = 0.0
         self._ref_hist: np.ndarray | None = None
         self._bin_edges: np.ndarray | None = None
 
@@ -109,13 +127,17 @@ class AdaptiveController:
 
     # -- observations the engine feeds back --------------------------------
     def observe(self, local_conf: np.ndarray, escalated: int,
-                requests: int, remote_conf: np.ndarray | None = None) -> None:
-        """Record one served batch (real rows only) and update per window."""
+                requests: int, remote_conf: np.ndarray | None = None,
+                cost: float = 0.0) -> None:
+        """Record one served batch (real rows only) and update per window.
+        ``cost`` is the batch's realised billed $ (per-backend pricing), so
+        the controller can hold a dollar budget (DESIGN.md §6)."""
         conf = np.asarray(local_conf, np.float64).ravel()
         self._scores.extend(conf.tolist())
         self._win_scores.extend(conf.tolist())
         self._win_escalated += int(escalated)
         self._win_requests += int(requests)
+        self._win_cost += float(cost)
         if remote_conf is not None:
             rc = np.asarray(remote_conf, np.float64).ravel()
             self._remote_scores.extend(rc[np.isfinite(rc)].tolist())
@@ -134,7 +156,27 @@ class AdaptiveController:
         else:
             st.ema_fraction = (cfg.ema_alpha * frac
                                + (1 - cfg.ema_alpha) * st.ema_fraction)
-        err = st.ema_fraction - cfg.target_remote_fraction
+
+        # learn the blended $ per escalation; a dollar budget re-derives
+        # the target fraction each window (DESIGN.md §6)
+        if self._win_escalated > 0:
+            c = self._win_cost / self._win_escalated
+            st.ema_cost_per_escalation = (
+                c if st.ema_cost_per_escalation is None else
+                cfg.cost_ema_alpha * c
+                + (1 - cfg.cost_ema_alpha) * st.ema_cost_per_escalation)
+        target = cfg.target_remote_fraction
+        if (cfg.cost_budget_per_request is not None
+                and st.ema_cost_per_escalation is not None):
+            if st.ema_cost_per_escalation <= 0.0:
+                target = 1.0    # free escalations: the $ budget never binds
+            else:
+                target = float(np.clip(
+                    cfg.cost_budget_per_request
+                    / st.ema_cost_per_escalation, 0.0, 1.0))
+        st.effective_target = target
+
+        err = st.ema_fraction - target
         st.integral = float(np.clip(st.integral + err,
                                     -cfg.integral_clip, cfg.integral_clip))
 
@@ -142,14 +184,13 @@ class AdaptiveController:
         if drifted:
             st.drift_events += 1
             st.integral = 0.0
-            st.ema_fraction = cfg.target_remote_fraction
+            st.ema_fraction = target
             err = 0.0
 
         # feed-forward escalation rate, PI-corrected, then realised as a
         # quantile of the recent score distribution
         st.rho = float(np.clip(
-            cfg.target_remote_fraction - cfg.kp * err - cfg.ki * st.integral,
-            0.0, 1.0))
+            target - cfg.kp * err - cfg.ki * st.integral, 0.0, 1.0))
         scores = (np.asarray(self._win_scores) if drifted
                   else np.asarray(self._scores))
         if scores.size:
@@ -162,6 +203,7 @@ class AdaptiveController:
         self._win_scores = []
         self._win_escalated = 0
         self._win_requests = 0
+        self._win_cost = 0.0
 
     def _detect_drift(self, win_scores: np.ndarray) -> bool:
         cfg, st = self.config, self.state

@@ -28,15 +28,36 @@ thread-safe when ``max_concurrent > 1``.
 
 The clock and sleep functions are injectable so tests and benchmarks can
 run outage episodes deterministically without wall-clock waits.
+
+Multi-remote routing (DESIGN.md §6): real deployments see a *market* of
+remote models at different per-call prices and latencies (CheapET-3), and
+tiered escalation across multiple upstream endpoints (DDNN). A
+``RemoteBackend`` is one named remote tier — its own transport (config,
+breaker, pool, stats) plus routing metadata (``cost_per_request``,
+modelled ``latency_s``) — and a ``RemoteRouter`` owns N backends and picks
+one per escalation window under a pluggable policy:
+
+  * ``primary-failover``    — registration order; later backends are hot
+    standbys;
+  * ``cheapest-available``  — ascending ``cost_per_request``;
+  * ``latency-ema``         — ascending measured latency EMA (seeded from
+    the modelled ``latency_s`` until a backend has observations).
+
+``pick()`` skips any backend whose breaker would refuse the call *at
+submit time* (the speculative-failover fast path: an open breaker reroutes
+the window immediately instead of waiting for the drain to observe the
+failure). Escalations only take the REJECTED/fallback path when NO backend
+is available.
 """
 
 from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, ClassVar
 
 import numpy as np
 
@@ -77,6 +98,36 @@ class TransportStats:
     errors: int = 0
     short_circuited: int = 0      # requests rejected while breaker open
     breaker_opens: int = 0
+    # measured per-window remote latency (successful windows only): the
+    # EMA feeds the router's latency-ema policy, the ring buffer feeds
+    # the per-backend p95 reported by the serving/routing benchmarks
+    latency_sum_s: float = 0.0
+    latency_windows: int = 0
+    latency_ema_s: float | None = None
+    latency_samples: deque = field(
+        default_factory=lambda: deque(maxlen=4096), repr=False)
+
+    LATENCY_EMA_ALPHA: ClassVar[float] = 0.2
+
+    def record_latency(self, window_s: float) -> None:
+        self.latency_sum_s += window_s
+        self.latency_windows += 1
+        self.latency_ema_s = (window_s if self.latency_ema_s is None else
+                              self.LATENCY_EMA_ALPHA * window_s
+                              + (1 - self.LATENCY_EMA_ALPHA)
+                              * self.latency_ema_s)
+        self.latency_samples.append(float(window_s))
+
+    @property
+    def mean_latency_s(self) -> float:
+        return self.latency_sum_s / max(self.latency_windows, 1)
+
+    def latency_percentile(self, q: float) -> float:
+        """q-th percentile (0-100) of recent per-window remote latency."""
+        if not self.latency_samples:
+            return 0.0
+        return float(np.percentile(np.fromiter(self.latency_samples,
+                                               np.float64), q))
 
 
 class CircuitBreaker:
@@ -97,6 +148,19 @@ class CircuitBreaker:
             if self._clock() - self._opened_at >= self.reset_s:
                 self.state = HALF_OPEN     # admit one probe
                 return True
+            return False
+        return True
+
+    def would_allow(self) -> bool:
+        """Non-mutating peek: should the router hand this breaker a new
+        window right now? OPEN admits once the reset has elapsed (that
+        pick becomes the probe); HALF_OPEN refuses — a probe is already
+        in flight, and routing more windows at a still-unproven backend
+        would burn them if the probe fails (``allow()`` itself stays
+        permissive in HALF_OPEN so the in-flight probe's retries pass)."""
+        if self.state == OPEN:
+            return self._clock() - self._opened_at >= self.reset_s
+        if self.state == HALF_OPEN:
             return False
         return True
 
@@ -187,7 +251,9 @@ class RemoteTransport:
         exhausts its retries counts as a breaker failure (so a single
         flaky window never opens the breaker on its own)."""
         last: Exception | None = None
-        for attempt in range(1 + self.config.max_retries):
+        t0 = self._clock()      # latency = time-to-success incl. retries,
+        for attempt in range(1 + self.config.max_retries):  # so a flaky
+            # backend can't report a flattering EMA/p95 to the router
             with self._lock:
                 allowed = self.breaker.allow()
             if not allowed:
@@ -206,6 +272,7 @@ class RemoteTransport:
                 last = e
             else:
                 with self._lock:
+                    self.stats.record_latency(self._clock() - t0)
                     self.breaker.record_success()
                 return out
             if attempt < self.config.max_retries:
@@ -280,3 +347,174 @@ class RemoteTransport:
             pool, self._pool = self._pool, None
         if pool is not None:
             pool.shutdown(wait=wait)
+
+
+# ---------------------------------------------------------------------------
+# Multi-remote tier registry + routing (DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+class RemoteBackend:
+    """One named remote tier in the registry.
+
+    Owns a full ``RemoteTransport`` (per-backend config, breaker, thread
+    pool, stats) plus the routing/billing metadata the engine and router
+    need: ``cost_per_request`` (per-call price; None = use the engine's
+    ``CostModel`` default) and ``latency_s`` (modelled round trip; None =
+    CostModel default). Construct either around a callable::
+
+        RemoteBackend("gpt-large", remote_apply, TransportConfig(...),
+                      cost_per_request=0.0048, latency_s=0.32)
+
+    or around an existing transport (``transport=...``) — the adapter the
+    engine uses to keep a bare single-transport construction working.
+    """
+
+    def __init__(self, name: str, remote_apply: Callable | None = None,
+                 config: TransportConfig = TransportConfig(), *,
+                 cost_per_request: float | None = None,
+                 latency_s: float | None = None,
+                 transport: RemoteTransport | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        if transport is None:
+            if remote_apply is None:
+                raise ValueError("RemoteBackend needs remote_apply or "
+                                 "transport")
+            transport = RemoteTransport(remote_apply, config,
+                                        clock=clock, sleep=sleep)
+        self.name = name
+        self.transport = transport
+        self.cost_per_request = cost_per_request
+        self.latency_s = latency_s
+
+    # -- delegation to the owned transport -----------------------------
+    @property
+    def config(self) -> TransportConfig:
+        return self.transport.config
+
+    @property
+    def breaker(self) -> CircuitBreaker:
+        return self.transport.breaker
+
+    @property
+    def stats(self) -> TransportStats:
+        return self.transport.stats
+
+    def call(self, batch: Any):
+        return self.transport.call(batch)
+
+    def submit(self, batch: Any) -> TransportFuture:
+        return self.transport.submit(batch)
+
+    def poll(self, future: TransportFuture) -> bool:
+        return self.transport.poll(future)
+
+    def shutdown(self, wait: bool = True) -> None:
+        self.transport.shutdown(wait=wait)
+
+    # -- routing signals ------------------------------------------------
+    def available(self) -> bool:
+        """Would this backend's breaker admit a call right now?"""
+        return self.breaker.would_allow()
+
+    def latency_estimate(self) -> float:
+        """Measured latency EMA; falls back to the modelled ``latency_s``
+        prior (0.0 if neither — an untried backend is worth probing)."""
+        if self.stats.latency_ema_s is not None:
+            return self.stats.latency_ema_s
+        return self.latency_s if self.latency_s is not None else 0.0
+
+    def __repr__(self) -> str:
+        return (f"RemoteBackend({self.name!r}, "
+                f"cost={self.cost_per_request}, "
+                f"latency={self.latency_s})")
+
+
+ROUTE_POLICIES = ("primary-failover", "cheapest-available", "latency-ema")
+
+
+@dataclass
+class RouterStats:
+    picks: dict = field(default_factory=dict)   # backend name -> windows
+    failovers: int = 0          # picks that skipped the preferred backend
+    unrouted: int = 0           # windows with NO available backend
+
+
+class RemoteRouter:
+    """Registry of ``RemoteBackend``s + a routing policy.
+
+    ``pick()`` returns the first *available* backend in policy order —
+    a backend whose breaker is open (and not yet due a half-open probe)
+    is skipped at submit time, so an outage fails over within the same
+    escalation window (speculative failover). Returns None only when no
+    backend is available; the engine then maps the window straight to the
+    REJECTED/fallback path without touching any transport.
+
+    Candidate order per policy:
+      * primary-failover   — registration order;
+      * cheapest-available — ascending ``cost_per_request`` (unknown cost
+        sorts last; registration order breaks ties);
+      * latency-ema        — ascending ``latency_estimate()`` (measured
+        EMA, modelled prior until observations arrive).
+    """
+
+    def __init__(self, backends: list[RemoteBackend],
+                 policy: str = "primary-failover"):
+        backends = list(backends)
+        if not backends:
+            raise ValueError("router needs at least one backend")
+        names = [b.name for b in backends]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate backend names: {names}")
+        if policy not in ROUTE_POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"choose from {ROUTE_POLICIES}")
+        self.backends = backends
+        self.policy = policy
+        self.stats = RouterStats(picks={b.name: 0 for b in backends})
+
+    def __len__(self) -> int:
+        return len(self.backends)
+
+    def __iter__(self):
+        return iter(self.backends)
+
+    def backend(self, name: str) -> RemoteBackend:
+        for b in self.backends:
+            if b.name == name:
+                return b
+        raise KeyError(name)
+
+    def candidates(self) -> list[RemoteBackend]:
+        """All backends in policy preference order (availability is NOT
+        applied here — ``pick`` filters on breaker state)."""
+        if self.policy == "cheapest-available":
+            return sorted(self.backends,
+                          key=lambda b: (b.cost_per_request is None,
+                                         b.cost_per_request or 0.0))
+        if self.policy == "latency-ema":
+            return sorted(self.backends, key=RemoteBackend.latency_estimate)
+        return list(self.backends)
+
+    def pick(self) -> RemoteBackend | None:
+        """First available backend in policy order; None when every
+        breaker refuses (the window degrades to REJECTED/fallback)."""
+        for i, b in enumerate(self.candidates()):
+            if b.available():
+                self.stats.picks[b.name] += 1
+                if i > 0:
+                    self.stats.failovers += 1
+                return b
+        self.stats.unrouted += 1
+        return None
+
+    def expected_cost_per_escalation(self, default: float) -> float:
+        """Price of the policy-preferred backend (healthy steady state) —
+        the offline calibration's per-escalation cost estimate."""
+        cands = self.candidates()
+        cost = cands[0].cost_per_request if cands else None
+        return default if cost is None else cost
+
+    def shutdown(self, wait: bool = True) -> None:
+        for b in self.backends:
+            b.shutdown(wait=wait)

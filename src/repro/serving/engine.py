@@ -4,8 +4,9 @@ The engine composes:
   * a LOCAL tier: cheap classifier (surrogate) evaluated for every request,
   * a 1st-level supervisor on the local logits,
   * escalation to a REMOTE tier — either a fused in-jit callable (offline /
-    trusted deployments) or a fault-aware ``repro.runtime`` transport with
-    caching and an online budget controller (DESIGN.md §2-§4),
+    trusted deployments) or a fault-aware ``repro.runtime`` transport /
+    multi-backend router with caching and an online budget controller
+    (DESIGN.md §2-§4, §6),
   * a 2nd-level supervisor on the remote metadata,
   * per-request cost/latency accounting mirroring the paper's billing
     model (Table 7 / §5.6) — padded scheduler rows are never billed.
@@ -26,6 +27,15 @@ Three serve paths (DESIGN.md §2, §5):
     submission order, so batch i+1's local tier overlaps batch i's remote
     round trip while accounting and controller observations stay
     deterministic.
+
+Multi-remote routing (DESIGN.md §6): the runtime/pipelined paths accept a
+``RemoteRouter`` of named ``RemoteBackend``s in place of a bare transport
+(a bare ``RemoteTransport`` is auto-wrapped as a single-backend registry,
+preserving the PR-2 behaviour bit for bit). Each escalation window is
+routed to one backend picked at submit time — an open breaker fails over
+within the same window — and billing/latency attribute per backend in
+``CascadeStats.per_backend`` using the backend's own price and modelled
+latency (falling back to the ``CostModel`` constants).
 """
 
 from __future__ import annotations
@@ -43,6 +53,13 @@ from repro.core.cascade import (combine_escalated, escalation_capacity,
                                 gather_requests, select_escalations)
 from repro.core.supervisors import SOFTMAX_SUPERVISORS
 from repro.kernels.confidence_gate.ops import confidence_gate
+from repro.runtime.transport import RemoteBackend, RemoteRouter
+
+# per-backend accounting key for escalations no backend would accept
+# (every breaker open): they fail without touching any transport
+UNROUTED = "(unrouted)"
+# attribution for cache entries stored without a source backend
+UNATTRIBUTED = "(cache)"
 
 
 @dataclass(frozen=True)
@@ -50,11 +67,39 @@ class CostModel:
     """Latency/cost constants (paper Table 7 / GPT-3 style billing).
 
     Cache hits are re-served, not re-billed: they cost ``cache_hit_
-    latency_s`` and $0 (DESIGN.md §4)."""
+    latency_s`` and $0 (DESIGN.md §4). With a multi-remote registry the
+    remote constants are *defaults*: a ``RemoteBackend`` carrying its own
+    ``cost_per_request`` / ``latency_s`` overrides them per window
+    (DESIGN.md §6)."""
     local_latency_s: float = 0.05
     remote_latency_s: float = 0.32       # incl. network round trip
     remote_cost_per_request: float = 0.0048
     cache_hit_latency_s: float = 0.001
+
+    def backend_cost(self, backend) -> float:
+        """Per-call price for a backend (None backend/price -> default)."""
+        if backend is not None and backend.cost_per_request is not None:
+            return backend.cost_per_request
+        return self.remote_cost_per_request
+
+    def backend_latency(self, backend) -> float:
+        """Modelled round trip for a backend (None -> default)."""
+        if backend is not None and backend.latency_s is not None:
+            return backend.latency_s
+        return self.remote_latency_s
+
+
+@dataclass
+class BackendUsage:
+    """Per-backend slice of the cascade accounting (DESIGN.md §6). The
+    invariant ``escalations = remote_calls + cache_hits +
+    transport_failures`` holds summed over all per-backend entries
+    (including the ``UNROUTED`` pseudo-backend)."""
+    remote_calls: int = 0            # billed invocations of this backend
+    cache_hits: int = 0              # hits on entries this backend filled
+    transport_failures: int = 0      # escalations this backend lost
+    cost: float = 0.0                # realised $ billed to this backend
+    remote_latency_s: float = 0.0    # modelled remote seconds accrued
 
 
 @dataclass
@@ -68,10 +113,15 @@ class CascadeStats:
     total_cost: float = 0.0
     total_latency_s: float = 0.0     # modelled (CostModel constants)
     wall_latency_s: float = 0.0      # measured request-seconds (timers)
+    # per-backend billing/latency attribution (runtime path; DESIGN.md §6)
+    per_backend: dict = field(default_factory=dict)
     # ring buffer of recent per-window wall times: percentiles stay
     # representative of CURRENT behaviour on long-running servers
     wall_samples: deque = field(
         default_factory=lambda: deque(maxlen=65536), repr=False)
+
+    def backend_usage(self, name: str) -> BackendUsage:
+        return self.per_backend.setdefault(name, BackendUsage())
 
     @property
     def remote_fraction(self) -> float:
@@ -212,8 +262,10 @@ class _InFlight:
     k: int
     keys: list | None           # cache keys per escalated row
     cached: list | None         # cache hits / filled-in remote responses
+    hit_src: list | None        # backend name per cache hit (attribution)
     miss: list                  # positions within idx that went remote
     pending: Any                # TransportFuture | _Resolved | None
+    backend: Any = None         # RemoteBackend routed to (None = unrouted)
 
 
 class CascadeEngine:
@@ -234,10 +286,25 @@ class CascadeEngine:
                       controller=AdaptiveController(),
                       cache=RemoteResponseCache())
 
+    Multi-remote construction (DESIGN.md §6) — pass a router instead::
+
+        CascadeEngine(local_apply, batch_size=32, ...,
+                      transport=RemoteRouter([
+                          RemoteBackend("cheap", apply_a,
+                                        cost_per_request=0.002),
+                          RemoteBackend("fast", apply_b,
+                                        cost_per_request=0.008),
+                      ], policy="cheapest-available"))
+
+    A bare transport is wrapped as a single-backend registry; predictions
+    and billing stay bitwise-identical to the pre-registry path.
+
     The runtime path can serve synchronously (``serve``) or pipelined
     (``begin_serve`` / ``complete_next`` — DESIGN.md §5): completions
     drain strictly in submission order, so results, stats and controller
-    state do not depend on remote completion order.
+    state do not depend on remote completion order. ``close()`` (or using
+    the engine as a context manager) drains in-flight windows and shuts
+    down every backend's thread pool.
     """
 
     def __init__(self, local_apply, remote_apply=None, *, batch_size: int,
@@ -254,7 +321,15 @@ class CascadeEngine:
         self.t_local: float | None = None   # runtime-tunable escalation gate
         self.cost = cost
         self.stats = CascadeStats()
+        # `transport` may be a RemoteTransport OR a RemoteRouter; keep the
+        # raw object (schedulers/tests check `engine.transport`) and route
+        # internally through a registry either way
         self.transport = transport
+        self.router: RemoteRouter | None = None
+        if transport is not None:
+            self.router = (transport if isinstance(transport, RemoteRouter)
+                           else RemoteRouter(
+                               [RemoteBackend("remote", transport=transport)]))
         self.controller = controller
         self.cache = cache
         self._clock = clock
@@ -329,8 +404,10 @@ class CascadeEngine:
                       int((~accepted[:real]).sum()))
         self.stats.record_wall(self._clock() - t0, real)
         if self.controller is not None:
-            self.controller.observe(out["local_conf"][:real], n_remote,
-                                    real, out["remote_conf"][:real])
+            self.controller.observe(
+                out["local_conf"][:real], n_remote, real,
+                out["remote_conf"][:real],
+                cost=n_remote * self.cost.remote_cost_per_request)
         out["accepted"] = accepted
         return out
 
@@ -360,44 +437,58 @@ class CascadeEngine:
         k = int(min(cand.size, capacity, real))
         idx = cand[:k]
 
-        keys = cached = None
+        keys = cached = hit_src = None
         miss: list[int] = []
-        pending = None
+        pending = backend = None
         if k > 0:
             host = jax.tree.map(np.asarray, batch["remote"])
             sub = jax.tree.map(lambda a: a[idx], host)   # batched gather
             if self.cache is not None:
                 keys = self.cache.keys_for(sub, k)
-                cached = [self.cache.get(key) for key in keys]
+                found = [self.cache.lookup(key) for key in keys]
+                cached = [f[0] if f is not None else None for f in found]
+                hit_src = [f[1] if f is not None else None for f in found]
             else:
                 keys = [None] * k
                 cached = [None] * k
+                hit_src = [None] * k
             miss = [j for j, c in enumerate(cached) if c is None]
             if miss:
-                marr = np.asarray(miss)
-                sub_miss = jax.tree.map(lambda a: a[marr], sub)
-                pending = (self.transport.submit(sub_miss) if asynchronous
-                           else _Resolved(self.transport.call(sub_miss)))
+                # route the window at submit time; an open breaker fails
+                # over to the next policy candidate immediately, and a
+                # fully-open registry (backend None) degrades the window
+                # to REJECTED/fallback without touching any transport
+                backend = self.router.pick()
+                if backend is not None:
+                    marr = np.asarray(miss)
+                    sub_miss = jax.tree.map(lambda a: a[marr], sub)
+                    pending = (backend.submit(sub_miss) if asynchronous
+                               else _Resolved(backend.call(sub_miss)))
         return _InFlight(t0=t0, b=b, real=real, conf=conf,
                          local_pred=local_pred, pred=pred, idx=idx, k=k,
-                         keys=keys, cached=cached, miss=miss,
-                         pending=pending)
+                         keys=keys, cached=cached, hit_src=hit_src,
+                         miss=miss, pending=pending, backend=backend)
 
     # -- runtime path: completion half ---------------------------------
     def _complete(self, fl: _InFlight) -> dict[str, np.ndarray]:
         remote_conf = np.full((fl.b,), np.inf, np.float32)
         n_hits = n_sent = n_failed = 0
+        bname = fl.backend.name if fl.backend is not None else UNROUTED
         if fl.k > 0:
             cached = fl.cached
             if fl.miss:
-                logits, ok = fl.pending.result()
-                n_sent = int(ok.sum())
-                n_failed = len(fl.miss) - n_sent
-                for w, j in enumerate(fl.miss):
-                    if ok[w]:
-                        cached[j] = logits[w]
-                        if self.cache is not None:
-                            self.cache.put(fl.keys[j], logits[w])
+                if fl.pending is not None:
+                    logits, ok = fl.pending.result()
+                    n_sent = int(ok.sum())
+                    n_failed = len(fl.miss) - n_sent
+                    for w, j in enumerate(fl.miss):
+                        if ok[w]:
+                            cached[j] = logits[w]
+                            if self.cache is not None:
+                                self.cache.put(fl.keys[j], logits[w],
+                                               source=bname)
+                else:                 # no backend available at submit time
+                    n_failed = len(fl.miss)
             n_hits = fl.k - len(fl.miss)
             got = [j for j, c in enumerate(cached) if c is not None]
             if got:
@@ -418,19 +509,67 @@ class CascadeEngine:
             t_remote = self.controller.t_remote
         accepted = (~escalated) | (remote_conf > t_remote)
 
+        # per-backend billing/latency attribution (DESIGN.md §6): billed
+        # calls and failures charge the routed backend; cache hits charge
+        # $0 to whichever backend originally filled the entry
+        cost_per = self.cost.backend_cost(fl.backend)
+        lat_per = self.cost.backend_latency(fl.backend)
+        window_cost = n_sent * cost_per
+        if n_sent or n_failed:
+            u = self.stats.backend_usage(bname)
+            u.remote_calls += n_sent
+            u.transport_failures += n_failed
+            u.cost += window_cost
+            u.remote_latency_s += n_sent * lat_per
+        if n_hits and fl.hit_src is not None:
+            miss_set = set(fl.miss)
+            for j in range(fl.k):
+                if j not in miss_set:
+                    src = fl.hit_src[j]
+                    self.stats.backend_usage(
+                        src if src is not None else UNATTRIBUTED
+                    ).cache_hits += 1
+
         self._account(fl.real, fl.k, n_sent, n_hits, n_failed,
-                      int((~accepted[:fl.real]).sum()))
+                      int((~accepted[:fl.real]).sum()),
+                      cost=window_cost,
+                      remote_latency_s=n_sent * lat_per)
         self.stats.record_wall(self._clock() - fl.t0, fl.real)
         if self.controller is not None:
             self.controller.observe(fl.conf[:fl.real], fl.k, fl.real,
-                                    remote_conf[:fl.real])
+                                    remote_conf[:fl.real],
+                                    cost=window_cost)
         return {"prediction": fl.pred, "local_pred": fl.local_pred,
                 "local_conf": fl.conf, "remote_conf": remote_conf,
                 "escalated": escalated, "accepted": accepted}
 
     # ------------------------------------------------------------------
+    def close(self, wait: bool = True) -> None:
+        """Drain any in-flight pipelined windows (their results are
+        accounted but discarded) and shut down every backend's thread
+        pool. Idempotent; a no-op on the fused path."""
+        while self._inflight:
+            self._complete(self._inflight.popleft())
+        if self.router is not None:
+            self.router.shutdown(wait=wait)
+
+    def __enter__(self) -> "CascadeEngine":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    # ------------------------------------------------------------------
     def _account(self, real, escalations, remote_calls, cache_hits,
-                 transport_failures, rejected):
+                 transport_failures, rejected, *, cost=None,
+                 remote_latency_s=None):
+        """Fold one window into the aggregate stats. ``cost`` and
+        ``remote_latency_s`` carry per-backend pricing from the runtime
+        path; when omitted (fused path) the CostModel defaults apply."""
+        if cost is None:
+            cost = remote_calls * self.cost.remote_cost_per_request
+        if remote_latency_s is None:
+            remote_latency_s = remote_calls * self.cost.remote_latency_s
         st = self.stats
         st.requests += real
         st.escalations += escalations
@@ -438,7 +577,7 @@ class CascadeEngine:
         st.cache_hits += cache_hits
         st.transport_failures += transport_failures
         st.rejected += rejected
-        st.total_cost += remote_calls * self.cost.remote_cost_per_request
+        st.total_cost += cost
         st.total_latency_s += (real * self.cost.local_latency_s
-                               + remote_calls * self.cost.remote_latency_s
+                               + remote_latency_s
                                + cache_hits * self.cost.cache_hit_latency_s)

@@ -1,0 +1,515 @@
+"""Multi-remote tier registry + routing (DESIGN.md §6): backend registry
+and policy ordering, breaker-driven speculative failover at submit time,
+per-backend billing/latency attribution (never double-billed), fail-back
+after half-open recovery, dollar-budget control, engine lifecycle
+(close/context manager), and determinism of routing + billing under
+adversarial remote completion orders (test_pipeline.py style)."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteBackend, RemoteResponseCache, RemoteRouter,
+                           RemoteTimeout, RemoteTransport, TransportConfig)
+from repro.runtime.calibration import calibrate, select_operating_point
+from repro.serving.engine import UNROUTED, CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+BILLING = ("requests", "escalations", "remote_calls", "cache_hits",
+           "transport_failures", "rejected", "total_cost")
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def quiet_tconf(**kw):
+    base = dict(retry_backoff_s=0.0, max_retries=0, breaker_failures=10**6,
+                timeout_s=60.0)
+    base.update(kw)
+    return TransportConfig(**base)
+
+
+def build(router, *, batch=8, budget=0.5, depth=1, controller=None,
+          cache=None):
+    engine = CascadeEngine(local_apply, batch_size=batch,
+                           remote_fraction_budget=budget, t_remote=0.0,
+                           transport=router, controller=controller,
+                           cache=cache)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7,
+                                pipeline_depth=depth)
+    return sched, engine
+
+
+def serve_all(sched, xs):
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    return sched.flush()
+
+
+def routing(responses):
+    return [(r.uid, r.prediction, r.source) for r in responses]
+
+
+def usage_sum(stats, field):
+    return sum(getattr(u, field) for u in stats.per_backend.values())
+
+
+def assert_backend_invariants(stats):
+    """escalations = Σ_backends (remote_calls + cache_hits + failures);
+    total_cost = Σ_backends cost (exactly, same-order float folds)."""
+    assert stats.escalations == (usage_sum(stats, "remote_calls")
+                                 + usage_sum(stats, "cache_hits")
+                                 + usage_sum(stats, "transport_failures"))
+    assert stats.remote_calls == usage_sum(stats, "remote_calls")
+    assert stats.cache_hits == usage_sum(stats, "cache_hits")
+    assert stats.transport_failures == usage_sum(stats, "transport_failures")
+    np.testing.assert_allclose(stats.total_cost, usage_sum(stats, "cost"),
+                               rtol=0, atol=1e-12)
+
+
+# --------------------------------------------------- registry + policies
+
+def test_backend_owns_transport_and_latency_stats():
+    t = {"now": 0.0}
+
+    def remote(x):
+        t["now"] += 0.1              # each window "takes" 100ms
+        return remote_apply(x)
+
+    b = RemoteBackend("fast", remote, quiet_tconf(),
+                      cost_per_request=0.008, latency_s=0.5,
+                      clock=lambda: t["now"])
+    assert b.latency_estimate() == 0.5           # modelled prior, no calls
+    logits, ok = b.call(np.float32(np.eye(4)))
+    assert ok.all()
+    np.testing.assert_allclose(logits, 5.0 * np.eye(4))
+    assert b.stats.latency_ema_s == pytest.approx(0.1)
+    assert b.latency_estimate() == pytest.approx(0.1)   # measured wins
+    assert b.stats.latency_percentile(95) == pytest.approx(0.1)
+    assert b.stats.mean_latency_s == pytest.approx(0.1)
+    assert b.available()
+
+
+def test_backend_wraps_existing_transport():
+    tr = RemoteTransport(remote_apply, quiet_tconf())
+    b = RemoteBackend("legacy", transport=tr)
+    assert b.transport is tr and b.cost_per_request is None
+    with pytest.raises(ValueError):
+        RemoteBackend("nothing")                 # no callable, no transport
+
+
+def test_router_policy_candidate_order():
+    a = RemoteBackend("a", remote_apply, quiet_tconf(),
+                      cost_per_request=0.008, latency_s=0.1)
+    b = RemoteBackend("b", remote_apply, quiet_tconf(),
+                      cost_per_request=0.002, latency_s=0.3)
+    c = RemoteBackend("c", remote_apply, quiet_tconf())   # unknown cost
+    names = lambda r: [x.name for x in r.candidates()]
+    assert names(RemoteRouter([a, b, c])) == ["a", "b", "c"]
+    assert names(RemoteRouter([a, b, c],
+                              policy="cheapest-available")) == ["b", "a", "c"]
+    r = RemoteRouter([a, b, c], policy="latency-ema")
+    assert names(r) == ["c", "a", "b"]           # unknown prior = 0.0
+    # measured EMA reorders: b becomes the fastest observed backend
+    b.stats.record_latency(0.01)
+    c.stats.record_latency(0.5)
+    assert names(r) == ["b", "a", "c"]
+    assert r.expected_cost_per_escalation(0.123) == 0.002
+    assert RemoteRouter([c]).expected_cost_per_escalation(0.123) == 0.123
+
+
+def test_router_validates_configuration():
+    a = RemoteBackend("a", remote_apply, quiet_tconf())
+    with pytest.raises(ValueError):
+        RemoteRouter([])
+    with pytest.raises(ValueError):
+        RemoteRouter([a, RemoteBackend("a", remote_apply, quiet_tconf())])
+    with pytest.raises(ValueError):
+        RemoteRouter([a], policy="round-robin")
+    with pytest.raises(KeyError):
+        RemoteRouter([a]).backend("missing")
+
+
+def test_router_pick_fails_over_on_open_breaker_and_recovers():
+    t = {"now": 0.0}
+    mk = lambda name: RemoteBackend(
+        name, remote_apply,
+        quiet_tconf(breaker_failures=1, breaker_reset_s=10.0),
+        clock=lambda: t["now"])
+    primary, standby = mk("primary"), mk("standby")
+    router = RemoteRouter([primary, standby])
+    assert router.pick() is primary
+    primary.breaker.record_failure()             # opens (threshold 1)
+    assert not primary.available()
+    assert router.pick() is standby              # speculative failover
+    assert router.stats.failovers == 1
+    t["now"] = 11.0                              # past breaker_reset_s
+    assert primary.available()                   # half-open probe due
+    assert router.pick() is primary              # automatic fail-back
+    assert router.stats.picks == {"primary": 2, "standby": 1}
+
+
+def test_router_unrouted_when_every_breaker_open():
+    t = {"now": 0.0}
+    backends = [RemoteBackend(
+        n, remote_apply, quiet_tconf(breaker_failures=1, breaker_reset_s=99),
+        clock=lambda: t["now"]) for n in ("a", "b")]
+    router = RemoteRouter(backends)
+    for b in backends:
+        b.breaker.record_failure()
+    assert router.pick() is None
+    assert router.stats.unrouted == 1
+
+
+# ------------------------------------- single-backend == raw transport
+
+def test_single_backend_registry_bitwise_matches_raw_transport():
+    rng = np.random.default_rng(0)
+    xs, _ = make_stream(rng, 64)
+
+    tr = RemoteTransport(remote_apply, quiet_tconf())
+    s_raw, e_raw = build(tr)
+    router = RemoteRouter([RemoteBackend("remote", remote_apply,
+                                         quiet_tconf())])
+    s_reg, e_reg = build(router, depth=4)
+
+    r_raw = serve_all(s_raw, xs)
+    r_reg = serve_all(s_reg, xs)
+    assert routing(r_raw) == routing(r_reg)
+    for f in BILLING:
+        assert getattr(e_raw.stats, f) == getattr(e_reg.stats, f), f
+    # the auto-wrapped raw transport attributes identically to the
+    # explicit single-backend registry
+    assert e_raw.stats.per_backend == e_reg.stats.per_backend
+    assert_backend_invariants(e_reg.stats)
+    e_raw.close()
+    e_reg.close()
+
+
+# --------------------------------------------- failover accounting
+
+def test_failover_serves_all_requests_and_never_double_bills():
+    rng = np.random.default_rng(1)
+    xs, _ = make_stream(rng, 48, hard_frac=1.0)   # everything escalates
+
+    def down(x):
+        raise RemoteTimeout("primary outage")
+
+    primary = RemoteBackend("primary", down,
+                            quiet_tconf(breaker_failures=1),
+                            cost_per_request=0.002)
+    secondary = RemoteBackend("secondary", remote_apply, quiet_tconf(),
+                              cost_per_request=0.008)
+    router = RemoteRouter([primary, secondary])
+    sched, eng = build(router, batch=8, budget=0.5)
+    responses = serve_all(sched, xs)
+
+    assert sorted(r.uid for r in responses) == list(range(48))   # no drops
+    st = eng.stats
+    # window 1 fails on the primary (4 escalations lost, $0), every later
+    # window speculatively fails over to the secondary
+    assert st.per_backend["primary"].remote_calls == 0
+    assert st.per_backend["primary"].cost == 0.0
+    assert st.per_backend["primary"].transport_failures == 4
+    assert st.per_backend["secondary"].transport_failures == 0
+    assert st.per_backend["secondary"].remote_calls == st.remote_calls == 20
+    np.testing.assert_allclose(st.per_backend["secondary"].cost,
+                               20 * 0.008)
+    np.testing.assert_allclose(st.total_cost, 20 * 0.008)
+    assert router.stats.failovers == 5
+    assert_backend_invariants(st)
+    eng.close()
+
+
+def test_failback_after_half_open_recovery():
+    t = {"now": 0.0}
+    down = {"on": True}
+
+    def primary_fn(x):
+        t["now"] += 0.01
+        if down["on"]:
+            raise RemoteTimeout("outage")
+        return remote_apply(x)
+
+    primary = RemoteBackend(
+        "primary", primary_fn,
+        quiet_tconf(breaker_failures=1, breaker_reset_s=1.0),
+        cost_per_request=0.001, clock=lambda: t["now"])
+    secondary = RemoteBackend("secondary", remote_apply, quiet_tconf(),
+                              cost_per_request=0.01,
+                              clock=lambda: t["now"])
+    router = RemoteRouter([primary, secondary])
+    sched, eng = build(router, batch=8, budget=0.5)
+    rng = np.random.default_rng(2)
+
+    def one_batch():
+        xs, _ = make_stream(rng, 8, hard_frac=1.0)
+        return serve_all(sched, xs)
+
+    one_batch()                       # primary fails -> breaker opens
+    assert eng.stats.per_backend["primary"].transport_failures == 4
+    one_batch()                       # routed to the secondary
+    assert eng.stats.per_backend["secondary"].remote_calls == 4
+    down["on"] = False
+    t["now"] += 2.0                   # past breaker_reset_s: half-open due
+    one_batch()                       # fail-back: primary serves again
+    assert eng.stats.per_backend["primary"].remote_calls == 4
+    assert primary.breaker.state == "closed"
+    np.testing.assert_allclose(eng.stats.total_cost,
+                               4 * 0.01 + 4 * 0.001)
+    assert_backend_invariants(eng.stats)
+    eng.close()
+
+
+def test_unrouted_windows_degrade_to_fallback_and_attribute():
+    rng = np.random.default_rng(3)
+    xs, _ = make_stream(rng, 16, hard_frac=1.0)
+
+    def down(x):
+        raise RemoteTimeout("down")
+
+    router = RemoteRouter([RemoteBackend(
+        "only", down, quiet_tconf(breaker_failures=1, breaker_reset_s=1e9),
+        cost_per_request=0.004)])
+    sched, eng = build(router, batch=8, budget=0.5)
+    responses = serve_all(sched, xs)
+    assert sorted(r.uid for r in responses) == list(range(16))
+    assert {r.source for r in responses} == {"local", "fallback"}
+    # window 1 fails on the backend; window 2 is unrouted (breaker open)
+    st = eng.stats
+    assert st.per_backend["only"].transport_failures == 4
+    assert st.per_backend[UNROUTED].transport_failures == 4
+    assert st.total_cost == 0.0 and st.remote_calls == 0
+    assert router.stats.unrouted == 1
+    assert_backend_invariants(st)
+    eng.close()
+
+
+# --------------------------------------------- determinism under reorder
+
+def test_routing_deterministic_under_adversarial_completion_orders():
+    """Two-backend registry, pre-opened primary breaker + seeded
+    per-content faults on the secondary: FIFO drain must make responses,
+    aggregate billing AND per-backend attribution identical under
+    inverted remote completion orders."""
+    rng = np.random.default_rng(4)
+    xs, _ = make_stream(rng, 96)
+
+    def delays_a(i):
+        return 0.002 * (i % 5)
+
+    def delays_b(i):
+        return 0.002 * (4 - i % 5)
+
+    def run(delays):
+        calls = {"n": 0}
+        lock = threading.Lock()
+
+        def flaky_secondary(x):
+            with lock:
+                calls["n"] += 1
+                i = calls["n"]
+            time.sleep(delays(i))
+            x = np.asarray(x)
+            if float(x.sum()) % 1.0 < 0.2:       # content-keyed faults
+                raise RemoteTimeout("seeded fault")
+            return remote_apply(x)
+
+        primary = RemoteBackend(
+            "primary", remote_apply,
+            quiet_tconf(breaker_failures=1, breaker_reset_s=1e9),
+            cost_per_request=0.001)
+        primary.breaker.record_failure()          # deterministically open
+        secondary = RemoteBackend("secondary", flaky_secondary,
+                                  quiet_tconf(max_in_flight=2),
+                                  cost_per_request=0.009)
+        sched, eng = build(RemoteRouter([primary, secondary]),
+                           batch=8, budget=0.5, depth=4)
+        resp = serve_all(sched, xs)
+        eng.close()
+        return resp, eng
+
+    r_a, e_a = run(delays_a)
+    r_b, e_b = run(delays_b)
+    assert routing(r_a) == routing(r_b)
+    for f in BILLING:
+        assert getattr(e_a.stats, f) == getattr(e_b.stats, f), f
+    assert e_a.stats.per_backend == e_b.stats.per_backend
+    assert e_a.stats.per_backend["secondary"].remote_calls > 0
+    assert "primary" not in e_a.stats.per_backend   # never routed to
+    assert_backend_invariants(e_a.stats)
+
+
+def test_multi_backend_pipelined_matches_serial_when_healthy():
+    """Healthy registry, cheapest-available policy: a deep pipeline must
+    bill and answer exactly like depth=1, and all traffic goes to the
+    cheapest backend."""
+    rng = np.random.default_rng(5)
+    xs, _ = make_stream(rng, 64)
+
+    def mk():
+        cheap = RemoteBackend("cheap", remote_apply, quiet_tconf(),
+                              cost_per_request=0.002)
+        fast = RemoteBackend("fast", remote_apply, quiet_tconf(),
+                             cost_per_request=0.008)
+        return RemoteRouter([fast, cheap], policy="cheapest-available")
+
+    s_ser, e_ser = build(mk(), batch=8)
+    s_pip, e_pip = build(mk(), batch=8, depth=4)
+    assert routing(serve_all(s_ser, xs)) == routing(serve_all(s_pip, xs))
+    for f in BILLING:
+        assert getattr(e_ser.stats, f) == getattr(e_pip.stats, f), f
+    assert e_ser.stats.per_backend == e_pip.stats.per_backend
+    assert "fast" not in e_pip.stats.per_backend    # never routed to
+    assert e_pip.stats.per_backend["cheap"].cost == e_pip.stats.total_cost
+    e_ser.close()
+    e_pip.close()
+
+
+# --------------------------------------------- cache attribution
+
+def test_cache_hits_attribute_to_filling_backend():
+    rng = np.random.default_rng(6)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    cache = RemoteResponseCache(64)
+    router = RemoteRouter([RemoteBackend("filler", remote_apply,
+                                         quiet_tconf(),
+                                         cost_per_request=0.005)])
+    sched, eng = build(router, batch=8, budget=0.5, cache=cache)
+    serve_all(sched, xs)                       # fills entries via "filler"
+    billed = eng.stats.remote_calls
+    serve_all(sched, xs)                       # identical content: hits
+    st = eng.stats
+    assert st.remote_calls == billed           # no re-billing
+    assert st.per_backend["filler"].cache_hits == st.cache_hits == 4
+    np.testing.assert_allclose(st.total_cost, billed * 0.005)
+    assert_backend_invariants(st)
+    eng.close()
+
+
+def test_cache_lookup_returns_source_and_legacy_get_still_works():
+    cache = RemoteResponseCache(4)
+    k = b"k"
+    cache.put(k, np.float32([1.0]), source="gpt-big")
+    val, src = cache.lookup(k)
+    np.testing.assert_allclose(val, [1.0])
+    assert src == "gpt-big"
+    np.testing.assert_allclose(cache.get(k), [1.0])   # value-only API
+    cache.put(b"legacy", np.float32([2.0]))           # no source recorded
+    assert cache.lookup(b"legacy")[1] is None
+
+
+# --------------------------------------------- engine lifecycle
+
+def test_engine_close_drains_windows_and_shuts_pools():
+    rng = np.random.default_rng(7)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    router = RemoteRouter([RemoteBackend("r", remote_apply, quiet_tconf())])
+    _, eng = build(router, batch=8)
+    eng.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    assert eng.inflight == 1
+    eng.close()
+    assert eng.inflight == 0
+    assert eng.stats.requests == 8             # drained windows accounted
+    for b in router:
+        assert b.transport._pool is None       # pools torn down
+    eng.close()                                # idempotent
+
+
+def test_engine_context_manager_closes():
+    rng = np.random.default_rng(8)
+    xs, _ = make_stream(rng, 8)
+    router = RemoteRouter([RemoteBackend("r", remote_apply, quiet_tconf())])
+    with CascadeEngine(local_apply, batch_size=8,
+                       remote_fraction_budget=0.5, t_remote=0.0,
+                       transport=router) as eng:
+        eng.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    assert eng.inflight == 0
+    assert router.backends[0].transport._pool is None
+
+
+def test_fused_engine_close_is_noop():
+    eng = CascadeEngine(local_apply, lambda x: 5.0 * jnp.asarray(x),
+                        batch_size=8, remote_fraction_budget=0.5,
+                        t_remote=0.0)
+    eng.close()                                # no transport: nothing to do
+
+
+# --------------------------------------------- dollar budget control
+
+def test_controller_holds_dollar_budget_across_price_change():
+    """Fraction mode would keep escalating 20% regardless of price; the
+    dollar budget must instead halve the fraction when the blended price
+    per escalation doubles (e.g. failover onto a pricier backend)."""
+    rng = np.random.default_rng(9)
+    budget = 0.0008                            # $/request
+    ctl = AdaptiveController(ControllerConfig(
+        target_remote_fraction=0.2, window=256,
+        cost_budget_per_request=budget))
+    b = 32
+
+    def run_phase(price, batches):
+        esc = req = spend = 0.0
+        for _ in range(batches):
+            conf = np.where(rng.random(b) < 0.8, rng.uniform(0.8, 1.0, b),
+                            rng.uniform(0.3, 0.7, b))
+            cap = ctl.capacity(b)
+            t = ctl.t_local
+            k = min(cap, b) if t is None else min(int((conf < t).sum()), cap)
+            ctl.observe(conf, k, b, cost=k * price)
+            esc += k
+            req += b
+            spend += k * price
+        return esc / req, spend / req
+
+    run_phase(0.004, 96)                       # settle at $0.004/escalation
+    frac_cheap, spend_cheap = run_phase(0.004, 64)
+    assert abs(frac_cheap - 0.2) <= 0.04       # 0.0008 / 0.004 = 0.2
+    assert abs(spend_cheap - budget) <= 0.2 * budget
+    run_phase(0.008, 96)                       # price doubles (failover)
+    frac_dear, spend_dear = run_phase(0.008, 64)
+    assert abs(frac_dear - 0.1) <= 0.04        # 0.0008 / 0.008 = 0.1
+    assert abs(spend_dear - budget) <= 0.2 * budget
+    assert ctl.state.ema_cost_per_escalation == pytest.approx(0.008,
+                                                              rel=0.05)
+    assert ctl.state.effective_target == pytest.approx(0.1, rel=0.1)
+
+
+def test_calibration_cost_budget_selection():
+    rng = np.random.default_rng(10)
+    hard = rng.random(512) < 0.4
+    lc = np.where(hard, rng.uniform(0.2, 0.6, 512),
+                  rng.uniform(0.7, 1.0, 512))
+    lok = rng.random(512) < np.where(hard, 0.3, 0.95)
+    rc = rng.uniform(0.5, 1.0, 512)
+    rok = rng.random(512) < 0.97
+    price = 0.01
+    point, k, front = calibrate(lc, lok, rc, rok, cost_budget=0.002,
+                                batch_size=32, grid=17,
+                                remote_cost_per_request=price)
+    assert point.cost_per_request <= 0.002 + 1e-12
+    assert point.remote_fraction <= 0.2 + 1e-9     # 0.002 / 0.01
+    assert 1 <= k <= 32
+    with pytest.raises(ValueError):
+        select_operating_point(front)              # no budget at all
+    with pytest.raises(ValueError):
+        select_operating_point(front, 0.2, cost_budget=0.002)  # both
