@@ -1,0 +1,236 @@
+"""Perf regression gate for the serving/routing benchmarks (ISSUE 4).
+
+Compares freshly produced ``BENCH_serving.json`` / ``BENCH_routing.json``
+against the committed baselines in ``benchmarks/baselines/`` and FAILS
+(exit 1) when a tracked metric regresses past tolerance — the
+``BENCH_*.json`` family stops being informational-only and starts gating
+merges.
+
+Two kinds of checks:
+
+  * tolerance — throughput may drop at most ``--throughput-tol`` (default
+    15%) below baseline; p95 latency may rise at most ``--p95-tol``
+    (default 25%) above baseline, with a small absolute floor
+    (``--p95-floor``) so millisecond-scale numbers don't flap on noise.
+    The fake remotes sleep() their round trips, so these numbers are
+    dominated by pipeline math rather than host speed and travel well
+    between machines.
+  * hard — correctness invariants read from the FRESH report itself:
+    zero dropped requests, bitwise-identical predictions/billing across
+    serial / pipelined / streaming, and per-backend billing summing
+    exactly to the total. These fail regardless of tolerances.
+
+In GitHub Actions the script emits ``::error`` / ``::notice`` workflow
+annotations (visible on the PR) instead of silently uploading artifacts.
+``--update-baselines`` rewrites the committed baselines from the fresh
+JSONs (run locally after an intentional perf change, and commit).
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--serving BENCH_serving.json] [--routing BENCH_routing.json] \
+        [--baseline-dir benchmarks/baselines] [--update-baselines]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+
+BASELINE_DIR = os.path.join(os.path.dirname(__file__), "baselines")
+THROUGHPUT_TOL = 0.15           # allowed fractional throughput drop
+P95_TOL = 0.25                  # allowed fractional p95 rise
+P95_FLOOR_S = 0.020             # absolute p95 slack (ms-scale noise)
+
+
+def _annotate(level: str, msg: str) -> None:
+    """Human line + GitHub workflow annotation (PR-visible in CI)."""
+    print(f"[check_regression] {level.upper()}: {msg}")
+    if os.environ.get("GITHUB_ACTIONS") == "true":
+        print(f"::{'error' if level == 'error' else 'notice'}"
+              f" title=bench regression gate::{msg}")
+
+
+def _get(d: dict, path: str):
+    for part in path.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+class Gate:
+    def __init__(self, throughput_tol: float, p95_tol: float,
+                 p95_floor_s: float):
+        self.throughput_tol = throughput_tol
+        self.p95_tol = p95_tol
+        self.p95_floor_s = p95_floor_s
+        self.failures: list[str] = []
+        self.passes: list[str] = []
+
+    def hard(self, report: dict, path: str, label: str) -> None:
+        """A correctness flag in the fresh report that must be True."""
+        val = _get(report, path)
+        if val is True:
+            self.passes.append(label)
+        else:
+            self.failures.append(f"{label}: expected True, got {val!r}")
+
+    def throughput(self, fresh: dict, base: dict, path: str,
+                   label: str) -> None:
+        f, b = _get(fresh, path), _get(base, path)
+        if f is None or b is None:
+            self.failures.append(f"{label}: metric {path!r} missing "
+                                 f"(fresh={f!r}, baseline={b!r})")
+            return
+        floor = b * (1.0 - self.throughput_tol)
+        if f >= floor:
+            self.passes.append(f"{label} ({f:.1f} >= {floor:.1f} rps)")
+        else:
+            self.failures.append(
+                f"{label}: throughput {f:.1f} rps fell more than "
+                f"{self.throughput_tol:.0%} below baseline {b:.1f} rps")
+
+    def p95(self, fresh: dict, base: dict, path: str, label: str) -> None:
+        f, b = _get(fresh, path), _get(base, path)
+        if f is None or b is None:
+            self.failures.append(f"{label}: metric {path!r} missing "
+                                 f"(fresh={f!r}, baseline={b!r})")
+            return
+        ceil = b * (1.0 + self.p95_tol) + self.p95_floor_s
+        if f <= ceil:
+            self.passes.append(f"{label} ({f*1e3:.1f} <= {ceil*1e3:.1f} ms)")
+        else:
+            self.failures.append(
+                f"{label}: p95 {f*1e3:.1f} ms rose more than "
+                f"{self.p95_tol:.0%} (+{self.p95_floor_s*1e3:.0f} ms floor)"
+                f" above baseline {b*1e3:.1f} ms")
+
+
+def check_serving(gate: Gate, fresh: dict, base: dict) -> None:
+    # hard correctness invariants from the fresh run
+    gate.hard(fresh, "predictions_identical",
+              "serving: serial/pipelined predictions identical")
+    gate.hard(fresh, "billing_identical",
+              "serving: serial/pipelined billing identical")
+    if ("streaming" in fresh) != ("streaming" in base):
+        # a FIFO-mode re-baseline (or a FIFO-mode CI run) must not
+        # silently disable every streaming invariant
+        gate.failures.append(
+            "serving: 'streaming' section present in "
+            f"{'fresh' if 'streaming' in fresh else 'baseline'} only — "
+            "run both with --completion-mode streaming (and re-baseline "
+            "with --update-baselines if intentional)")
+        return
+    if "streaming" in base:
+        gate.hard(fresh, "streaming.checks.zero_dropped",
+                  "serving: streaming zero dropped requests")
+        gate.hard(fresh, "streaming.checks.predictions_identical",
+                  "serving: streaming predictions identical to FIFO")
+        gate.hard(fresh, "streaming.checks.billing_identical",
+                  "serving: streaming billing sums identical to FIFO")
+        gate.hard(fresh, "streaming.checks.trusted_local_p95_halved",
+                  "serving: streaming trusted-local p95 <= 0.5x FIFO p95")
+    # perf tolerances vs the committed baseline
+    for path_ in ("serial", "pipelined"):
+        gate.throughput(fresh, base, f"{path_}.throughput_rps",
+                        f"serving: {path_} throughput")
+        gate.p95(fresh, base, f"{path_}.p95_wall_latency_s",
+                 f"serving: {path_} window p95")
+    if "streaming" in base:
+        gate.throughput(fresh, base, "streaming.throughput_rps",
+                        "serving: streaming throughput")
+        gate.p95(fresh, base, "streaming.trusted_local.p95_latency_s",
+                 "serving: streaming trusted-local p95")
+        gate.p95(fresh, base, "streaming.escalated.p95_latency_s",
+                 "serving: streaming escalated p95")
+
+
+def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
+    gate.hard(fresh, "checks.zero_dropped",
+              "routing: zero dropped requests across outage")
+    gate.hard(fresh, "checks.billing_sums_to_total",
+              "routing: per-backend billing sums to total")
+    gate.hard(fresh, "checks.escalations_attributed",
+              "routing: every escalation attributed to a backend")
+    gate.hard(fresh, "checks.failover_to_secondary",
+              "routing: failover to secondary during outage")
+    gate.hard(fresh, "checks.failback_to_primary",
+              "routing: fail-back to primary after recovery")
+    gate.throughput(fresh, base, "routed.throughput_rps",
+                    "routing: routed throughput")
+
+
+def _load(path: str, what: str) -> dict | None:
+    if not os.path.exists(path):
+        _annotate("error", f"{what} JSON missing: {path}")
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--serving", default="BENCH_serving.json",
+                    help="fresh serving bench JSON ('' skips)")
+    ap.add_argument("--routing", default="BENCH_routing.json",
+                    help="fresh routing bench JSON ('' skips)")
+    ap.add_argument("--baseline-dir", default=BASELINE_DIR)
+    ap.add_argument("--throughput-tol", type=float, default=THROUGHPUT_TOL)
+    ap.add_argument("--p95-tol", type=float, default=P95_TOL)
+    ap.add_argument("--p95-floor", type=float, default=P95_FLOOR_S,
+                    help="absolute p95 slack in seconds")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy the fresh JSONs over the committed "
+                         "baselines instead of checking")
+    args = ap.parse_args(argv)
+
+    pairs = []          # (fresh path, baseline path, checker, tag)
+    if args.serving:
+        pairs.append((args.serving,
+                      os.path.join(args.baseline_dir, "BENCH_serving.json"),
+                      check_serving, "serving"))
+    if args.routing:
+        pairs.append((args.routing,
+                      os.path.join(args.baseline_dir, "BENCH_routing.json"),
+                      check_routing, "routing"))
+    if not pairs:
+        _annotate("error", "nothing to check (both --serving and "
+                  "--routing empty)")
+        return 2
+
+    if args.update_baselines:
+        os.makedirs(args.baseline_dir, exist_ok=True)
+        for fresh_path, base_path, _, tag in pairs:
+            if not os.path.exists(fresh_path):
+                _annotate("error", f"cannot update {tag} baseline: "
+                          f"{fresh_path} missing")
+                return 2
+            shutil.copyfile(fresh_path, base_path)
+            print(f"[check_regression] baseline updated: {base_path}")
+        return 0
+
+    gate = Gate(args.throughput_tol, args.p95_tol, args.p95_floor)
+    for fresh_path, base_path, checker, tag in pairs:
+        fresh = _load(fresh_path, f"fresh {tag}")
+        base = _load(base_path, f"baseline {tag}")
+        if fresh is None or base is None:
+            gate.failures.append(f"{tag}: missing input (see above)")
+            continue
+        checker(gate, fresh, base)
+
+    for msg in gate.passes:
+        print(f"[check_regression] ok: {msg}")
+    if gate.failures:
+        for msg in gate.failures:
+            _annotate("error", msg)
+        _annotate("error", f"{len(gate.failures)} regression check(s) "
+                  f"FAILED ({len(gate.passes)} passed)")
+        return 1
+    _annotate("notice", f"all {len(gate.passes)} regression checks passed "
+              f"against committed baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

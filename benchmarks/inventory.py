@@ -6,7 +6,6 @@ no allocation)."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.analysis.roofline import param_counts
 from repro.configs import INPUT_SHAPES, get_config, list_archs, \

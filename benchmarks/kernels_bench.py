@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.decode_attention.ops import decode_attn
 from repro.kernels.flash_attention.ops import attention
@@ -23,10 +22,10 @@ from repro.kernels.rwkv6_scan.ops import rwkv6_time_mix_scan
 
 
 def _time(fn, *args, iters=3, **kw):
-    out = jax.block_until_ready(fn(*args, **kw))
+    jax.block_until_ready(fn(*args, **kw))
     t0 = time.perf_counter()
     for _ in range(iters):
-        out = jax.block_until_ready(fn(*args, **kw))
+        jax.block_until_ready(fn(*args, **kw))
     return (time.perf_counter() - t0) / iters
 
 

@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.data.synthetic import make_classification_task
 from repro.models import surrogate as S
@@ -54,7 +53,7 @@ def run(verbose: bool = True) -> list[dict]:
     t_l = measure_local_latency()
     rows = []
     if verbose:
-        print(f"\n--- Latency (Eq. 2: t_l + r*t_r < t_r) ---")
+        print("\n--- Latency (Eq. 2: t_l + r*t_r < t_r) ---")
         print(f"measured local latency t_l = {t_l * 1e3:.2f} ms "
               f"(surrogate fwd + MaxSoftmax, batch=1, this CPU)")
         print(f"{'case':>12} {'t_r(s)':>7} {'break-even':>10} "

@@ -10,8 +10,10 @@
   kernels     kernel microbench (ours)
   runtime     adaptive cascade runtime (budget tracking under drift,
               circuit breaker, remote-response cache — DESIGN.md)
-  serving     pipelined vs serial serving path (throughput, p50/p95 wall
-              latency — DESIGN.md §5; also writes BENCH_serving.json)
+  serving     pipelined vs serial serving path + streaming per-request
+              completion (throughput, p50/p95 wall latency, trusted-local
+              vs escalated hand-back — DESIGN.md §5, §7; also writes
+              BENCH_serving.json, gated in CI by check_regression.py)
   routing     multi-remote failover vs single remote under a primary
               outage (throughput, realised $ cost, per-backend p95 —
               DESIGN.md §6; also writes BENCH_routing.json)

@@ -1,7 +1,8 @@
-"""Pipelined serving-path benchmark (ISSUE 2 acceptance; DESIGN.md §5).
+"""Pipelined + streaming serving-path benchmark (ISSUE 2/4 acceptance;
+DESIGN.md §5, §7).
 
 Synthetic load at ~20% escalation against a fake remote with a real
-0.3s round-trip latency. Two engines serve the SAME request stream:
+0.3s round-trip latency. Three engines serve the SAME request stream:
 
   serial    — the runtime path, one microbatch at a time: local step,
               then block on the remote window before the next batch's
@@ -9,19 +10,27 @@ Synthetic load at ~20% escalation against a fake remote with a real
   pipelined — ``pipeline_depth`` microbatches in flight: batch i+1's
               local tier (fused confidence gate) runs while batch i's
               escalations are on the wire; windows drain in submission
-              order.
+              order (FIFO);
+  streaming — the same pipeline with per-request completion: locally
+              trusted requests hand back the moment the confidence gate
+              clears, escalations stream back as their remote futures
+              resolve (``--completion-mode streaming``).
 
-Throughput is the headline metric; the run also VERIFIES the two paths
-produce bitwise-identical predictions/routing and identical billing
-stats — overlap must never change what the cascade answers or charges.
+Throughput is the headline FIFO metric; the streaming section reports
+the per-request hand-back latency distribution split by trusted-local
+vs escalated rows. The run VERIFIES that all paths produce bitwise-
+identical predictions/routing and identical billing stats — overlap and
+reordering must never change what the cascade answers or charges — and
+that the streaming trusted-local p95 is at most half the FIFO-drain
+per-request p95 (ISSUE 4 acceptance).
 
-Machine-readable results (throughput, p50/p95 measured wall latency,
-remote fraction, speedup) are written to ``BENCH_serving.json`` so the
-perf trajectory is tracked across PRs.
+Machine-readable results are written to ``BENCH_serving.json`` so the
+perf trajectory is tracked across PRs and gated by
+``benchmarks/check_regression.py``.
 
     PYTHONPATH=src python -m benchmarks.serving_bench \
         [--requests 1024] [--depth 8] [--remote-latency 0.3] \
-        [--json BENCH_serving.json]
+        [--completion-mode streaming] [--json BENCH_serving.json]
 """
 
 from __future__ import annotations
@@ -34,12 +43,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime import RemoteTransport, TransportConfig
-from repro.serving.engine import CascadeEngine
+from repro.serving.engine import BILLING_FIELDS, CascadeEngine
 from repro.serving.scheduler import MicrobatchScheduler, Request
 
 BATCH = 32
 NCLS = 8
 TARGET = 0.20           # escalation fraction (capacity-k, no controller)
+STREAMING_P95_RATIO = 0.5       # trusted-local p95 <= ratio * FIFO p95
 
 
 def local_apply(x):
@@ -65,7 +75,7 @@ def make_load(rng, n, hard_frac=0.3):
     return np.float32(x), labels
 
 
-def _serve(xs, depth: int, latency_s: float):
+def _serve(xs, depth: int, latency_s: float, completion_mode="fifo"):
     transport = RemoteTransport(
         make_remote(latency_s),
         TransportConfig(max_in_flight=BATCH, retry_backoff_s=0.0,
@@ -75,7 +85,8 @@ def _serve(xs, depth: int, latency_s: float):
                            remote_fraction_budget=TARGET, t_remote=0.0,
                            transport=transport)
     sched = MicrobatchScheduler(engine, fallback=lambda r: -1,
-                                pipeline_depth=depth)
+                                pipeline_depth=depth,
+                                completion_mode=completion_mode)
     # warm the jit cache with one out-of-band batch, then reset accounting
     engine.serve({"local": xs[:BATCH], "remote": xs[:BATCH]})
     engine.stats = type(engine.stats)()
@@ -85,11 +96,12 @@ def _serve(xs, depth: int, latency_s: float):
     responses = sched.flush()
     wall = time.perf_counter() - t0
     transport.shutdown()
-    return responses, engine, wall
+    return responses, engine, wall, sched
 
 
 def _metrics(tag, responses, engine, wall, n) -> dict:
     st = engine.stats
+    lat = [r.latency_s for r in responses]
     return {
         "path": tag,
         "requests": n,
@@ -98,6 +110,9 @@ def _metrics(tag, responses, engine, wall, n) -> dict:
         "p50_wall_latency_s": st.wall_percentile(50),
         "p95_wall_latency_s": st.wall_percentile(95),
         "mean_wall_latency_s": st.mean_wall_latency_s,
+        # per-request hand-back latency (window dispatch -> response)
+        "p50_request_latency_s": float(np.percentile(lat, 50)),
+        "p95_request_latency_s": float(np.percentile(lat, 95)),
         "modelled_mean_latency_s": st.mean_latency_s,
         "remote_fraction": st.remote_fraction,
         "escalation_fraction": st.escalation_fraction,
@@ -112,24 +127,47 @@ def _metrics(tag, responses, engine, wall, n) -> dict:
     }
 
 
+def _latency_split(responses) -> dict:
+    """Per-request hand-back latency, split trusted-local vs escalated."""
+    out = {}
+    for tag, rows in (
+            ("trusted_local", [r for r in responses if r.source == "local"]),
+            ("escalated", [r for r in responses if r.source != "local"])):
+        lat = [r.latency_s for r in rows]
+        out[tag] = {
+            "count": len(rows),
+            "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+        }
+    return out
+
+
+def _by_uid(responses):
+    return {r.uid: (r.prediction, r.source) for r in responses}
+
+
+def _billing_identical(a, b) -> bool:
+    if any(getattr(a.stats, f) != getattr(b.stats, f) for f in BILLING_FIELDS):
+        return False
+    cost = lambda e: {n: u.cost for n, u in e.stats.per_backend.items()}
+    return cost(a) == cost(b)
+
+
 def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
-        remote_latency_s: float = 0.3,
+        remote_latency_s: float = 0.3, completion_mode: str = "streaming",
         json_path: str | None = "BENCH_serving.json") -> dict:
     rng = np.random.default_rng(0)
     xs, _ = make_load(rng, requests)
 
-    r_ser, eng_ser, w_ser = _serve(xs, depth=1, latency_s=remote_latency_s)
-    r_pip, eng_pip, w_pip = _serve(xs, depth=depth,
-                                   latency_s=remote_latency_s)
+    r_ser, eng_ser, w_ser, _ = _serve(xs, depth=1,
+                                      latency_s=remote_latency_s)
+    r_pip, eng_pip, w_pip, _ = _serve(xs, depth=depth,
+                                      latency_s=remote_latency_s)
 
     identical = ([(r.uid, r.prediction, r.source) for r in r_ser]
                  == [(r.uid, r.prediction, r.source) for r in r_pip])
-    billing_fields = ("requests", "escalations", "remote_calls",
-                      "cache_hits", "transport_failures", "rejected",
-                      "total_cost")
-    billing_identical = all(getattr(eng_ser.stats, f)
-                            == getattr(eng_pip.stats, f)
-                            for f in billing_fields)
+    billing_identical = _billing_identical(eng_ser, eng_pip)
 
     n = len(xs)
     serial = _metrics("serial", r_ser, eng_ser, w_ser, n)
@@ -147,6 +185,40 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
         "passed_2x": (serial["wall_s"] / pipelined["wall_s"] >= 2.0
                       and identical and billing_identical),
     }
+
+    # --- streaming completion mode (DESIGN.md §7) ---
+    if completion_mode == "streaming":
+        r_str, eng_str, w_str, s_str = _serve(
+            xs, depth=depth, latency_s=remote_latency_s,
+            completion_mode="streaming")
+        fifo_p95 = pipelined["p95_request_latency_s"]
+        split = _latency_split(r_str)
+        local_p95 = split["trusted_local"]["p95_latency_s"]
+        checks = {
+            # reordering must never change answers, routing or billing
+            "predictions_identical": _by_uid(r_str) == _by_uid(r_pip),
+            "billing_identical": _billing_identical(eng_str, eng_pip),
+            "zero_dropped": len(r_str) == n,
+            # the point of streaming: cheap locally-trusted requests no
+            # longer inherit the remote p95 (ISSUE 4 acceptance)
+            "trusted_local_p95_halved":
+                local_p95 <= STREAMING_P95_RATIO * fifo_p95,
+        }
+        report["streaming"] = {
+            "wall_s": w_str,
+            "throughput_rps": n / w_str,
+            "first_response_s": s_str.first_response_s,
+            "fifo_p95_request_latency_s": fifo_p95,
+            "trusted_local_p95_ratio_vs_fifo":
+                local_p95 / max(fifo_p95, 1e-12),
+            **split,
+            "checks": checks,
+            "passed": all(checks.values()),
+        }
+        report["passed"] = report["passed_2x"] and all(checks.values())
+    else:
+        report["passed"] = report["passed_2x"]
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=1)
@@ -162,8 +234,21 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
                   f"{m['p95_wall_latency_s']*1e3:6.0f}m "
                   f"{m['remote_fraction']:8.2f}")
         print(f"speedup {report['speedup']:.2f}x; predictions identical: "
-              f"{identical}; billing identical: {billing_identical}"
-              + (f"; JSON -> {json_path}" if json_path else ""))
+              f"{identical}; billing identical: {billing_identical}")
+        if "streaming" in report:
+            s = report["streaming"]
+            print("--- Streaming completion (per-request hand-back) ---")
+            print(f"trusted-local p95 "
+                  f"{s['trusted_local']['p95_latency_s']*1e3:7.1f} ms "
+                  f"({s['trusted_local']['count']} requests) vs FIFO "
+                  f"per-request p95 {s['fifo_p95_request_latency_s']*1e3:.1f}"
+                  f" ms -> ratio {s['trusted_local_p95_ratio_vs_fifo']:.3f}")
+            print(f"escalated     p95 "
+                  f"{s['escalated']['p95_latency_s']*1e3:7.1f} ms "
+                  f"({s['escalated']['count']} requests); first response "
+                  f"{s['first_response_s']*1e3:.1f} ms; checks {s['checks']}")
+        if json_path:
+            print(f"JSON -> {json_path}")
     return report
 
 
@@ -174,13 +259,18 @@ def main(argv=None) -> int:
                     help="pipelined in-flight microbatch window")
     ap.add_argument("--remote-latency", type=float, default=0.3,
                     help="fake remote round-trip seconds")
+    ap.add_argument("--completion-mode", default="streaming",
+                    choices=("fifo", "streaming"),
+                    help="streaming adds the per-request completion "
+                         "section (DESIGN.md §7); fifo skips it")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' disables)")
     args = ap.parse_args(argv)
     report = run(requests=args.requests, depth=args.depth,
                  remote_latency_s=args.remote_latency,
+                 completion_mode=args.completion_mode,
                  json_path=args.json or None)
-    return 0 if report["passed_2x"] else 1
+    return 0 if report["passed"] else 1
 
 
 if __name__ == "__main__":

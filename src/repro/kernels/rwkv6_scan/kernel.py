@@ -33,8 +33,6 @@ def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sT_ref,
     def _init():
         state[...] = s0_ref[...].reshape(state.shape)
 
-    m = state.shape[-1]
-
     def step(t, _):
         r_t = r_ref[0, t, :].astype(jnp.float32)            # [M]
         k_t = k_ref[0, t, :].astype(jnp.float32)

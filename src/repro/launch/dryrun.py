@@ -36,7 +36,6 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool,
             swa_window: int = 0, verbose: bool = True) -> dict:
     """Lower + compile one (arch, shape, mesh) combination; returns the
     record for EXPERIMENTS.md §Dry-run."""
-    import jax
     from repro.analysis.roofline import (roofline_extrapolated,
                                          roofline_from_lowered)
     from repro.configs import INPUT_SHAPES, get_config, shape_applicable

@@ -15,6 +15,14 @@ Runtime control plane (DESIGN.md):
   --fused           bypass the transport: seed-style fully-jitted cascade
   --pipeline-depth  overlap local compute with remote round trips
                     (N microbatches in flight, FIFO drain — DESIGN.md §5)
+  --completion-mode fifo: windows drain strictly in submission order;
+                    streaming: per-request completion — locally-trusted
+                    requests return the moment the confidence gate
+                    clears, escalations stream back as their remote
+                    futures resolve (DESIGN.md §7)
+  --replay-max      bounded replay queue for (unrouted) escalation
+                    windows (served if a breaker half-opens before the
+                    drain — DESIGN.md §7)
   --remote          repeatable "name:cost:latency" backend spec building a
                     multi-remote registry (cost $/req, latency modelled s;
                     either may be empty for the CostModel default) —
@@ -42,7 +50,6 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.thresholds import nominal_quantile_threshold
 from repro.data.synthetic import make_classification_task
-from repro.launch.mesh import axis_type_kwargs
 from repro.models import surrogate as S
 from repro.models import transformer as T
 from repro.runtime import (ROUTE_POLICIES, AdaptiveController,
@@ -51,7 +58,8 @@ from repro.runtime import (ROUTE_POLICIES, AdaptiveController,
                            TransportConfig, calibrate, content_key,
                            content_keys)
 from repro.serving.engine import CascadeEngine, CostModel
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.serving.scheduler import (COMPLETION_MODES, MicrobatchScheduler,
+                                     Request)
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 
@@ -110,6 +118,15 @@ def main(argv=None) -> int:
     ap.add_argument("--pipeline-depth", type=int, default=1,
                     help="in-flight microbatches (>1 overlaps the local "
                          "tier with remote round trips — DESIGN.md §5)")
+    ap.add_argument("--completion-mode", default="fifo",
+                    choices=COMPLETION_MODES,
+                    help="fifo: FIFO window drain; streaming: per-request "
+                         "completion the moment each answer is trusted "
+                         "(DESIGN.md §7)")
+    ap.add_argument("--replay-max", type=int, default=8,
+                    help="max (unrouted) escalation windows parked for a "
+                         "half-open replay instead of REJECTED "
+                         "(DESIGN.md §7)")
     ap.add_argument("--max-in-flight", type=int, default=8,
                     help="remote transport window size")
     ap.add_argument("--remote-timeout", type=float, default=2.0,
@@ -141,6 +158,9 @@ def main(argv=None) -> int:
     if args.fused and args.pipeline_depth > 1:
         ap.error("--pipeline-depth needs the transport serve path; "
                  "drop --fused")
+    if args.fused and args.completion_mode == "streaming":
+        ap.error("--completion-mode streaming needs the transport serve "
+                 "path; drop --fused")
     if args.fused and (args.remote or args.cost_budget is not None):
         ap.error("--remote/--cost-budget need the transport serve path; "
                  "drop --fused")
@@ -168,8 +188,6 @@ def main(argv=None) -> int:
     if args.smoke:
         rcfg = rcfg.reduced()
     ndev = len(jax.devices())
-    mesh = jax.make_mesh((1, ndev), ("data", "model"),
-                         **axis_type_kwargs(2))
     rparams = T.init_params(rcfg, jax.random.PRNGKey(7))
     print(f"[serve] remote tier {rcfg.name} on {ndev} device(s)")
 
@@ -210,7 +228,7 @@ def main(argv=None) -> int:
         router = RemoteRouter(
             [RemoteBackend(name, remote_apply, tconf, cost_per_request=c,
                            latency_s=l) for name, c, l in specs],
-            policy=args.route_policy)
+            policy=args.route_policy, replay_max=args.replay_max)
         print(f"[serve] remote registry: "
               f"{[b.name for b in router.candidates()]} "
               f"(policy {router.policy})")
@@ -266,7 +284,8 @@ def main(argv=None) -> int:
     if t_local is not None:
         eng.set_local_threshold(t_local)
     sched = MicrobatchScheduler(eng, fallback=lambda r: -1,
-                                pipeline_depth=args.pipeline_depth)
+                                pipeline_depth=args.pipeline_depth,
+                                completion_mode=args.completion_mode)
 
     t0 = time.perf_counter()
     try:
@@ -300,11 +319,26 @@ def main(argv=None) -> int:
           f"p50 {st.wall_percentile(50) * 1e3:.0f} ms, "
           f"p95 {st.wall_percentile(95) * 1e3:.0f} ms "
           f"(throughput {len(responses) / max(wall, 1e-9):.0f} req/s, "
-          f"pipeline depth {args.pipeline_depth})")
+          f"pipeline depth {args.pipeline_depth}, "
+          f"completion mode {args.completion_mode})")
+    # per-request hand-back latency, split trusted-local vs escalated
+    # (the streaming mode's value proposition — DESIGN.md §7)
+    if sched.first_response_s is not None:
+        print(f"[serve] first response: "
+              f"{sched.first_response_s * 1e3:.0f} ms after flush start")
+    lat_local = [r.latency_s for r in responses if r.source == "local"]
+    lat_esc = [r.latency_s for r in responses if r.source != "local"]
+    for tag, lat in (("trusted-local", lat_local), ("escalated", lat_esc)):
+        if lat:
+            print(f"[serve] {tag} hand-back latency: "
+                  f"p50 {np.percentile(lat, 50) * 1e3:.0f} ms, "
+                  f"p95 {np.percentile(lat, 95) * 1e3:.0f} ms "
+                  f"({len(lat)} requests)")
     if router is not None:
         rs = router.stats
         print(f"[serve] router: picks {rs.picks}, "
-              f"failovers {rs.failovers}, unrouted {rs.unrouted}")
+              f"failovers {rs.failovers}, unrouted {rs.unrouted}, "
+              f"replays {rs.replay_served}/{rs.replay_enqueued} served")
         for b in router:
             ts, u = b.stats, st.per_backend.get(b.name)
             line = (f"[serve]   {b.name}: {ts.windows} windows, "

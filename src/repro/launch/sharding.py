@@ -22,11 +22,10 @@ from __future__ import annotations
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from jax.tree_util import DictKey, SequenceKey
 
-from repro.configs.base import ModelConfig, ShapeConfig
+from repro.configs.base import ModelConfig
 from repro.launch.mesh import batch_axes
 
 # parents whose "w" (and "b") leaves are column-parallel (shard output dim)

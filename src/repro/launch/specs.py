@@ -8,12 +8,11 @@ compiling never allocates model-sized buffers.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.base import INPUT_SHAPES, ModelConfig, ShapeConfig
 from repro.launch import sharding as sh

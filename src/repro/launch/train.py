@@ -23,7 +23,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.data.synthetic import make_classification_task
 from repro.launch import sharding as sh
 from repro.launch.mesh import axis_type_kwargs
 from repro.models import transformer as T

@@ -48,7 +48,6 @@ def init_params(cfg: SurrogateConfig, key) -> Params:
     blocks = []
     for i in range(cfg.num_blocks):
         k1, k2 = ks[4 + 2 * i], ks[5 + 2 * i]
-        hd = cfg.d_model // cfg.num_heads
         blocks.append({
             "ln1_w": jnp.ones((cfg.d_model,)), "ln1_b": jnp.zeros((cfg.d_model,)),
             "ln2_w": jnp.ones((cfg.d_model,)), "ln2_b": jnp.zeros((cfg.d_model,)),

@@ -437,8 +437,6 @@ def decode_step(cfg: ModelConfig, params: Params, token, cache, pos):
         x = params["embed"][token][:, None, :]
     else:
         x = token.astype(jnp.dtype(cfg.dtype))[:, None, :]
-    b = x.shape[0]
-
     if cfg.block_type == "attn":
         def body(x, inp):
             lp, kv = inp

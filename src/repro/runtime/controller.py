@@ -39,7 +39,7 @@ holds a **dollar** budget across failovers and price mixes.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 

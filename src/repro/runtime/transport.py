@@ -46,8 +46,11 @@ one per escalation window under a pluggable policy:
 ``pick()`` skips any backend whose breaker would refuse the call *at
 submit time* (the speculative-failover fast path: an open breaker reroutes
 the window immediately instead of waiting for the drain to observe the
-failure). Escalations only take the REJECTED/fallback path when NO backend
-is available.
+failure). When NO backend is available the window may park with a bounded
+replay ticket (``acquire_replay_slot``/``redeem_replay``): at drain time
+it gets one more pick, so a breaker that half-opens while the window rides
+the pipeline serves it — the replay doubles as the half-open probe —
+instead of the escalation degrading to REJECTED (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -206,6 +209,17 @@ class TransportFuture:
 
     def result(self, timeout: float | None = None):
         return self._future.result(timeout)
+
+    def add_done_callback(self, fn: Callable[["TransportFuture"], Any]
+                          ) -> None:
+        """Invoke ``fn(self)`` (from the pool thread) once the future
+        resolves. The streaming drain (DESIGN.md §7) registers a wakeup
+        here so it can park on an event covering EVERY in-flight window
+        across every backend, instead of polling the head-of-line future
+        — any window resolving, on any backend's pool, wakes the drain.
+        Exceptions in ``fn`` are swallowed by the executor; keep it to a
+        flag/event set."""
+        self._future.add_done_callback(lambda _f: fn(self))
 
 
 class RemoteTransport:
@@ -438,6 +452,13 @@ class RouterStats:
     picks: dict = field(default_factory=dict)   # backend name -> windows
     failovers: int = 0          # picks that skipped the preferred backend
     unrouted: int = 0           # windows with NO available backend
+    # bounded replay of (unrouted) windows (DESIGN.md §7): instead of
+    # degrading straight to REJECTED, up to ``replay_max`` windows park
+    # until their drain and get one more pick — served iff some breaker
+    # has half-opened in the meantime
+    replay_enqueued: int = 0    # windows parked with a replay ticket
+    replay_served: int = 0      # redeemed by a recovered backend
+    replay_dropped: int = 0     # queue full at park, or still no backend
 
 
 class RemoteRouter:
@@ -459,7 +480,8 @@ class RemoteRouter:
     """
 
     def __init__(self, backends: list[RemoteBackend],
-                 policy: str = "primary-failover"):
+                 policy: str = "primary-failover", *,
+                 replay_max: int = 8):
         backends = list(backends)
         if not backends:
             raise ValueError("router needs at least one backend")
@@ -471,6 +493,8 @@ class RemoteRouter:
                              f"choose from {ROUTE_POLICIES}")
         self.backends = backends
         self.policy = policy
+        self.replay_max = max(0, replay_max)
+        self._replay_slots = 0      # tickets currently parked with windows
         self.stats = RouterStats(picks={b.name: 0 for b in backends})
 
     def __len__(self) -> int:
@@ -506,6 +530,36 @@ class RemoteRouter:
                     self.stats.failovers += 1
                 return b
         self.stats.unrouted += 1
+        return None
+
+    # -- bounded replay of (unrouted) windows (DESIGN.md §7) ------------
+    def acquire_replay_slot(self) -> bool:
+        """Park an (unrouted) escalation window for a later replay pick
+        instead of degrading it to REJECTED immediately. Bounded: at most
+        ``replay_max`` windows may hold a ticket at once — a full queue
+        returns False and the window falls back as before. The engine
+        redeems the ticket when the window drains (``redeem_replay``)."""
+        if self._replay_slots >= self.replay_max:
+            self.stats.replay_dropped += 1
+            return False
+        self._replay_slots += 1
+        self.stats.replay_enqueued += 1
+        return True
+
+    def redeem_replay(self) -> RemoteBackend | None:
+        """Replay pick for a parked (unrouted) window at drain time: the
+        first backend in policy order whose breaker has half-opened since
+        submit serves the window — the replay call doubles as the probe —
+        and billing attributes to that backend. Returns None when every
+        breaker still refuses (the window keeps the REJECTED/fallback
+        path). Always releases the ticket's slot."""
+        self._replay_slots = max(0, self._replay_slots - 1)
+        for b in self.candidates():
+            if b.available():
+                self.stats.picks[b.name] += 1
+                self.stats.replay_served += 1
+                return b
+        self.stats.replay_dropped += 1
         return None
 
     def expected_cost_per_escalation(self, default: float) -> float:

@@ -4,8 +4,9 @@ from repro.serving.engine import (CascadeEngine, CascadeStats, CostModel,
                                   make_cascade_step, make_gated_local_step,
                                   make_local_step)
 from repro.serving.generate import greedy_generate
-from repro.serving.scheduler import MicrobatchScheduler, Request, Response
+from repro.serving.scheduler import (COMPLETION_MODES, MicrobatchScheduler,
+                                     Request, Response)
 
-__all__ = ["CascadeEngine", "CascadeStats", "CostModel", "make_cascade_step",
-           "make_gated_local_step", "make_local_step", "greedy_generate",
-           "MicrobatchScheduler", "Request", "Response"]
+__all__ = ["CascadeEngine", "CascadeStats", "CostModel", "COMPLETION_MODES",
+           "make_cascade_step", "make_gated_local_step", "make_local_step",
+           "greedy_generate", "MicrobatchScheduler", "Request", "Response"]

@@ -27,6 +27,19 @@ Three serve paths (DESIGN.md §2, §5):
     submission order, so batch i+1's local tier overlaps batch i's remote
     round trip while accounting and controller observations stay
     deterministic.
+  * streaming — the pipelined path with per-request completion
+    (DESIGN.md §7): ``complete_ready``/``stream`` finalize windows the
+    moment their remote futures resolve (out of submission order when
+    thresholds are static), while accounting still COMMITS strictly in
+    submission order — responses, billing, per-backend attribution and
+    controller updates are bitwise-identical to the FIFO drain.
+
+Device-overlap double buffering (DESIGN.md §7): ``begin_serve`` only
+DISPATCHES batch i's local forward; the host half (``device_get`` of the
+gate triple, cache lookups, routing, remote submission) runs when batch
+i+1 begins — so the accelerator computes batch i+1 while batch i's
+escalations cross the host boundary. ``flush_dispatch`` unparks the final
+window once no more begins are coming.
 
 Multi-remote routing (DESIGN.md §6): the runtime/pipelined paths accept a
 ``RemoteRouter`` of named ``RemoteBackend``s in place of a bare transport
@@ -40,10 +53,11 @@ latency (falling back to the ``CostModel`` constants).
 
 from __future__ import annotations
 
+import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any, Callable, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -58,6 +72,13 @@ from repro.runtime.transport import RemoteBackend, RemoteRouter
 # per-backend accounting key for escalations no backend would accept
 # (every breaker open): they fail without touching any transport
 UNROUTED = "(unrouted)"
+# the CascadeStats fields that constitute the billing contract: every
+# "pipelined/streaming accounting is identical to serial/FIFO" check
+# (benchmarks, tests) compares exactly these — extend HERE when stats
+# grow a new billable field so the equivalence checks can't silently
+# weaken
+BILLING_FIELDS = ("requests", "escalations", "remote_calls", "cache_hits",
+                  "transport_failures", "rejected", "total_cost")
 # attribution for cache entries stored without a source backend
 UNATTRIBUTED = "(cache)"
 
@@ -251,21 +272,52 @@ class _Resolved:
 
 @dataclass
 class _InFlight:
-    """One microbatch between begin_serve and its FIFO completion."""
+    """One microbatch's per-request completion bookkeeping, from dispatch
+    to its accounting commit. Lifecycle (DESIGN.md §7)::
+
+        dispatch      device local forward launched; control state
+                      (capacity, t_local) snapshotted at submit time
+        host half     gate triple fetched, cache lookups, routing,
+                      remote submission  (deferred one begin by the
+                      double buffer; ``host_done`` flips here)
+        finalize      remote responses folded in, acceptance decided
+                      with the CURRENT t_remote (``finalized`` flips;
+                      ``result`` holds the per-request outputs)
+        commit        stats / per-backend billing / controller observe
+                      — strictly in submission (seq) order
+    """
+    seq: int                    # submission order (1-based, monotonic)
     t0: float
     b: int                      # padded batch rows
     real: int                   # genuine leading rows
-    conf: np.ndarray            # [b] 1st-level confidences
-    local_pred: np.ndarray      # [b] local predictions (never mutated)
-    pred: np.ndarray            # [b] served predictions (remote scattered)
-    idx: np.ndarray             # [k] escalated row indices (asc. conf)
-    k: int
-    keys: list | None           # cache keys per escalated row
-    cached: list | None         # cache hits / filled-in remote responses
-    hit_src: list | None        # backend name per cache hit (attribution)
-    miss: list                  # positions within idx that went remote
-    pending: Any                # TransportFuture | _Resolved | None
+    asynchronous: bool          # futures (pipelined) vs sync transport
+    capacity: int               # escalation cap snapshotted at dispatch
+    # -- dispatch half (device) ----------------------------------------
+    gate_dev: Any = None        # un-fetched device gate output
+    remote_batch: Any = None    # batch["remote"], held until the host half
+    host_done: bool = False
+    # -- host half ------------------------------------------------------
+    conf: np.ndarray | None = None   # [b] 1st-level confidences
+    local_pred: np.ndarray | None = None  # [b] local preds (never mutated)
+    pred: np.ndarray | None = None   # [b] served preds (remote scattered)
+    idx: np.ndarray | None = None    # [k] escalated row indices (asc conf)
+    k: int = 0
+    keys: list | None = None    # cache keys per escalated row
+    cached: list | None = None  # cache hits / filled-in remote responses
+    hit_src: list | None = None # backend name per cache hit (attribution)
+    miss: list = field(default_factory=list)  # idx positions gone remote
+    pending: Any = None         # TransportFuture | _Resolved | None
     backend: Any = None         # RemoteBackend routed to (None = unrouted)
+    replay_ticket: bool = False # parked for a bounded (unrouted) replay
+    sub_miss: Any = None        # miss sub-batch, held only for a replay
+    # -- finalize half --------------------------------------------------
+    finalized: bool = False
+    result: dict | None = None
+    remote_conf: np.ndarray | None = None
+    n_sent: int = 0
+    n_failed: int = 0
+    n_hits: int = 0
+    bname: str = UNROUTED
 
 
 class CascadeEngine:
@@ -299,12 +351,15 @@ class CascadeEngine:
     A bare transport is wrapped as a single-backend registry; predictions
     and billing stay bitwise-identical to the pre-registry path.
 
-    The runtime path can serve synchronously (``serve``) or pipelined
-    (``begin_serve`` / ``complete_next`` — DESIGN.md §5): completions
-    drain strictly in submission order, so results, stats and controller
-    state do not depend on remote completion order. ``close()`` (or using
-    the engine as a context manager) drains in-flight windows and shuts
-    down every backend's thread pool.
+    The runtime path can serve synchronously (``serve``), pipelined
+    (``begin_serve`` / ``complete_next`` — DESIGN.md §5, completions
+    drain strictly in submission order), or streaming (``begin_serve`` /
+    ``complete_ready`` / ``stream`` — DESIGN.md §7, windows hand back the
+    moment their remote futures resolve while accounting still commits in
+    submission order). In all three, results, stats and controller state
+    do not depend on remote completion order. ``close()`` (or using the
+    engine as a context manager) drains in-flight windows and shuts down
+    every backend's thread pool.
     """
 
     def __init__(self, local_apply, remote_apply=None, *, batch_size: int,
@@ -334,6 +389,10 @@ class CascadeEngine:
         self.cache = cache
         self._clock = clock
         self._inflight: deque[_InFlight] = deque()
+        self._seq = 0
+        # set by any window's remote future resolving (any backend): the
+        # streaming drain parks here instead of polling head-of-line
+        self._ready = threading.Event()
         self._supervisor = (supervisor if callable(supervisor)
                             else SOFTMAX_SUPERVISORS[supervisor])
         if transport is None:
@@ -362,22 +421,38 @@ class CascadeEngine:
         if self._inflight:
             raise RuntimeError("pipelined windows in flight; drain them "
                                "with complete_next() before serve()")
-        return self._complete(self._begin(batch, real_rows,
-                                          asynchronous=False))
+        fl = self._dispatch(batch, real_rows, asynchronous=False)
+        self._host_begin(fl)
+        self._finalize(fl)
+        return self._commit(fl)
 
-    # -- pipelined runtime path (DESIGN.md §5) -------------------------
+    # -- pipelined runtime path (DESIGN.md §5, §7) ---------------------
     def begin_serve(self, batch: dict[str, Any],
                     real_rows: int | None = None) -> _InFlight:
-        """Dispatch one microbatch: local tier + confidence gate, cache
-        lookups, and a NON-blocking remote submission for the misses.
-        Returns after local compute; the remote round trip stays on the
-        wire while subsequent batches begin."""
+        """Dispatch one microbatch's local forward on the device, then
+        run the host half of the PREVIOUS window (double buffering,
+        DESIGN.md §7): the gate triple fetch, cache lookups, routing and
+        the non-blocking remote submission of batch i happen while batch
+        i+1 computes on the accelerator. Returns the window handle; its
+        ``conf``/``local_pred``/``idx`` fields populate once its own host
+        half runs (at the next begin, ``flush_dispatch``, or its drain)."""
         if self.transport is None:
             raise RuntimeError("pipelined serving needs the runtime path "
                                "(construct the engine with transport=...)")
-        fl = self._begin(batch, real_rows, asynchronous=True)
+        prev = self._inflight[-1] if self._inflight else None
+        fl = self._dispatch(batch, real_rows, asynchronous=True)
         self._inflight.append(fl)
+        if prev is not None and not prev.host_done:
+            self._host_begin(prev)
         return fl
+
+    def flush_dispatch(self) -> None:
+        """Run the deferred host half of the NEWEST window (the double
+        buffer parks it until the next begin). Call when no further
+        ``begin_serve`` is coming, so the last window's remote submission
+        overlaps the earlier drains instead of serialising behind them."""
+        if self._inflight and not self._inflight[-1].host_done:
+            self._host_begin(self._inflight[-1])
 
     def complete_next(self) -> dict[str, np.ndarray] | None:
         """Drain the OLDEST in-flight window (blocks until its remote
@@ -385,10 +460,116 @@ class CascadeEngine:
         observations independent of remote completion order."""
         if not self._inflight:
             return None
-        return self._complete(self._inflight.popleft())
+        fl = self._inflight[0]
+        self._finalize(fl)              # forces a parked host half too
+        self._inflight.popleft()
+        return self._commit(fl)
+
+    # -- streaming completion (DESIGN.md §7) ---------------------------
+    def complete_ready(self, block: bool = False
+                       ) -> list[tuple[int, dict[str, np.ndarray]]]:
+        """Per-request streaming drain: finalize every in-flight window
+        whose remote responses have landed and hand back their results —
+        OUT of submission order — while accounting (stats, per-backend
+        billing, controller observations) still commits strictly in
+        submission order, so totals are bitwise-identical to the FIFO
+        drain.
+
+        With a live controller the ready set is restricted to the FIFO
+        prefix: acceptance thresholds evolve with every committed window,
+        so finalizing out of order would change which remote answers are
+        trusted. Static thresholds have no such coupling and windows
+        finalize the moment their future resolves. Windows parked with an
+        (unrouted) replay ticket wait until they reach the head, giving a
+        breaker the full pipeline residency to half-open before the
+        replay pick.
+
+        With a response cache, out-of-order finalize makes cache FILL
+        timing depend on remote latency, so the cache_hits/remote_calls
+        split (and hence total_cost) may differ from the FIFO drain when
+        escalated content repeats across in-flight windows — bounded and
+        benign: hits can only be gained, cost can only drop, and served
+        predictions are unchanged (an entry holds the very logits the
+        remote call would return). The bitwise-billing guarantee is
+        exact for cacheless runs and for repeats across already-drained
+        windows (DESIGN.md §7).
+
+        Returns ``(seq, result)`` pairs for windows finalized by THIS
+        call, ``seq`` being the value on the ``begin_serve`` handle. With
+        ``block=True`` waits until at least one window finalizes
+        (returns ``[]`` immediately when nothing is in flight)."""
+        while True:
+            events = self._scan_ready()
+            if events or not block or not self._inflight:
+                return events
+            self._ready.clear()
+            events = self._scan_ready()  # racing resolve before clear()
+            if events:
+                return events
+            # event wakeup from any backend's pool; the timeout is a
+            # safety net, not a poll interval
+            self._ready.wait(0.05)
+
+    def stream(self) -> Iterator[tuple[int, dict[str, np.ndarray]]]:
+        """Generator draining every in-flight window in completion order
+        (``complete_ready`` semantics): yields ``(seq, result)`` as each
+        window's remote responses land."""
+        while self._inflight:
+            yield from self.complete_ready(block=True)
+
+    def _scan_ready(self) -> list[tuple[int, dict[str, np.ndarray]]]:
+        """One non-blocking pass of the streaming drain: finalize every
+        ready window, then commit the contiguous finalized prefix.
+
+        With a controller, finalize NEVER runs ahead of commit: window
+        i+1's acceptance must see the t_remote that window i's
+        observation produced, so the pass walks head-first, committing
+        each window before looking at the next."""
+        events: list[tuple[int, dict[str, np.ndarray]]] = []
+        if self.controller is not None:        # FIFO prefix only
+            while self._inflight:
+                fl = self._inflight[0]
+                if not fl.host_done:
+                    # only the newest window can be parked; head+parked
+                    # means it is alone — nothing else can unblock it
+                    self._host_begin(fl)
+                if fl.pending is not None and not fl.pending.done():
+                    break
+                self._finalize(fl)
+                events.append((fl.seq, fl.result))
+                self._commit(self._inflight.popleft())
+            return events
+        progressed = True
+        while progressed and self._inflight:
+            progressed = False
+            # a lone parked window cannot be unblocked by anything else:
+            # run its host half so its remote round trip starts
+            if len(self._inflight) == 1 and not self._inflight[0].host_done:
+                self._host_begin(self._inflight[0])
+                progressed = True
+            head = self._inflight[0]
+            for fl in self._inflight:
+                if fl.finalized or not fl.host_done:
+                    continue
+                if fl.pending is not None:
+                    ready = fl.pending.done()
+                else:
+                    # no remote in flight: ready now — except a replay
+                    # ticket, which waits for the head (max residency
+                    # for a breaker to half-open before the replay pick)
+                    ready = not fl.replay_ticket or fl is head
+                if ready:
+                    self._finalize(fl)
+                    events.append((fl.seq, fl.result))
+                    progressed = True
+            while self._inflight and self._inflight[0].finalized:
+                self._commit(self._inflight.popleft())
+                progressed = True
+        return events
 
     @property
     def inflight(self) -> int:
+        """Windows begun but not yet COMMITTED (the backpressure bound)."""
         return len(self._inflight)
 
     # -- fused path (seed semantics + padding-aware accounting) --------
@@ -411,8 +592,13 @@ class CascadeEngine:
         out["accepted"] = accepted
         return out
 
-    # -- runtime path: dispatch half -----------------------------------
-    def _begin(self, batch, real_rows, *, asynchronous: bool) -> _InFlight:
+    # -- runtime path: dispatch half (device) --------------------------
+    def _dispatch(self, batch, real_rows, *, asynchronous: bool
+                  ) -> _InFlight:
+        """Launch the local forward + confidence gate on the device and
+        snapshot the submit-time control state. Returns WITHOUT fetching
+        the gate output — the host half (``_host_begin``) runs one begin
+        later, so the device computes the next batch meanwhile."""
         t0 = self._clock()
         b = _leading_rows(batch["local"])
         real = b if real_rows is None else min(real_rows, b)
@@ -427,60 +613,95 @@ class CascadeEngine:
             t_local = self.controller.t_local
         t = np.float32(np.inf) if t_local is None else np.float32(t_local)
 
-        gate = jax.device_get(self._local_step(batch["local"], t,
-                                               np.int32(real)))
-        conf = np.asarray(gate["conf"])
-        local_pred = np.asarray(gate["pred"])
-        pred = local_pred.copy()
+        gate_dev = self._local_step(batch["local"], t, np.int32(real))
+        self._seq += 1
+        return _InFlight(seq=self._seq, t0=t0, b=b, real=real,
+                         asynchronous=asynchronous, capacity=capacity,
+                         gate_dev=gate_dev, remote_batch=batch["remote"])
+
+    # -- runtime path: host half ---------------------------------------
+    def _host_begin(self, fl: _InFlight) -> None:
+        """Fetch the gate triple off the device and run the host
+        escalation path: batched gather, cache lookups, submit-time
+        routing and the remote submission for the misses."""
+        gate = jax.device_get(fl.gate_dev)
+        fl.gate_dev = None
+        fl.conf = np.asarray(gate["conf"])
+        fl.local_pred = np.asarray(gate["pred"])
+        fl.pred = fl.local_pred.copy()
         cand = np.asarray(gate["idx"])
         cand = cand[cand >= 0]          # eligible rows, ascending by conf
-        k = int(min(cand.size, capacity, real))
-        idx = cand[:k]
+        fl.k = int(min(cand.size, fl.capacity, fl.real))
+        fl.idx = cand[:fl.k]
 
-        keys = cached = hit_src = None
-        miss: list[int] = []
-        pending = backend = None
-        if k > 0:
-            host = jax.tree.map(np.asarray, batch["remote"])
-            sub = jax.tree.map(lambda a: a[idx], host)   # batched gather
+        if fl.k > 0:
+            host = jax.tree.map(np.asarray, fl.remote_batch)
+            sub = jax.tree.map(lambda a: a[fl.idx], host)  # batched gather
             if self.cache is not None:
-                keys = self.cache.keys_for(sub, k)
-                found = [self.cache.lookup(key) for key in keys]
-                cached = [f[0] if f is not None else None for f in found]
-                hit_src = [f[1] if f is not None else None for f in found]
+                fl.keys = self.cache.keys_for(sub, fl.k)
+                found = [self.cache.lookup(key) for key in fl.keys]
+                fl.cached = [f[0] if f is not None else None for f in found]
+                fl.hit_src = [f[1] if f is not None else None for f in found]
             else:
-                keys = [None] * k
-                cached = [None] * k
-                hit_src = [None] * k
-            miss = [j for j, c in enumerate(cached) if c is None]
-            if miss:
+                fl.keys = [None] * fl.k
+                fl.cached = [None] * fl.k
+                fl.hit_src = [None] * fl.k
+            fl.miss = [j for j, c in enumerate(fl.cached) if c is None]
+            if fl.miss:
                 # route the window at submit time; an open breaker fails
-                # over to the next policy candidate immediately, and a
-                # fully-open registry (backend None) degrades the window
-                # to REJECTED/fallback without touching any transport
-                backend = self.router.pick()
-                if backend is not None:
-                    marr = np.asarray(miss)
-                    sub_miss = jax.tree.map(lambda a: a[marr], sub)
-                    pending = (backend.submit(sub_miss) if asynchronous
-                               else _Resolved(backend.call(sub_miss)))
-        return _InFlight(t0=t0, b=b, real=real, conf=conf,
-                         local_pred=local_pred, pred=pred, idx=idx, k=k,
-                         keys=keys, cached=cached, hit_src=hit_src,
-                         miss=miss, pending=pending, backend=backend)
+                # over to the next policy candidate immediately
+                fl.backend = self.router.pick()
+                marr = np.asarray(fl.miss)
+                sub_miss = jax.tree.map(lambda a: a[marr], sub)
+                if fl.backend is not None:
+                    fl.pending = (fl.backend.submit(sub_miss)
+                                  if fl.asynchronous
+                                  else _Resolved(fl.backend.call(sub_miss)))
+                    if fl.asynchronous:
+                        # ready-set wakeup for the streaming drain
+                        fl.pending.add_done_callback(
+                            lambda _f: self._ready.set())
+                elif fl.asynchronous and self.router.acquire_replay_slot():
+                    # every breaker refused: park the window with a
+                    # bounded replay ticket — redeemed at its drain, when
+                    # a breaker may have half-opened (DESIGN.md §7). The
+                    # sync path finalizes immediately, so a ticket there
+                    # could never be served — don't burn a slot on it
+                    fl.replay_ticket = True
+                    fl.sub_miss = sub_miss
+        fl.remote_batch = None
+        fl.host_done = True
 
-    # -- runtime path: completion half ---------------------------------
-    def _complete(self, fl: _InFlight) -> dict[str, np.ndarray]:
+    # -- runtime path: finalize half -----------------------------------
+    def _finalize(self, fl: _InFlight) -> None:
+        """Fold the window's remote responses in and decide acceptance
+        with the CURRENT t_remote. Blocks on the window's future (forcing
+        a parked host half first). Idempotent; does NOT touch stats — the
+        commit half does, strictly in submission order."""
+        if fl.finalized:
+            return
+        if not fl.host_done:
+            self._host_begin(fl)
         remote_conf = np.full((fl.b,), np.inf, np.float32)
         n_hits = n_sent = n_failed = 0
-        bname = fl.backend.name if fl.backend is not None else UNROUTED
         if fl.k > 0:
             cached = fl.cached
             if fl.miss:
+                if fl.pending is None and fl.replay_ticket:
+                    # (unrouted) replay (DESIGN.md §7): one more pick at
+                    # drain time — a breaker that half-opened while the
+                    # window rode the pipeline serves it (the call IS the
+                    # half-open probe), billed to the replaying backend
+                    fl.replay_ticket = False
+                    fl.backend = self.router.redeem_replay()
+                    if fl.backend is not None:
+                        fl.pending = _Resolved(fl.backend.call(fl.sub_miss))
+                    fl.sub_miss = None
                 if fl.pending is not None:
                     logits, ok = fl.pending.result()
                     n_sent = int(ok.sum())
                     n_failed = len(fl.miss) - n_sent
+                    bname = fl.backend.name
                     for w, j in enumerate(fl.miss):
                         if ok[w]:
                             cached[j] = logits[w]
@@ -509,19 +730,32 @@ class CascadeEngine:
             t_remote = self.controller.t_remote
         accepted = (~escalated) | (remote_conf > t_remote)
 
+        fl.remote_conf = remote_conf
+        fl.n_sent, fl.n_failed, fl.n_hits = n_sent, n_failed, n_hits
+        fl.bname = fl.backend.name if fl.backend is not None else UNROUTED
+        fl.result = {"prediction": fl.pred, "local_pred": fl.local_pred,
+                     "local_conf": fl.conf, "remote_conf": remote_conf,
+                     "escalated": escalated, "accepted": accepted}
+        fl.finalized = True
+
+    # -- runtime path: commit half -------------------------------------
+    def _commit(self, fl: _InFlight) -> dict[str, np.ndarray]:
+        """Fold the finalized window into stats / per-backend billing /
+        controller state. Callers MUST commit in submission order — that
+        is what keeps streaming accounting bitwise-identical to FIFO."""
         # per-backend billing/latency attribution (DESIGN.md §6): billed
         # calls and failures charge the routed backend; cache hits charge
         # $0 to whichever backend originally filled the entry
         cost_per = self.cost.backend_cost(fl.backend)
         lat_per = self.cost.backend_latency(fl.backend)
-        window_cost = n_sent * cost_per
-        if n_sent or n_failed:
-            u = self.stats.backend_usage(bname)
-            u.remote_calls += n_sent
-            u.transport_failures += n_failed
+        window_cost = fl.n_sent * cost_per
+        if fl.n_sent or fl.n_failed:
+            u = self.stats.backend_usage(fl.bname)
+            u.remote_calls += fl.n_sent
+            u.transport_failures += fl.n_failed
             u.cost += window_cost
-            u.remote_latency_s += n_sent * lat_per
-        if n_hits and fl.hit_src is not None:
+            u.remote_latency_s += fl.n_sent * lat_per
+        if fl.n_hits and fl.hit_src is not None:
             miss_set = set(fl.miss)
             for j in range(fl.k):
                 if j not in miss_set:
@@ -530,26 +764,27 @@ class CascadeEngine:
                         src if src is not None else UNATTRIBUTED
                     ).cache_hits += 1
 
-        self._account(fl.real, fl.k, n_sent, n_hits, n_failed,
+        accepted = fl.result["accepted"]
+        self._account(fl.real, fl.k, fl.n_sent, fl.n_hits, fl.n_failed,
                       int((~accepted[:fl.real]).sum()),
                       cost=window_cost,
-                      remote_latency_s=n_sent * lat_per)
+                      remote_latency_s=fl.n_sent * lat_per)
         self.stats.record_wall(self._clock() - fl.t0, fl.real)
         if self.controller is not None:
             self.controller.observe(fl.conf[:fl.real], fl.k, fl.real,
-                                    remote_conf[:fl.real],
+                                    fl.remote_conf[:fl.real],
                                     cost=window_cost)
-        return {"prediction": fl.pred, "local_pred": fl.local_pred,
-                "local_conf": fl.conf, "remote_conf": remote_conf,
-                "escalated": escalated, "accepted": accepted}
+        return fl.result
 
     # ------------------------------------------------------------------
     def close(self, wait: bool = True) -> None:
-        """Drain any in-flight pipelined windows (their results are
-        accounted but discarded) and shut down every backend's thread
-        pool. Idempotent; a no-op on the fused path."""
+        """Drain any in-flight pipelined/streaming windows (their results
+        are accounted but discarded) and shut down every backend's thread
+        pool. Half-finalized streaming runs drain too: already-finalized
+        windows just commit, the rest finalize first. Idempotent; a no-op
+        on the fused path."""
         while self._inflight:
-            self._complete(self._inflight.popleft())
+            self.complete_next()
         if self.router is not None:
             self.router.shutdown(wait=wait)
 

@@ -18,15 +18,31 @@ drained strictly in submission order, so responses, stats and controller
 observations are identical regardless of remote completion order.
 ``pipeline_depth`` doubles as the backpressure bound: submission stalls
 on the oldest window once N are outstanding.
+
+``completion_mode="streaming"`` (DESIGN.md §7) keeps the same pipeline
+but hands results back per REQUEST instead of per FIFO window: locally
+trusted rows return the moment their window's confidence gate clears;
+escalated rows return as their remote futures resolve (out of submission
+order when thresholds are static). ``self.responses`` is the reorder-free
+response map — responses are keyed by uid at emission, so no reordering
+buffer ever exists — and every ``Response`` carries its measured
+``latency_s`` (window dispatch -> hand-back, i.e. pipeline residency).
+Billing and controller state stay bitwise-identical to FIFO because the
+engine commits accounting in submission order either way (with a
+response cache, repeats across concurrently in-flight windows may gain
+extra $0 cache hits vs FIFO — see ``CascadeEngine.complete_ready``).
 """
 
 from __future__ import annotations
 
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import numpy as np
+
+COMPLETION_MODES = ("fifo", "streaming")
 
 
 def _stack(items):
@@ -51,17 +67,38 @@ class Response:
     source: str               # "local" | "remote" | "fallback"
     local_conf: float
     remote_conf: float
+    latency_s: float = 0.0    # measured: window dispatch -> hand-back
+
+
+class _Window:
+    """Scheduler-side bookkeeping for one in-flight microbatch."""
+
+    __slots__ = ("chunk", "fl", "t0", "local_emitted")
+
+    def __init__(self, chunk, fl, t0):
+        self.chunk = chunk
+        self.fl = fl
+        self.t0 = t0
+        self.local_emitted = False
 
 
 class MicrobatchScheduler:
     def __init__(self, engine, fallback: Callable[[Request], int] | None = None,
-                 pipeline_depth: int = 1):
+                 pipeline_depth: int = 1, completion_mode: str = "fifo"):
+        if completion_mode not in COMPLETION_MODES:
+            raise ValueError(f"unknown completion_mode {completion_mode!r};"
+                             f" choose from {COMPLETION_MODES}")
         self.engine = engine
         self.fallback = fallback
         self.pipeline_depth = max(1, pipeline_depth)
+        self.completion_mode = completion_mode
         self.queue: deque[Request] = deque()
         self.responses: dict[int, Response] = {}
         self.fallbacks = 0
+        # time from flush start to the first response handed back (the
+        # streaming mode's headline telemetry; tracked for FIFO too)
+        self.first_response_s: float | None = None
+        self._flush_t0: float = 0.0
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -81,8 +118,17 @@ class MicrobatchScheduler:
         }
         return chunk, batch
 
-    def _route(self, chunk: list[Request], res: dict) -> list[Response]:
+    def _record(self, resp: Response, out: list[Response]) -> None:
+        """Reorder-free hand-back: key by uid, never buffer for order."""
+        if self.first_response_s is None:
+            self.first_response_s = time.perf_counter() - self._flush_t0
+        self.responses[resp.uid] = resp
+        out.append(resp)
+
+    def _route(self, chunk: list[Request], res: dict,
+               t0: float) -> list[Response]:
         out: list[Response] = []
+        lat = time.perf_counter() - t0
         for i, req in enumerate(chunk):
             escalated = bool(res["escalated"][i])
             accepted = bool(res["accepted"][i])
@@ -99,40 +145,141 @@ class MicrobatchScheduler:
                         else -1)  # "raise Exception" analogue
             resp = Response(req.uid, pred, src,
                             float(res["local_conf"][i]),
-                            float(res["remote_conf"][i]))
-            self.responses[req.uid] = resp
-            out.append(resp)
+                            float(res["remote_conf"][i]), latency_s=lat)
+            self._record(resp, out)
         return out
 
     def flush(self, pipeline_depth: int | None = None) -> list[Response]:
         depth = (self.pipeline_depth if pipeline_depth is None
                  else max(1, pipeline_depth))
-        if depth > 1 and self.engine.transport is not None:
-            return self._flush_pipelined(depth)
+        self.first_response_s = None
+        self._flush_t0 = time.perf_counter()
+        if self.engine.transport is not None:
+            if self.completion_mode == "streaming":
+                return self._flush_streaming(depth)
+            if depth > 1:
+                return self._flush_pipelined(depth)
         out: list[Response] = []
         while self.queue:
             chunk, batch = self._next_chunk()
+            t0 = time.perf_counter()
             res = self.engine.serve(batch, real_rows=len(chunk))
-            out.extend(self._route(chunk, res))
+            out.extend(self._route(chunk, res, t0))
         return out
 
-    def _flush_pipelined(self, depth: int) -> list[Response]:
-        """Overlapped drain: keep up to ``depth`` microbatches in flight,
-        completing the oldest (FIFO) whenever the window is full or the
-        queue is empty. Responses come back in submission order."""
+    def _check_exclusive_engine(self) -> None:
         if self.engine.inflight:
             # windows begun outside this flush (or left over from an
             # aborted one) would silently pair with the wrong requests
             raise RuntimeError(f"engine has {self.engine.inflight} "
                                "in-flight windows not owned by this "
                                "scheduler; drain complete_next() first")
+
+    def _flush_pipelined(self, depth: int) -> list[Response]:
+        """Overlapped drain: keep up to ``depth`` microbatches in flight,
+        completing the oldest (FIFO) whenever the window is full or the
+        queue is empty. Responses come back in submission order."""
+        self._check_exclusive_engine()
         out: list[Response] = []
-        pending: deque[list[Request]] = deque()
+        pending: deque[tuple[list[Request], float]] = deque()
         while self.queue or pending:
             while self.queue and len(pending) < depth:
                 chunk, batch = self._next_chunk()
+                t0 = time.perf_counter()
                 self.engine.begin_serve(batch, real_rows=len(chunk))
-                pending.append(chunk)
+                pending.append((chunk, t0))
+            # about to block on the oldest window: unpark the double-
+            # buffered newest one first, so its remote submission (and in
+            # streaming mode its trusted-local rows) never waits out a
+            # full drain
+            self.engine.flush_dispatch()
             res = self.engine.complete_next()
-            out.extend(self._route(pending.popleft(), res))
+            chunk, t0 = pending.popleft()
+            out.extend(self._route(chunk, res, t0))
         return out
+
+    # -- streaming completion mode (DESIGN.md §7) ----------------------
+    def _flush_streaming(self, depth: int) -> list[Response]:
+        """Per-request drain: locally-trusted rows hand back as soon as
+        their window's host half runs (confidence gate cleared); escalated
+        rows hand back when their window finalizes. With static thresholds
+        windows finalize out of submission order via ``complete_ready``;
+        with a live controller the drain uses ``complete_next`` so the
+        begin/commit interleaving — hence every threshold each window
+        sees — reproduces the FIFO drain exactly. Either way the engine
+        commits accounting in submission order, so billing, per-backend
+        attribution and controller state are bitwise-identical to FIFO."""
+        self._check_exclusive_engine()
+        out: list[Response] = []
+        windows: dict[int, _Window] = {}        # seq -> bookkeeping
+        fifo_drain = self.engine.controller is not None
+
+        def emit_ready_locals():
+            for w in windows.values():
+                if not w.local_emitted and w.fl.host_done:
+                    self._emit_locals(w, out)
+
+        def emit_window(seq, res):
+            w = windows.pop(seq)
+            if not w.local_emitted:     # host half ran at the finalize
+                self._emit_locals(w, out)
+            self._emit_escalated(w, res, out)
+
+        while self.queue or windows:
+            while self.queue and self.engine.inflight < depth:
+                chunk, batch = self._next_chunk()
+                t0 = time.perf_counter()
+                fl = self.engine.begin_serve(batch, real_rows=len(chunk))
+                windows[fl.seq] = _Window(chunk, fl, t0)
+                emit_ready_locals()     # previous window's host half ran
+                if not fifo_drain:
+                    for seq, res in self.engine.complete_ready():
+                        emit_window(seq, res)
+            # about to block: unpark the newest window so its remote
+            # round trip starts and its trusted-local rows emit NOW
+            # instead of after the next drain wave
+            self.engine.flush_dispatch()
+            emit_ready_locals()
+            if not windows:
+                break
+            if fifo_drain:
+                res = self.engine.complete_next()
+                emit_window(min(windows), res)      # FIFO = lowest seq
+            else:
+                for seq, res in self.engine.complete_ready(block=True):
+                    emit_window(seq, res)
+        return out
+
+    def _emit_locals(self, w: _Window, out: list[Response]) -> None:
+        """Hand back the window's locally-trusted rows (gate cleared, no
+        remote involved): available as soon as the host half has run."""
+        fl = w.fl
+        lat = time.perf_counter() - w.t0
+        esc = {int(j) for j in fl.idx} if fl.k else set()
+        for i, req in enumerate(w.chunk):
+            if i in esc:
+                continue
+            self._record(Response(req.uid, int(fl.local_pred[i]), "local",
+                                  float(fl.conf[i]), float("inf"),
+                                  latency_s=lat), out)
+        w.local_emitted = True
+
+    def _emit_escalated(self, w: _Window, res: dict,
+                        out: list[Response]) -> None:
+        """Hand back the window's escalated rows once finalized."""
+        fl = w.fl
+        lat = time.perf_counter() - w.t0
+        for j in fl.idx:
+            i = int(j)
+            req = w.chunk[i]            # idx only covers genuine rows
+            if bool(res["accepted"][i]):
+                resp = Response(req.uid, int(res["prediction"][i]),
+                                "remote", float(res["local_conf"][i]),
+                                float(res["remote_conf"][i]), latency_s=lat)
+            else:
+                self.fallbacks += 1
+                pred = self.fallback(req) if self.fallback else -1
+                resp = Response(req.uid, pred, "fallback",
+                                float(res["local_conf"][i]),
+                                float(res["remote_conf"][i]), latency_s=lat)
+            self._record(resp, out)

@@ -8,7 +8,7 @@ mesh shardings — the same function the multi-pod dry-run lowers.
 from __future__ import annotations
 
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 

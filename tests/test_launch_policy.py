@@ -3,8 +3,6 @@ TP-footprint estimator (pure; no multi-device runtime needed)."""
 
 from __future__ import annotations
 
-import jax
-import pytest
 
 from repro.configs import get_config
 from repro.launch.specs import _tp_param_bytes_per_chip

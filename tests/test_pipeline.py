@@ -17,11 +17,9 @@ from repro.runtime import (AdaptiveController, ControllerConfig,
                            RemoteResponseCache, RemoteTimeout,
                            RemoteTransport, TransportConfig, content_key,
                            content_keys)
-from repro.serving.engine import CascadeEngine, CascadeStats
+from repro.serving.engine import (BILLING_FIELDS, CascadeEngine,
+                                  CascadeStats)
 from repro.serving.scheduler import MicrobatchScheduler, Request
-
-BILLING = ("requests", "escalations", "remote_calls", "cache_hits",
-           "transport_failures", "rejected", "total_cost")
 
 
 def local_apply(x):
@@ -127,7 +125,7 @@ def test_pipelined_matches_serial_fixed_thresholds():
     r_ser = serve_all(s_ser, xs)
     r_pip = serve_all(s_pip, xs)
     assert routing(r_ser) == routing(r_pip)
-    for f in BILLING:
+    for f in BILLING_FIELDS:
         assert getattr(e_ser.stats, f) == getattr(e_pip.stats, f), f
     tr.shutdown()
 
@@ -161,7 +159,7 @@ def test_pipelined_depth1_matches_serial_with_controller_and_faults():
         s_pip.submit(Request(uid=i, local_input=row, remote_input=row))
     r_pip = s_pip.flush(pipeline_depth=1)
     assert routing(r_ser) == routing(r_pip)
-    for f in BILLING:
+    for f in BILLING_FIELDS:
         assert getattr(e_ser.stats, f) == getattr(e_pip.stats, f), f
     assert e_ser.controller.state == e_pip.controller.state
     tr.shutdown()
@@ -205,7 +203,7 @@ def test_pipelined_deterministic_across_completion_orders():
     r_a, e_a = run(delays_a)
     r_b, e_b = run(delays_b)
     assert routing(r_a) == routing(r_b)
-    for f in BILLING:
+    for f in BILLING_FIELDS:
         assert getattr(e_a.stats, f) == getattr(e_b.stats, f), f
     assert e_a.controller.state == e_b.controller.state
 

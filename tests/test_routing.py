@@ -18,11 +18,9 @@ from repro.runtime import (AdaptiveController, ControllerConfig,
                            RemoteBackend, RemoteResponseCache, RemoteRouter,
                            RemoteTimeout, RemoteTransport, TransportConfig)
 from repro.runtime.calibration import calibrate, select_operating_point
-from repro.serving.engine import UNROUTED, CascadeEngine
+from repro.serving.engine import (BILLING_FIELDS, UNROUTED,
+                                  CascadeEngine)
 from repro.serving.scheduler import MicrobatchScheduler, Request
-
-BILLING = ("requests", "escalations", "remote_calls", "cache_hits",
-           "transport_failures", "rejected", "total_cost")
 
 
 def local_apply(x):
@@ -195,7 +193,7 @@ def test_single_backend_registry_bitwise_matches_raw_transport():
     r_raw = serve_all(s_raw, xs)
     r_reg = serve_all(s_reg, xs)
     assert routing(r_raw) == routing(r_reg)
-    for f in BILLING:
+    for f in BILLING_FIELDS:
         assert getattr(e_raw.stats, f) == getattr(e_reg.stats, f), f
     # the auto-wrapped raw transport attributes identically to the
     # explicit single-backend registry
@@ -351,7 +349,7 @@ def test_routing_deterministic_under_adversarial_completion_orders():
     r_a, e_a = run(delays_a)
     r_b, e_b = run(delays_b)
     assert routing(r_a) == routing(r_b)
-    for f in BILLING:
+    for f in BILLING_FIELDS:
         assert getattr(e_a.stats, f) == getattr(e_b.stats, f), f
     assert e_a.stats.per_backend == e_b.stats.per_backend
     assert e_a.stats.per_backend["secondary"].remote_calls > 0
@@ -376,7 +374,7 @@ def test_multi_backend_pipelined_matches_serial_when_healthy():
     s_ser, e_ser = build(mk(), batch=8)
     s_pip, e_pip = build(mk(), batch=8, depth=4)
     assert routing(serve_all(s_ser, xs)) == routing(serve_all(s_pip, xs))
-    for f in BILLING:
+    for f in BILLING_FIELDS:
         assert getattr(e_ser.stats, f) == getattr(e_pip.stats, f), f
     assert e_ser.stats.per_backend == e_pip.stats.per_backend
     assert "fast" not in e_pip.stats.per_backend    # never routed to

@@ -5,7 +5,6 @@ TriSupervised tier-routing invariants (no hypothesis required)."""
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,7 +6,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.serving.engine import CascadeEngine, CostModel, make_cascade_step
 from repro.serving.scheduler import MicrobatchScheduler, Request

@@ -1,0 +1,532 @@
+"""Streaming completion mode (DESIGN.md §7): per-request hand-back with
+out-of-order window finalization must leave responses, billing,
+per-backend attribution AND controller state bitwise-identical to the
+FIFO drain — under adversarial remote completion orders and seeded
+transport faults — plus device-overlap double buffering, engine
+``close()`` on a half-drained streaming run, the bounded (unrouted)
+replay path, and the bench regression gate."""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteBackend, RemoteResponseCache, RemoteRouter,
+                           RemoteTimeout, RemoteTransport, TransportConfig)
+from repro.serving.engine import (BILLING_FIELDS, UNROUTED,
+                                  CascadeEngine)
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def quiet_tconf(**kw):
+    base = dict(retry_backoff_s=0.0, max_retries=0, breaker_failures=10**6,
+                timeout_s=60.0)
+    base.update(kw)
+    return TransportConfig(**base)
+
+
+def build(remote=remote_apply, *, batch=8, budget=0.5, depth=4,
+          mode="streaming", controller=None, cache=None, tconf=None,
+          router=None):
+    if router is None:
+        router = RemoteTransport(remote, tconf or quiet_tconf())
+    engine = CascadeEngine(local_apply, batch_size=batch,
+                           remote_fraction_budget=budget, t_remote=0.0,
+                           transport=router, controller=controller,
+                           cache=cache)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7,
+                                pipeline_depth=depth, completion_mode=mode)
+    return sched, engine
+
+
+def serve_all(sched, xs):
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    return sched.flush()
+
+
+def by_uid(responses):
+    return {r.uid: (r.prediction, r.source) for r in responses}
+
+
+def assert_same_accounting(e_a, e_b):
+    for f in BILLING_FIELDS:
+        assert getattr(e_a.stats, f) == getattr(e_b.stats, f), f
+    assert e_a.stats.per_backend == e_b.stats.per_backend
+
+
+# ------------------------------------------------ scheduler mode plumbing
+
+def test_unknown_completion_mode_rejected():
+    _, engine = build()
+    with pytest.raises(ValueError):
+        MicrobatchScheduler(engine, completion_mode="oracular")
+    engine.close()
+
+
+def test_streaming_responses_carry_latency_and_reorder_free_map():
+    rng = np.random.default_rng(0)
+    xs, _ = make_stream(rng, 24)
+    sched, engine = build()
+    responses = serve_all(sched, xs)
+    assert sorted(r.uid for r in responses) == list(range(24))  # no drops
+    assert set(sched.responses) == set(range(24))   # reorder-free map
+    assert all(r.latency_s > 0.0 for r in responses)
+    assert sched.first_response_s is not None
+    engine.close()
+
+
+# ------------------------------------- streaming == fifo equivalence
+
+def test_streaming_matches_fifo_fixed_thresholds():
+    """Static thresholds: windows finalize out of order, yet responses
+    (per uid), billing and per-backend attribution must be identical to
+    the FIFO drain even when later windows complete first."""
+    rng = np.random.default_rng(1)
+    xs, _ = make_stream(rng, 64)
+
+    def make_reordering():
+        calls = {"n": 0}
+        lock = threading.Lock()
+
+        def reordering_remote(x):
+            with lock:
+                calls["n"] += 1
+                i = calls["n"]
+            time.sleep(0.03 * max(0, 4 - i))    # first windows are slowest
+            return remote_apply(x)
+        return reordering_remote
+
+    s_fifo, e_fifo = build(make_reordering(), mode="fifo")
+    s_str, e_str = build(make_reordering(), mode="streaming")
+    r_fifo = serve_all(s_fifo, xs)
+    r_str = serve_all(s_str, xs)
+    assert by_uid(r_fifo) == by_uid(r_str)
+    assert_same_accounting(e_fifo, e_str)
+    e_fifo.close()
+    e_str.close()
+
+
+def test_streaming_deterministic_across_completion_orders():
+    """Same stream, adversarially inverted remote completion orders plus
+    seeded per-content faults: the per-uid responses, billing and
+    per-backend attribution must not depend on completion order."""
+    rng = np.random.default_rng(2)
+    xs, _ = make_stream(rng, 96)
+
+    def delays_a(i):
+        return 0.002 * (i % 5)
+
+    def delays_b(i):
+        return 0.002 * (4 - i % 5)          # inverted completion order
+
+    def run(delays):
+        calls = {"n": 0}
+        lock = threading.Lock()
+
+        def remote(x):
+            with lock:
+                calls["n"] += 1
+                i = calls["n"]
+            time.sleep(delays(i))
+            x = np.asarray(x)
+            if float(x.sum()) % 1.0 < 0.2:  # seeded per-content faults
+                raise RemoteTimeout("content-keyed fault")
+            return remote_apply(x)
+
+        sched, engine = build(remote, tconf=quiet_tconf(max_in_flight=2))
+        resp = serve_all(sched, xs)
+        engine.close()
+        return resp, engine
+
+    r_a, e_a = run(delays_a)
+    r_b, e_b = run(delays_b)
+    assert by_uid(r_a) == by_uid(r_b)
+    assert_same_accounting(e_a, e_b)
+    assert e_a.stats.transport_failures > 0     # faults actually fired
+
+
+def test_streaming_with_controller_matches_fifo_exactly():
+    """A live controller couples acceptance thresholds to commit order;
+    the streaming drain must reproduce the FIFO begin/commit interleaving
+    so responses AND controller state stay bitwise-identical."""
+    rng = np.random.default_rng(3)
+    xs, _ = make_stream(rng, 96)
+
+    def make(mode):
+        ctl = AdaptiveController(ControllerConfig(
+            target_remote_fraction=0.3, window=32))
+        return build(mode=mode, controller=ctl)
+
+    s_fifo, e_fifo = make("fifo")
+    s_str, e_str = make("streaming")
+    r_fifo = serve_all(s_fifo, xs)
+    r_str = serve_all(s_str, xs)
+    assert by_uid(r_fifo) == by_uid(r_str)
+    assert_same_accounting(e_fifo, e_str)
+    assert e_fifo.controller.state == e_str.controller.state
+    e_fifo.close()
+    e_str.close()
+
+
+# --------------------------------------------- the point of streaming
+
+def test_trusted_local_rows_return_before_slow_escalations():
+    """Locally-trusted requests must hand back while escalations are
+    still on the wire — they no longer inherit the remote p95."""
+    rng = np.random.default_rng(4)
+    xs, _ = make_stream(rng, 32, hard_frac=0.3)
+    remote_lat = 0.15
+
+    def slow_remote(x):
+        time.sleep(remote_lat)
+        return remote_apply(x)
+
+    sched, engine = build(slow_remote, batch=8, depth=4)
+    # warm the jit cache out of band, then reset accounting: measured
+    # latencies must reflect serving, not first-call compilation
+    engine.serve({"local": xs[:8], "remote": xs[:8]})
+    engine.stats = type(engine.stats)()
+    responses = serve_all(sched, xs)
+    local_lat = [r.latency_s for r in responses if r.source == "local"]
+    esc_lat = [r.latency_s for r in responses if r.source != "local"]
+    assert local_lat and esc_lat
+    # every escalated row rode at least one remote round trip; the bulk
+    # of trusted-local rows returned well before that
+    assert min(esc_lat) >= remote_lat
+    assert np.percentile(local_lat, 95) < 0.5 * np.percentile(esc_lat, 50)
+    assert sched.first_response_s < remote_lat
+    engine.close()
+
+
+def test_streaming_escalations_hand_back_out_of_window_order():
+    """With static thresholds a fast later window's escalations must not
+    wait for a slow earlier window (head-of-line) to finish."""
+    rng = np.random.default_rng(5)
+    xs, _ = make_stream(rng, 32, hard_frac=1.0)     # everything escalates
+    order = []
+    lock = threading.Lock()
+    calls = {"n": 0}
+
+    def remote(x):
+        with lock:
+            calls["n"] += 1
+            i = calls["n"]
+        time.sleep(0.2 if i == 1 else 0.0)   # first window very slow
+        return remote_apply(x)
+
+    sched, engine = build(remote, batch=8, depth=4,
+                          tconf=quiet_tconf(max_in_flight=8))
+    engine.serve({"local": xs[:8], "remote": xs[:8]})   # warm the jit
+    engine.stats = type(engine.stats)()
+    calls["n"] = 0                      # re-arm the slow first window
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    for r in sched.flush():
+        order.append(r.uid)
+    # some row of a LATER window (uid >= 8) must hand back before the
+    # last row of the first window
+    first_window_done = max(order.index(u) for u in range(8))
+    assert min(order.index(u) for u in range(8, 32)) < first_window_done
+    engine.close()
+
+
+# ------------------------------------------------ engine-level streaming
+
+def test_engine_complete_ready_and_stream_drain():
+    rng = np.random.default_rng(6)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    _, engine = build(batch=8)
+    assert engine.complete_ready() == []            # nothing in flight
+    assert engine.complete_ready(block=True) == []
+    fl = engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    assert not fl.host_done                         # double-buffer parked
+    engine.flush_dispatch()
+    assert fl.host_done
+    events = engine.complete_ready(block=True)
+    assert [seq for seq, _ in events] == [fl.seq]
+    assert engine.inflight == 0
+    assert engine.stats.requests == 8
+    # stream() drains several windows to completion
+    for i in range(3):
+        engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    engine.flush_dispatch()
+    seqs = [seq for seq, _ in engine.stream()]
+    assert len(seqs) == 3 and engine.inflight == 0
+    engine.close()
+
+
+def test_double_buffer_defers_host_half_until_next_begin():
+    rng = np.random.default_rng(7)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    _, engine = build(batch=8)
+    fl1 = engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    assert not fl1.host_done            # parked: device output un-fetched
+    assert fl1.pending is None          # remote NOT yet submitted
+    fl2 = engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    assert fl1.host_done                # begin(i+1) ran host half of i
+    assert fl1.pending is not None      # ... which submitted its remote
+    assert not fl2.host_done
+    engine.close()                      # drains both, runs fl2's host half
+    assert engine.stats.requests == 16
+
+
+def test_engine_close_drains_half_finalized_streaming_run():
+    """close() mid-stream: some windows finalized-but-uncommitted, some
+    still on the wire, the newest still parked — all must be accounted
+    and every pool torn down."""
+    rng = np.random.default_rng(8)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    router = RemoteRouter([RemoteBackend("r", remote_apply, quiet_tconf())])
+    _, engine = build(router=router, batch=8)
+    for _ in range(3):
+        engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    # finalize whatever has landed without committing everything
+    engine.complete_ready()
+    engine.close()
+    assert engine.inflight == 0
+    assert engine.stats.requests == 24              # all windows accounted
+    assert engine.stats.remote_calls + engine.stats.transport_failures > 0
+    for b in router:
+        assert b.transport._pool is None
+    engine.close()                                  # idempotent
+
+
+def test_streaming_cache_still_dedups_across_flushes():
+    rng = np.random.default_rng(9)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    cache = RemoteResponseCache(64)
+    sched, engine = build(batch=8, cache=cache)
+    serve_all(sched, xs)                    # all escalate, all miss
+    billed = engine.stats.remote_calls
+    serve_all(sched, xs)                    # identical content: hits
+    assert engine.stats.remote_calls == billed
+    assert engine.stats.cache_hits >= 4
+    engine.close()
+
+
+# ------------------------------------------------ (unrouted) replay path
+
+def mk_flaky_backend(t, down, *, reset_s=1.0, cost=0.004):
+    def fn(x):
+        if down["on"]:
+            raise RemoteTimeout("outage")
+        return remote_apply(x)
+    return RemoteBackend(
+        "only", fn, quiet_tconf(breaker_failures=1, breaker_reset_s=reset_s),
+        cost_per_request=cost, clock=lambda: t["now"])
+
+
+def test_unrouted_window_replays_after_half_open():
+    """A window submitted while every breaker is open must be SERVED (and
+    billed) if the breaker half-opens before its drain, instead of
+    degrading to REJECTED."""
+    t = {"now": 0.0}
+    down = {"on": True}
+    backend = mk_flaky_backend(t, down)
+    router = RemoteRouter([backend])
+    rng = np.random.default_rng(10)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    _, engine = build(router=router, batch=8)
+
+    # window 1: fails on the backend -> breaker opens
+    engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    engine.flush_dispatch()
+    assert engine.complete_ready(block=True)
+    assert engine.stats.per_backend["only"].transport_failures == 4
+
+    # window 2: submitted while the breaker is open -> parked with a
+    # replay ticket instead of an immediate REJECTED
+    fl = engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    engine.flush_dispatch()
+    assert fl.replay_ticket and fl.pending is None
+    assert router.stats.unrouted == 1
+
+    # outage ends and the reset elapses while the window rides the
+    # pipeline: the drain's replay pick serves it on the half-open probe
+    down["on"] = False
+    t["now"] += 2.0
+    events = engine.complete_ready(block=True)
+    assert len(events) == 1
+    _, res = events[0]
+    assert bool(res["accepted"].all())              # served, not REJECTED
+    st = engine.stats
+    assert st.per_backend["only"].remote_calls == 4
+    assert UNROUTED not in st.per_backend           # attributed to "only"
+    np.testing.assert_allclose(st.total_cost, 4 * 0.004)
+    assert router.stats.replay_enqueued == 1
+    assert router.stats.replay_served == 1
+    assert backend.breaker.state == "closed"        # probe closed it
+    engine.close()
+
+
+def test_replay_redeem_failure_keeps_rejected_fallback():
+    """Breaker still open at drain time: the parked window degrades to
+    REJECTED/fallback exactly as before, attributed to (unrouted)."""
+    t = {"now": 0.0}
+    down = {"on": True}
+    router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
+    rng = np.random.default_rng(11)
+    xs, _ = make_stream(rng, 16, hard_frac=1.0)
+    sched, engine = build(router=router, batch=8)
+    responses = serve_all(sched, xs)
+    assert sorted(r.uid for r in responses) == list(range(16))
+    assert {r.source for r in responses} <= {"local", "fallback"}
+    st = engine.stats
+    assert st.per_backend["only"].transport_failures == 4
+    assert st.per_backend[UNROUTED].transport_failures == 4
+    assert st.total_cost == 0.0 and st.remote_calls == 0
+    assert router.stats.replay_enqueued >= 1
+    assert router.stats.replay_served == 0
+    engine.close()
+
+
+def test_sync_serve_never_burns_replay_slots():
+    """serve() finalizes in the same call, so a ticket there could never
+    be served — the sync path must not inflate replay stats."""
+    t = {"now": 0.0}
+    down = {"on": True}
+    router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
+    rng = np.random.default_rng(13)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    _, engine = build(router=router, batch=8)
+    engine.serve({"local": xs, "remote": xs})   # opens the breaker
+    engine.serve({"local": xs, "remote": xs})   # unrouted, sync
+    assert router.stats.unrouted == 1
+    assert router.stats.replay_enqueued == 0
+    assert router.stats.replay_dropped == 0
+    engine.close()
+
+
+def test_replay_queue_is_bounded():
+    t = {"now": 0.0}
+    down = {"on": True}
+    router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)],
+                          replay_max=1)
+    router.backends[0].breaker.record_failure()     # open (threshold 1)
+    assert router.acquire_replay_slot()             # slot 1
+    assert not router.acquire_replay_slot()         # bounded
+    assert router.stats.replay_enqueued == 1
+    assert router.stats.replay_dropped == 1
+    assert router.redeem_replay() is None           # breaker still open
+    assert router.acquire_replay_slot()             # slot released
+
+
+def test_replay_fifo_and_streaming_account_identically():
+    """The replay decision happens at the window's drain in both modes;
+    with deterministic clocks the billing must match bit for bit."""
+    rng = np.random.default_rng(12)
+    xs, _ = make_stream(rng, 48, hard_frac=1.0)
+
+    def run(mode):
+        t = {"now": 0.0}
+        down = {"on": True}
+        router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
+        sched, engine = build(router=router, batch=8, depth=2, mode=mode)
+        resp = serve_all(sched, xs)
+        engine.close()
+        return resp, engine
+
+    r_f, e_f = run("fifo")
+    r_s, e_s = run("streaming")
+    assert by_uid(r_f) == by_uid(r_s)
+    assert_same_accounting(e_f, e_s)
+
+
+# ------------------------------------------------ bench regression gate
+
+def test_check_regression_gate_tolerances(tmp_path):
+    from benchmarks import check_regression as cr
+
+    base = {
+        "predictions_identical": True, "billing_identical": True,
+        "serial": {"throughput_rps": 100.0, "p95_wall_latency_s": 0.100},
+        "pipelined": {"throughput_rps": 800.0, "p95_wall_latency_s": 0.110},
+        "streaming": {
+            "throughput_rps": 700.0,
+            "trusted_local": {"p95_latency_s": 0.004},
+            "escalated": {"p95_latency_s": 0.140},
+            "checks": {"zero_dropped": True, "predictions_identical": True,
+                       "billing_identical": True,
+                       "trusted_local_p95_halved": True},
+        },
+    }
+    bdir = tmp_path / "baselines"
+    bdir.mkdir()
+    (bdir / "BENCH_serving.json").write_text(json.dumps(base))
+
+    def run_gate(fresh):
+        fp = tmp_path / "BENCH_serving.json"
+        fp.write_text(json.dumps(fresh))
+        return cr.main(["--serving", str(fp), "--routing", "",
+                        "--baseline-dir", str(bdir)])
+
+    # identical fresh run passes
+    assert run_gate(base) == 0
+    # throughput within tolerance passes; beyond tolerance fails
+    ok = json.loads(json.dumps(base))
+    ok["pipelined"]["throughput_rps"] = 800.0 * 0.90
+    assert run_gate(ok) == 0
+    bad = json.loads(json.dumps(base))
+    bad["pipelined"]["throughput_rps"] = 800.0 * 0.80
+    assert run_gate(bad) == 1
+    # p95 rise beyond tolerance (+ absolute floor) fails
+    bad = json.loads(json.dumps(base))
+    bad["serial"]["p95_wall_latency_s"] = 0.100 * 1.25 + 0.021
+    assert run_gate(bad) == 1
+    # ms-scale p95 noise is absorbed by the absolute floor
+    ok = json.loads(json.dumps(base))
+    ok["streaming"]["trusted_local"]["p95_latency_s"] = 0.015
+    assert run_gate(ok) == 0
+    # hard checks fail regardless of tolerances
+    bad = json.loads(json.dumps(base))
+    bad["streaming"]["checks"]["billing_identical"] = False
+    assert run_gate(bad) == 1
+    # a missing tracked metric is a failure, not a silent pass
+    bad = json.loads(json.dumps(base))
+    del bad["streaming"]["trusted_local"]
+    assert run_gate(bad) == 1
+    # a FIFO-mode fresh run must not silently skip streaming checks
+    bad = json.loads(json.dumps(base))
+    del bad["streaming"]
+    assert run_gate(bad) == 1
+
+
+def test_check_regression_update_baselines(tmp_path):
+    from benchmarks import check_regression as cr
+
+    fresh = {"predictions_identical": True, "billing_identical": True,
+             "serial": {"throughput_rps": 1.0, "p95_wall_latency_s": 1.0},
+             "pipelined": {"throughput_rps": 1.0,
+                           "p95_wall_latency_s": 1.0}}
+    fp = tmp_path / "BENCH_serving.json"
+    fp.write_text(json.dumps(fresh))
+    bdir = tmp_path / "baselines"
+    assert cr.main(["--serving", str(fp), "--routing", "",
+                    "--baseline-dir", str(bdir),
+                    "--update-baselines"]) == 0
+    assert json.loads((bdir / "BENCH_serving.json").read_text()) == fresh
+    assert cr.main(["--serving", str(fp), "--routing", "",
+                    "--baseline-dir", str(bdir)]) == 0

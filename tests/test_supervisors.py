@@ -62,7 +62,6 @@ def test_entropy_invariant_to_logit_shift():
 # --------------------------------------------------------------- sampling
 
 def test_variation_ratio_unanimous_vs_split():
-    c = 4
     unanimous = jnp.tile(jnp.array([[[9.0, 0, 0, 0]]]), (6, 1, 1))
     assert float(S.variation_ratio(unanimous)[0]) == 1.0
     split = jnp.stack([jnp.array([[9.0, 0, 0, 0]])] * 3
