@@ -113,6 +113,7 @@ def check_serving(gate: Gate, fresh: dict, base: dict) -> None:
               "serving: serial/pipelined predictions identical")
     gate.hard(fresh, "billing_identical",
               "serving: serial/pipelined billing identical")
+    _check_policy_section(gate, fresh, base)
     if ("streaming" in fresh) != ("streaming" in base):
         # a FIFO-mode re-baseline (or a FIFO-mode CI run) must not
         # silently disable every streaming invariant
@@ -144,6 +145,35 @@ def check_serving(gate: Gate, fresh: dict, base: dict) -> None:
                  "serving: streaming trusted-local p95")
         gate.p95(fresh, base, "streaming.escalated.p95_latency_s",
                  "serving: streaming escalated p95")
+
+
+def _check_policy_section(gate: Gate, fresh: dict, base: dict) -> None:
+    """Mixed-SLA policy gate (DESIGN.md §8): deadline-hit-rate and
+    packed-window purity are hard invariants of the fresh run; tight-
+    deadline p95 and section throughput track the baseline."""
+    if ("policy" in fresh) != ("policy" in base):
+        gate.failures.append(
+            "serving: 'policy' section present in "
+            f"{'fresh' if 'policy' in fresh else 'baseline'} only — "
+            "rerun the serving bench (and --update-baselines if "
+            "intentional)")
+        return
+    if "policy" not in base:
+        return
+    gate.hard(fresh, "policy.checks.deadline_hit_rate_ok",
+              "serving: >=95% of tight-deadline requests met their SLA")
+    gate.hard(fresh, "policy.checks.zero_dropped",
+              "serving: policy section zero dropped requests")
+    gate.hard(fresh, "policy.checks.windows_pure",
+              "serving: packed windows never mix hot/cold rows")
+    gate.hard(fresh, "policy.checks.response_costs_sum_to_total",
+              "serving: per-response costs sum to billed total")
+    gate.hard(fresh, "policy.checks.billing_invariant",
+              "serving: policy section escalation billing invariant")
+    gate.throughput(fresh, base, "policy.throughput_rps",
+                    "serving: mixed-SLA throughput")
+    gate.p95(fresh, base, "policy.tight.p95_latency_s",
+             "serving: tight-deadline p95")
 
 
 def check_routing(gate: Gate, fresh: dict, base: dict) -> None:

@@ -39,8 +39,8 @@ import numpy as np
 
 from repro.runtime import RemoteBackend, RemoteRouter, RemoteTimeout, \
     TransportConfig
-from repro.serving.engine import CascadeEngine
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.serving import ServeConfig
+from repro.serving.scheduler import Request
 
 BATCH = 32
 NCLS = 8
@@ -89,11 +89,10 @@ def make_backends(outage):
 
 def _run(xs_phases, outage, router, depth):
     """Serve three phases (pre / outage / post) through one engine."""
-    engine = CascadeEngine(local_apply, batch_size=BATCH,
-                           remote_fraction_budget=TARGET, t_remote=0.0,
-                           transport=router)
-    sched = MicrobatchScheduler(engine, fallback=lambda r: -1,
-                                pipeline_depth=depth)
+    cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=TARGET,
+                      t_remote=0.0, pipeline_depth=depth, cache_size=0)
+    engine, sched = cfg.build(local_apply, transport=router,
+                              fallback=lambda r: -1)
     # warm the jit cache out of band, then reset accounting
     engine.serve({"local": xs_phases[0][:BATCH],
                   "remote": xs_phases[0][:BATCH]})

@@ -25,8 +25,8 @@ import numpy as np
 from repro.runtime import (AdaptiveController, ControllerConfig,
                            RemoteResponseCache, RemoteTimeout,
                            RemoteTransport, TransportConfig)
-from repro.serving.engine import CascadeEngine
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.serving import ServeConfig
+from repro.serving.scheduler import Request
 
 BATCH = 32
 NCLS = 8
@@ -76,10 +76,11 @@ def budget_episode(verbose=True) -> dict:
               ("mixed", 0.25, 4096)]
 
     def fresh(controller):
-        return CascadeEngine(
-            local_apply, batch_size=BATCH, remote_fraction_budget=TARGET,
-            t_remote=0.0, transport=RemoteTransport(perfect_remote),
-            controller=controller)
+        cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=TARGET,
+                          t_remote=0.0, cache_size=0)
+        return cfg.build_engine(local_apply,
+                                transport=RemoteTransport(perfect_remote),
+                                controller=controller)
 
     # static baseline: threshold frozen at the first phase's 20% quantile
     cal, _ = make_phase(rng, 2048, phases[0][1])
@@ -155,10 +156,10 @@ def fault_episode(verbose=True) -> dict:
                         retry_backoff_s=0.0, breaker_failures=2,
                         breaker_reset_s=0.5),
         clock=lambda: clock["t"], sleep=lambda s: None)
-    engine = CascadeEngine(local_apply, batch_size=BATCH,
-                           remote_fraction_budget=TARGET, t_remote=0.0,
-                           transport=transport)
-    sched = MicrobatchScheduler(engine, fallback=lambda r: -1)
+    cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=TARGET,
+                      t_remote=0.0, cache_size=0)
+    engine, sched = cfg.build(local_apply, transport=transport,
+                              fallback=lambda r: -1)
 
     submitted = 0
 
@@ -218,10 +219,9 @@ def cache_episode(verbose=True) -> dict:
     stream = np.concatenate([base[rng.integers(0, 64, 512)], stream])
 
     cache = RemoteResponseCache(1024)
-    engine = CascadeEngine(local_apply, batch_size=BATCH,
-                           remote_fraction_budget=0.5, t_remote=0.0,
-                           transport=RemoteTransport(perfect_remote),
-                           cache=cache)
+    engine = ServeConfig(batch_size=BATCH, remote_fraction_budget=0.5,
+                         t_remote=0.0).build_engine(
+        local_apply, transport=RemoteTransport(perfect_remote), cache=cache)
     for lo in range(0, len(stream), BATCH):
         chunk = stream[lo:lo + BATCH]
         engine.serve({"local": chunk, "remote": chunk})

@@ -24,6 +24,14 @@ reordering must never change what the cascade answers or charges — and
 that the streaming trusted-local p95 is at most half the FIFO-drain
 per-request p95 (ISSUE 4 acceptance).
 
+A fourth, mixed-SLA section (DESIGN.md §8) attaches a tight
+``RequestPolicy`` deadline to half the stream: the policy-aware
+scheduler packs likely-escalating rows into dedicated windows (purity is
+reported and gated) and the engine downgrades deadline-infeasible
+escalations to ``DEADLINE_LOCAL``, so tight-deadline requests meet their
+SLA instead of inheriting the remote round trip. The section reports the
+deadline-hit-rate, packed-window purity and per-disposition counts.
+
 Machine-readable results are written to ``BENCH_serving.json`` so the
 perf trajectory is tracked across PRs and gated by
 ``benchmarks/check_regression.py``.
@@ -38,18 +46,22 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from collections import Counter
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime import RemoteTransport, TransportConfig
-from repro.serving.engine import BILLING_FIELDS, CascadeEngine
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.runtime import TransportConfig, fit_escalation_prior
+from repro.serving import RemoteSpec, RequestPolicy, ServeConfig
+from repro.serving.engine import BILLING_FIELDS
+from repro.serving.scheduler import Request
 
 BATCH = 32
 NCLS = 8
 TARGET = 0.20           # escalation fraction (capacity-k, no controller)
 STREAMING_P95_RATIO = 0.5       # trusted-local p95 <= ratio * FIFO p95
+DEADLINE_HIT_BAR = 0.95         # tight rows meeting their SLA (§8)
+PURITY_BAR = 0.95               # packed windows from one class only
 
 
 def local_apply(x):
@@ -75,27 +87,34 @@ def make_load(rng, n, hard_frac=0.3):
     return np.float32(x), labels
 
 
-def _serve(xs, depth: int, latency_s: float, completion_mode="fifo"):
-    transport = RemoteTransport(
-        make_remote(latency_s),
-        TransportConfig(max_in_flight=BATCH, retry_backoff_s=0.0,
-                        timeout_s=max(2.0, 10 * latency_s),
-                        max_concurrent=max(depth, 1)))
-    engine = CascadeEngine(local_apply, batch_size=BATCH,
-                           remote_fraction_budget=TARGET, t_remote=0.0,
-                           transport=transport)
-    sched = MicrobatchScheduler(engine, fallback=lambda r: -1,
-                                pipeline_depth=depth,
-                                completion_mode=completion_mode)
+def _mk_config(depth: int, latency_s: float, completion_mode="fifo",
+               packing="none", t_local=None) -> ServeConfig:
+    """The one ServeConfig every bench engine is built from (§8)."""
+    return ServeConfig(
+        batch_size=BATCH, remote_fraction_budget=TARGET, t_remote=0.0,
+        t_local=t_local, pipeline_depth=depth,
+        completion_mode=completion_mode, packing=packing, cache_size=0,
+        transport=TransportConfig(max_in_flight=BATCH, retry_backoff_s=0.0,
+                                  timeout_s=max(2.0, 10 * latency_s),
+                                  max_concurrent=max(depth, 1)),
+        remotes=(RemoteSpec("remote", None, latency_s),))
+
+
+def _serve(xs, depth: int, latency_s: float, completion_mode="fifo",
+           policies=None, packing="none", prior=None, t_local=None):
+    cfg = _mk_config(depth, latency_s, completion_mode, packing, t_local)
+    engine, sched = cfg.build(local_apply, make_remote(latency_s),
+                              fallback=lambda r: -1, prior=prior)
     # warm the jit cache with one out-of-band batch, then reset accounting
     engine.serve({"local": xs[:BATCH], "remote": xs[:BATCH]})
     engine.stats = type(engine.stats)()
     t0 = time.perf_counter()
     for i, row in enumerate(xs):
-        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+        sched.submit(Request(uid=i, local_input=row, remote_input=row,
+                             policy=policies[i] if policies else None))
     responses = sched.flush()
     wall = time.perf_counter() - t0
-    transport.shutdown()
+    engine.close()
     return responses, engine, wall, sched
 
 
@@ -110,7 +129,7 @@ def _metrics(tag, responses, engine, wall, n) -> dict:
         "p50_wall_latency_s": st.wall_percentile(50),
         "p95_wall_latency_s": st.wall_percentile(95),
         "mean_wall_latency_s": st.mean_wall_latency_s,
-        # per-request hand-back latency (window dispatch -> response)
+        # per-request hand-back latency (enqueue -> response, §8)
         "p50_request_latency_s": float(np.percentile(lat, 50)),
         "p95_request_latency_s": float(np.percentile(lat, 95)),
         "modelled_mean_latency_s": st.mean_latency_s,
@@ -127,24 +146,120 @@ def _metrics(tag, responses, engine, wall, n) -> dict:
     }
 
 
+def _service_lat(r) -> float:
+    """Dispatch -> hand-back: latency net of load-dependent queue wait
+    (Response.latency_s is enqueue-anchored since §8)."""
+    return r.latency_s - r.queue_s
+
+
 def _latency_split(responses) -> dict:
-    """Per-request hand-back latency, split trusted-local vs escalated."""
+    """Per-request hand-back latency, split trusted-local vs escalated.
+    Both the enqueue-anchored latency and the SERVICE latency (net of
+    queue wait) are reported; the trusted-local-vs-FIFO ratio check uses
+    the service numbers so an oversubscribed submit burst (shared queue
+    wait on both sides) cannot mask a head-of-line regression."""
     out = {}
     for tag, rows in (
             ("trusted_local", [r for r in responses if r.source == "local"]),
             ("escalated", [r for r in responses if r.source != "local"])):
         lat = [r.latency_s for r in rows]
+        svc = [_service_lat(r) for r in rows]
         out[tag] = {
             "count": len(rows),
             "p50_latency_s": float(np.percentile(lat, 50)) if lat else 0.0,
             "p95_latency_s": float(np.percentile(lat, 95)) if lat else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "service_p95_latency_s":
+                float(np.percentile(svc, 95)) if svc else 0.0,
         }
     return out
 
 
 def _by_uid(responses):
     return {r.uid: (r.prediction, r.source) for r in responses}
+
+
+def _margin(row: np.ndarray) -> float:
+    """Cheap request-observable proxy score: top-1 vs top-2 feature gap
+    (correlates with the 1st-level supervisor confidence)."""
+    s = np.sort(np.asarray(row))
+    return float(s[-1] - s[-2])
+
+
+def _policy_section(xs, depth: int, latency_s: float) -> dict:
+    """Mixed-SLA workload (DESIGN.md §8): 50% of the stream carries a
+    tight per-request deadline equal to the remote round trip (so ANY
+    escalation would blow the SLA once the window is in flight), 50% is
+    relaxed (no policy). The calibration-table escalation prior +
+    policy feasibility drive the scheduler's hot/cold window packing;
+    the engine downgrades deadline-infeasible escalations to
+    DEADLINE_LOCAL. Gated: deadline-hit-rate, packed-window purity, zero
+    drops, per-response costs summing to the billed total."""
+    n = len(xs)
+    tight = RequestPolicy(deadline_s=latency_s)
+    policies = [tight if i % 2 == 0 else None for i in range(n)]
+
+    # calibration table (§8): offline 1st-level confidences on a slice
+    # pick t_local at the TARGET quantile and fit the escalation prior
+    # on the request-observable margin proxy
+    n_cal = min(256, n)
+    logits = np.asarray(local_apply(jnp.asarray(xs[:n_cal])))
+    conf = np.max(np.exp(logits) / np.exp(logits).sum(-1, keepdims=True),
+                  -1)
+    t_local = float(np.quantile(conf, TARGET))
+    prior = fit_escalation_prior(
+        np.array([_margin(r) for r in xs[:n_cal]]), conf <= t_local)
+
+    responses, engine, wall, sched = _serve(
+        xs, depth=depth, latency_s=latency_s, completion_mode="streaming",
+        policies=policies, packing="policy",
+        prior=lambda req: prior(_margin(req.local_input)),
+        t_local=t_local)
+
+    tight_rows = [r for r in responses if r.uid % 2 == 0]
+    hits = [r for r in tight_rows if r.latency_s <= latency_s]
+    hit_rate = len(hits) / max(len(tight_rows), 1)
+    ps = dict(sched.packing_stats)
+    purity = (ps["cold"] + ps["hot"]) / max(ps["windows"], 1)
+    st = engine.stats
+    cost_sum = sum(r.cost for r in responses)
+    dispositions = dict(Counter(r.disposition for r in responses))
+    checks = {
+        "deadline_hit_rate_ok": hit_rate >= DEADLINE_HIT_BAR,
+        "zero_dropped": len(responses) == n,
+        "windows_pure": ps["mixed"] == 0 and purity >= PURITY_BAR,
+        "response_costs_sum_to_total":
+            abs(cost_sum - st.total_cost) < 1e-9,
+        "billing_invariant": (st.escalations == st.remote_calls
+                              + st.cache_hits + st.transport_failures),
+    }
+    lat_tight = [r.latency_s for r in tight_rows]
+    lat_rel = [r.latency_s for r in responses if r.uid % 2 == 1]
+    return {
+        "requests": n,
+        "tight_fraction": 0.5,
+        "tight_deadline_s": latency_s,
+        "wall_s": wall,
+        "throughput_rps": n / wall,
+        "deadline_hit_rate": hit_rate,
+        "packed_window_purity": purity,
+        "packing_stats": ps,
+        "dispositions": dispositions,
+        "tight": {
+            "count": len(tight_rows),
+            "p50_latency_s": float(np.percentile(lat_tight, 50)),
+            "p95_latency_s": float(np.percentile(lat_tight, 95)),
+        },
+        "relaxed": {
+            "count": len(lat_rel),
+            "p50_latency_s": float(np.percentile(lat_rel, 50)),
+            "p95_latency_s": float(np.percentile(lat_rel, 95)),
+        },
+        "total_cost": st.total_cost,
+        "remote_fraction": st.remote_fraction,
+        "checks": checks,
+        "passed": all(checks.values()),
+    }
 
 
 def _billing_identical(a, b) -> bool:
@@ -191,9 +306,10 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
         r_str, eng_str, w_str, s_str = _serve(
             xs, depth=depth, latency_s=remote_latency_s,
             completion_mode="streaming")
-        fifo_p95 = pipelined["p95_request_latency_s"]
+        fifo_p95 = float(np.percentile([_service_lat(r) for r in r_pip],
+                                       95))
         split = _latency_split(r_str)
-        local_p95 = split["trusted_local"]["p95_latency_s"]
+        local_p95 = split["trusted_local"]["service_p95_latency_s"]
         checks = {
             # reordering must never change answers, routing or billing
             "predictions_identical": _by_uid(r_str) == _by_uid(r_pip),
@@ -208,7 +324,7 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
             "wall_s": w_str,
             "throughput_rps": n / w_str,
             "first_response_s": s_str.first_response_s,
-            "fifo_p95_request_latency_s": fifo_p95,
+            "fifo_service_p95_latency_s": fifo_p95,
             "trusted_local_p95_ratio_vs_fifo":
                 local_p95 / max(fifo_p95, 1e-12),
             **split,
@@ -218,6 +334,10 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
         report["passed"] = report["passed_2x"] and all(checks.values())
     else:
         report["passed"] = report["passed_2x"]
+
+    # --- mixed-SLA policy section (DESIGN.md §8) ---
+    report["policy"] = _policy_section(xs, depth, remote_latency_s)
+    report["passed"] = report["passed"] and report["policy"]["passed"]
 
     if json_path:
         with open(json_path, "w") as f:
@@ -238,15 +358,24 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
         if "streaming" in report:
             s = report["streaming"]
             print("--- Streaming completion (per-request hand-back) ---")
-            print(f"trusted-local p95 "
-                  f"{s['trusted_local']['p95_latency_s']*1e3:7.1f} ms "
-                  f"({s['trusted_local']['count']} requests) vs FIFO "
-                  f"per-request p95 {s['fifo_p95_request_latency_s']*1e3:.1f}"
+            print(f"trusted-local service p95 "
+                  f"{s['trusted_local']['service_p95_latency_s']*1e3:7.1f} "
+                  f"ms ({s['trusted_local']['count']} requests) vs FIFO "
+                  f"service p95 {s['fifo_service_p95_latency_s']*1e3:.1f}"
                   f" ms -> ratio {s['trusted_local_p95_ratio_vs_fifo']:.3f}")
             print(f"escalated     p95 "
                   f"{s['escalated']['p95_latency_s']*1e3:7.1f} ms "
                   f"({s['escalated']['count']} requests); first response "
                   f"{s['first_response_s']*1e3:.1f} ms; checks {s['checks']}")
+        pol = report["policy"]
+        print("--- Mixed-SLA policy section (DESIGN.md §8) ---")
+        print(f"tight deadline {pol['tight_deadline_s']*1e3:.0f} ms: "
+              f"hit rate {pol['deadline_hit_rate']:.3f} "
+              f"(tight p95 {pol['tight']['p95_latency_s']*1e3:.1f} ms, "
+              f"relaxed p95 {pol['relaxed']['p95_latency_s']*1e3:.1f} ms)")
+        print(f"window packing {pol['packing_stats']} -> purity "
+              f"{pol['packed_window_purity']:.2f}; dispositions "
+              f"{pol['dispositions']}; checks {pol['checks']}")
         if json_path:
             print(f"JSON -> {json_path}")
     return report

@@ -25,8 +25,8 @@ import numpy as np
 from repro.runtime import (AdaptiveController, ControllerConfig,
                            RemoteResponseCache, RemoteTimeout,
                            RemoteTransport, TransportConfig, calibrate)
-from repro.serving.engine import CascadeEngine
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.serving import ServeConfig
+from repro.serving.scheduler import Request
 
 rng = np.random.default_rng(0)
 NCLS, BATCH, BUDGET = 8, 32, 0.20
@@ -85,13 +85,13 @@ transport = RemoteTransport(
     clock=lambda: clock["t"], sleep=lambda s: None)
 controller = AdaptiveController(ControllerConfig(
     target_remote_fraction=BUDGET, window=256))
-engine = CascadeEngine(local_apply, batch_size=BATCH,
-                       remote_fraction_budget=BUDGET,
-                       t_remote=point.t_remote,
-                       transport=transport, controller=controller,
-                       cache=RemoteResponseCache(4096))
-engine.set_local_threshold(point.t_local)
-sched = MicrobatchScheduler(engine, fallback=lambda r: -1)
+# the whole serving stack comes from ONE ServeConfig (DESIGN.md §8)
+cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=BUDGET,
+                  t_remote=point.t_remote, t_local=point.t_local)
+engine, sched = cfg.build(local_apply, transport=transport,
+                          controller=controller,
+                          cache=RemoteResponseCache(4096),
+                          fallback=lambda r: -1)
 
 uid = 0
 

@@ -15,7 +15,7 @@ from repro.core.metrics import auc_rac, request_accuracy_curve
 from repro.core.supervisors import max_softmax
 from repro.data.synthetic import make_classification_task
 from repro.models import surrogate as S
-from repro.serving.engine import CascadeEngine
+from repro.serving import ServeConfig
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 # ---- 1. a task + a small LOCAL surrogate model (paper §4.1) -------------
@@ -47,10 +47,9 @@ print(f"local model trained: loss {float(loss):.3f}")
 oracle = jax.nn.one_hot(jnp.asarray(labels), ncls) * 8.0
 
 # ---- 3. the cascade: local + 1st supervisor -> remote + 2nd supervisor --
-eng = CascadeEngine(
-    local_apply=lambda x: S.apply(cfg, params, x),
-    remote_apply=lambda idx: oracle[idx[:, 0]],
-    batch_size=256, remote_fraction_budget=0.3, t_remote=0.5)
+eng = ServeConfig(batch_size=256, remote_fraction_budget=0.3, t_remote=0.5,
+                  fused=True).build_engine(
+    lambda x: S.apply(cfg, params, x), lambda idx: oracle[idx[:, 0]])
 
 test_toks, test_idx = jnp.asarray(toks[512:768]), jnp.arange(512, 768)
 out = eng.serve({"local": test_toks, "remote": test_idx[:, None]})

@@ -17,8 +17,9 @@ from repro.configs import get_config
 from repro.core.thresholds import nominal_quantile_threshold
 from repro.data.synthetic import make_classification_task
 from repro.models import surrogate as S
-from repro.serving.engine import CascadeEngine, CostModel
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.serving import ServeConfig
+from repro.serving.engine import CostModel
+from repro.serving.scheduler import Request
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 rng = np.random.default_rng(0)
@@ -81,12 +82,12 @@ rem = remote_apply({"tokens": jnp.asarray(toks[512:640] % rcfg.vocab_size),
 rem_conf = np.asarray(jnp.max(jax.nn.softmax(rem, -1), -1))
 t_remote = nominal_quantile_threshold(rem_conf[~invalid[512:640]], 0.05)
 
-eng = CascadeEngine(lambda x: S.apply(cfg, params, x), remote_apply,
-                    batch_size=64, remote_fraction_budget=0.35,
-                    t_remote=t_remote, cost=CostModel())
 ranger_notifications = []
-sched = MicrobatchScheduler(
-    eng, fallback=lambda req: ranger_notifications.append(req.uid) or -1)
+eng, sched = ServeConfig(
+    batch_size=64, remote_fraction_budget=0.35, t_remote=t_remote,
+    cost=CostModel(), fused=True,
+).build(lambda x: S.apply(cfg, params, x), remote_apply,
+        fallback=lambda req: ranger_notifications.append(req.uid) or -1)
 
 # ---- serve the last 256 frames ------------------------------------------
 test = slice(768, 1024)

@@ -7,41 +7,45 @@ transport (windows / retries / circuit breaker) with a content-keyed
 response cache. The 1st-level supervisor escalates the lowest-confidence
 requests; the 2nd-level supervisor filters untrusted remote predictions
 (fallback). Prints the paper's cost/latency accounting plus transport,
-cache and controller telemetry.
+cache, controller and per-request policy telemetry.
 
-Runtime control plane (DESIGN.md):
+The serving surface is ONE object (DESIGN.md §8): the driver builds a
+single ``repro.serving.ServeConfig`` and every runtime component — the
+engine, scheduler, remote registry/router, budget controller and cache —
+is constructed from it. The per-knob CLI flags of earlier PRs are gone;
+any ``ServeConfig`` field (including nested ``transport.*``, ``cost.*``
+and ``default_policy.*`` fields) is set with a repeatable
+
+    --set key=value
+
+override (migration table in DESIGN.md §8), e.g.::
+
+    --set pipeline_depth=8 --set completion_mode=streaming \
+    --set transport.timeout_s=1.0 --set route_policy=weighted \
+    --set remotes=cheap:0.002:0.4;fast:0.008:0.1 \
+    --set default_policy.deadline_s=0.5 --set packing=policy
+
+Workload-level knobs keep first-class flags:
+  --remote-budget   target remote fraction (capacity / controller target)
+  --fpr             2nd-level supervisor nominal false-alarm rate
   --adaptive        enable the online budget controller (EMA/PID + drift)
   --calibrate       offline Pareto sweep picking (t_local, t_remote, k)
   --fused           bypass the transport: seed-style fully-jitted cascade
-  --pipeline-depth  overlap local compute with remote round trips
-                    (N microbatches in flight, FIFO drain — DESIGN.md §5)
-  --completion-mode fifo: windows drain strictly in submission order;
-                    streaming: per-request completion — locally-trusted
-                    requests return the moment the confidence gate
-                    clears, escalations stream back as their remote
-                    futures resolve (DESIGN.md §7)
-  --replay-max      bounded replay queue for (unrouted) escalation
-                    windows (served if a breaker half-opens before the
-                    drain — DESIGN.md §7)
-  --remote          repeatable "name:cost:latency" backend spec building a
-                    multi-remote registry (cost $/req, latency modelled s;
-                    either may be empty for the CostModel default) —
-                    DESIGN.md §6
-  --route-policy    primary-failover | cheapest-available | latency-ema
-  --cost-budget     hold a dollar budget ($/req) instead of a remote
-                    fraction (controller + calibration)
 
 On this CPU container use ``--smoke`` (reduced remote config).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --remote-arch yi-6b \
-        --smoke --requests 256 --remote-budget 0.3 --adaptive --calibrate
+        --smoke --requests 256 --remote-budget 0.3 --adaptive --calibrate \
+        --set pipeline_depth=4 --set completion_mode=streaming
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+from collections import Counter
 
 import jax
 import jax.numpy as jnp
@@ -52,14 +56,9 @@ from repro.core.thresholds import nominal_quantile_threshold
 from repro.data.synthetic import make_classification_task
 from repro.models import surrogate as S
 from repro.models import transformer as T
-from repro.runtime import (ROUTE_POLICIES, AdaptiveController,
-                           ControllerConfig, RemoteBackend,
-                           RemoteResponseCache, RemoteRouter,
-                           TransportConfig, calibrate, content_key,
-                           content_keys)
-from repro.serving.engine import CascadeEngine, CostModel
-from repro.serving.scheduler import (COMPLETION_MODES, MicrobatchScheduler,
-                                     Request)
+from repro.runtime import calibrate, content_key, content_keys
+from repro.serving import Request, ServeConfig
+from repro.serving.engine import CostModel
 from repro.train.optimizer import AdamWConfig, adamw_update, init_opt_state
 
 
@@ -81,17 +80,17 @@ def train_surrogate(cfg, toks, labels, steps=60, lr=3e-3, seed=0):
     return params, float(loss)
 
 
-def parse_remote_spec(spec: str) -> tuple[str, float | None, float | None]:
-    """One ``--remote`` spec: ``name[:cost[:latency]]`` — cost in $/call,
-    latency in modelled round-trip seconds; empty fields fall back to the
-    ``CostModel`` defaults."""
-    parts = spec.split(":")
-    if len(parts) > 3 or not parts[0]:
-        raise ValueError(f"bad --remote spec {spec!r}; "
-                         f"expected name[:cost[:latency]]")
-    cost = float(parts[1]) if len(parts) > 1 and parts[1] else None
-    latency = float(parts[2]) if len(parts) > 2 and parts[2] else None
-    return parts[0], cost, latency
+def build_serve_config(args) -> ServeConfig:
+    """One ``ServeConfig`` from the CLI: first-class workload flags, then
+    the repeatable ``--set key=value`` field overrides (DESIGN.md §8)."""
+    cfg = ServeConfig(
+        batch_size=args.batch,
+        remote_fraction_budget=args.remote_budget,
+        target_rejection_rate=args.fpr,
+        adaptive=args.adaptive,
+        fused=args.fused,
+        cost=CostModel())
+    return cfg.with_overrides(args.set or [])
 
 
 def main(argv=None) -> int:
@@ -104,69 +103,27 @@ def main(argv=None) -> int:
                     help="capacity fraction escalated to the remote tier")
     ap.add_argument("--fpr", type=float, default=0.05,
                     help="2nd-level supervisor nominal false-alarm rate")
-    # ---- runtime control plane knobs (DESIGN.md) ----
     ap.add_argument("--fused", action="store_true",
                     help="seed-style fully-jitted cascade (no transport)")
     ap.add_argument("--adaptive", action="store_true",
                     help="online EMA/PID budget controller")
-    ap.add_argument("--control-window", type=int, default=128,
-                    help="requests per controller update")
     ap.add_argument("--calibrate", action="store_true",
                     help="offline Pareto sweep for (t_local, t_remote, k)")
-    ap.add_argument("--cache-size", type=int, default=4096,
-                    help="remote response cache entries (0 disables)")
-    ap.add_argument("--pipeline-depth", type=int, default=1,
-                    help="in-flight microbatches (>1 overlaps the local "
-                         "tier with remote round trips — DESIGN.md §5)")
-    ap.add_argument("--completion-mode", default="fifo",
-                    choices=COMPLETION_MODES,
-                    help="fifo: FIFO window drain; streaming: per-request "
-                         "completion the moment each answer is trusted "
-                         "(DESIGN.md §7)")
-    ap.add_argument("--replay-max", type=int, default=8,
-                    help="max (unrouted) escalation windows parked for a "
-                         "half-open replay instead of REJECTED "
-                         "(DESIGN.md §7)")
-    ap.add_argument("--max-in-flight", type=int, default=8,
-                    help="remote transport window size")
-    ap.add_argument("--remote-timeout", type=float, default=2.0,
-                    help="per-window remote deadline (s)")
-    ap.add_argument("--remote-retries", type=int, default=2,
-                    help="retries per remote window")
-    ap.add_argument("--breaker-failures", type=int, default=3,
-                    help="consecutive window failures that open the breaker")
-    ap.add_argument("--breaker-reset", type=float, default=5.0,
-                    help="seconds before the open breaker half-opens")
-    # ---- multi-remote registry (DESIGN.md §6) ----
-    ap.add_argument("--remote", action="append", default=None,
-                    metavar="NAME:COST:LATENCY",
-                    help="remote backend spec, repeatable: per-call $ and "
-                         "modelled round-trip s (empty fields = CostModel "
-                         "defaults), e.g. --remote cheap:0.002:0.4 "
-                         "--remote fast:0.008:0.1")
-    ap.add_argument("--route-policy", default="primary-failover",
-                    choices=ROUTE_POLICIES,
-                    help="backend preference order for each escalation "
-                         "window")
-    ap.add_argument("--cost-budget", type=float, default=None,
-                    help="dollar budget ($/request): controller and "
-                         "--calibrate hold realised spend here instead of "
-                         "the remote fraction")
+    ap.add_argument("--set", action="append", default=None,
+                    metavar="KEY=VALUE",
+                    help="ServeConfig field override, repeatable — any "
+                         "field incl. nested transport.* / cost.* / "
+                         "default_policy.* (DESIGN.md §8 migration "
+                         "table), e.g. --set pipeline_depth=8 "
+                         "--set default_policy.deadline_s=0.5")
     args = ap.parse_args(argv)
-    if args.fused and args.adaptive:
-        ap.error("--adaptive needs the transport serve path; drop --fused")
-    if args.fused and args.pipeline_depth > 1:
-        ap.error("--pipeline-depth needs the transport serve path; "
-                 "drop --fused")
-    if args.fused and args.completion_mode == "streaming":
-        ap.error("--completion-mode streaming needs the transport serve "
-                 "path; drop --fused")
-    if args.fused and (args.remote or args.cost_budget is not None):
-        ap.error("--remote/--cost-budget need the transport serve path; "
-                 "drop --fused")
-    if (args.cost_budget is not None and not args.adaptive
+    try:
+        cfg = build_serve_config(args)
+    except ValueError as e:
+        ap.error(str(e))
+    if (cfg.cost_budget is not None and not cfg.adaptive
             and not args.calibrate):
-        ap.error("--cost-budget is only enforced by the controller or the "
+        ap.error("cost_budget is only enforced by the controller or the "
                  "offline sweep; add --adaptive and/or --calibrate")
 
     # ---- task + local surrogate (paper §4.1: input-domain-reduced) ----
@@ -208,53 +165,41 @@ def main(argv=None) -> int:
     def local_apply(tk):
         return S.apply(scfg, sparams, tk)
 
+    # an explicit --set t_remote/t_local always wins over the computed
+    # thresholds below ("any ServeConfig field is settable" must hold)
+    user_set = {item.partition("=")[0].strip() for item in (args.set or [])}
+
     # ---- 2nd-level threshold: nominal-quantile calibration (§4.5) ----
     cal_logits = np.asarray(remote_apply(
         {"tokens": jnp.asarray(toks[:128] % rcfg.vocab_size),
          "idx": jnp.arange(128)}))
     cal_conf = np.max(
         np.exp(cal_logits) / np.exp(cal_logits).sum(-1, keepdims=True), -1)
-    t_remote = nominal_quantile_threshold(cal_conf, args.fpr)
+    if "t_remote" not in user_set:
+        cfg = dataclasses.replace(
+            cfg, t_remote=nominal_quantile_threshold(cal_conf, args.fpr))
 
-    # ---- multi-remote registry + routing policy (DESIGN.md §6) ----
-    router = controller = cache = None
-    if not args.fused:
-        tconf = TransportConfig(
-            max_in_flight=args.max_in_flight, timeout_s=args.remote_timeout,
-            max_retries=args.remote_retries,
-            breaker_failures=args.breaker_failures,
-            breaker_reset_s=args.breaker_reset)
-        specs = [parse_remote_spec(s) for s in (args.remote or ["remote"])]
-        router = RemoteRouter(
-            [RemoteBackend(name, remote_apply, tconf, cost_per_request=c,
-                           latency_s=l) for name, c, l in specs],
-            policy=args.route_policy, replay_max=args.replay_max)
+    # ---- remote registry / cache from the one ServeConfig ----
+    router = cache = None
+    if not cfg.fused:
+        router = cfg.build_router(remote_apply)
         print(f"[serve] remote registry: "
               f"{[b.name for b in router.candidates()]} "
               f"(policy {router.policy})")
-        if args.cache_size > 0:
-            # key on token content only: the per-request "idx" (oracle-head
-            # plumbing) would make every key unique and the cache cold
-            cache = RemoteResponseCache(
-                args.cache_size,
-                key_fn=lambda row: content_key(row["tokens"]),
-                key_batch_fn=lambda batch, n: content_keys(batch["tokens"],
-                                                           n))
-    if args.adaptive:
-        controller = AdaptiveController(ControllerConfig(
-            target_remote_fraction=args.remote_budget,
-            window=args.control_window, target_rejection_rate=args.fpr,
-            cost_budget_per_request=args.cost_budget))
+        # key on token content only: the per-request "idx" (oracle-head
+        # plumbing) would make every key unique and the cache cold
+        cache = cfg.build_cache(
+            key_fn=lambda row: content_key(row["tokens"]),
+            key_batch_fn=lambda batch, n: content_keys(batch["tokens"], n))
 
-    t_local = None
     if args.calibrate:
         # offline Pareto sweep on a labelled validation slice (DESIGN.md §1)
         # — priced at the policy-preferred backend's per-call cost when a
-        # registry is configured, selected by $ when --cost-budget is set
+        # registry is configured, selected by $ when cost_budget is set
         nval = cal_logits.shape[0]
         val_logits = np.asarray(local_apply(jnp.asarray(local_toks[:nval])))
         val_sm = np.exp(val_logits) / np.exp(val_logits).sum(-1, keepdims=1)
-        esc_cost = CostModel().remote_cost_per_request
+        esc_cost = (cfg.cost or CostModel()).remote_cost_per_request
         if router is not None:
             esc_cost = router.expected_cost_per_escalation(esc_cost)
         point, k, front = calibrate(
@@ -262,30 +207,31 @@ def main(argv=None) -> int:
             local_correct=val_logits.argmax(-1) == labels[:nval],
             remote_conf=cal_conf,
             remote_correct=cal_logits.argmax(-1) == labels[:nval],
-            budget=(None if args.cost_budget is not None
-                    else args.remote_budget),
-            cost_budget=args.cost_budget, batch_size=args.batch,
+            budget=(None if cfg.cost_budget is not None
+                    else cfg.remote_fraction_budget),
+            cost_budget=cfg.cost_budget, batch_size=cfg.batch_size,
             max_rejection_rate=args.fpr, remote_cost_per_request=esc_cost)
-        t_local, t_remote = point.t_local, point.t_remote
-        print(f"[serve] calibrated operating point: t_local={t_local:.4f} "
-              f"t_remote={t_remote:.4f} k={k} "
+        cal_updates = {}
+        if "t_local" not in user_set:
+            cal_updates["t_local"] = point.t_local
+        if "t_remote" not in user_set:
+            cal_updates["t_remote"] = point.t_remote
+        cfg = dataclasses.replace(cfg, **cal_updates)
+        print(f"[serve] calibrated operating point: "
+              f"t_local={point.t_local:.4f} "
+              f"t_remote={point.t_remote:.4f} k={k} "
               f"(val remote fraction {point.remote_fraction:.2f}, "
               f"${point.cost_per_request:.5f}/req, "
               f"accepted acc {point.accuracy:.3f}; "
               f"frontier has {len(front)} points)")
 
-    eng = CascadeEngine(local_apply,
-                        remote_apply if router is None else None,
-                        batch_size=args.batch,
-                        remote_fraction_budget=args.remote_budget,
-                        t_remote=t_remote, cost=CostModel(),
-                        transport=router, controller=controller,
-                        cache=cache)
-    if t_local is not None:
-        eng.set_local_threshold(t_local)
-    sched = MicrobatchScheduler(eng, fallback=lambda r: -1,
-                                pipeline_depth=args.pipeline_depth,
-                                completion_mode=args.completion_mode)
+    # ---- the whole serving stack from the one ServeConfig ----
+    if cfg.fused:
+        eng, sched = cfg.build(local_apply, remote_apply,
+                               fallback=lambda r: -1)
+    else:
+        eng, sched = cfg.build(local_apply, transport=router, cache=cache,
+                               fallback=lambda r: -1)
 
     t0 = time.perf_counter()
     try:
@@ -306,10 +252,12 @@ def main(argv=None) -> int:
     st = eng.stats
     print(f"[serve] {len(responses)} requests in {wall:.1f}s wall")
     print(f"[serve] routing: {srcs}")
+    print(f"[serve] dispositions: "
+          f"{dict(Counter(r.disposition for r in responses))}")
     print(f"[serve] accepted accuracy: "
           f"{correct / max(len(responses) - srcs['fallback'], 1):.3f}")
     print(f"[serve] remote fraction: {st.remote_fraction:.2f} "
-          f"(budget {args.remote_budget})")
+          f"(budget {cfg.remote_fraction_budget})")
     print(f"[serve] modelled cost: ${st.total_cost:.4f} "
           f"(${st.total_cost / max(st.requests, 1):.5f}/req; remote-only "
           f"would be ${st.requests * eng.cost.remote_cost_per_request:.4f})")
@@ -319,8 +267,8 @@ def main(argv=None) -> int:
           f"p50 {st.wall_percentile(50) * 1e3:.0f} ms, "
           f"p95 {st.wall_percentile(95) * 1e3:.0f} ms "
           f"(throughput {len(responses) / max(wall, 1e-9):.0f} req/s, "
-          f"pipeline depth {args.pipeline_depth}, "
-          f"completion mode {args.completion_mode})")
+          f"pipeline depth {cfg.pipeline_depth}, "
+          f"completion mode {cfg.completion_mode})")
     # per-request hand-back latency, split trusted-local vs escalated
     # (the streaming mode's value proposition — DESIGN.md §7)
     if sched.first_response_s is not None:
@@ -334,6 +282,11 @@ def main(argv=None) -> int:
                   f"p50 {np.percentile(lat, 50) * 1e3:.0f} ms, "
                   f"p95 {np.percentile(lat, 95) * 1e3:.0f} ms "
                   f"({len(lat)} requests)")
+    if cfg.packing != "none":
+        ps = sched.packing_stats
+        pure = ps["cold"] + ps["hot"]
+        print(f"[serve] window packing: {ps} "
+              f"(purity {pure / max(ps['windows'], 1):.2f})")
     if router is not None:
         rs = router.stats
         print(f"[serve] router: picks {rs.picks}, "
@@ -351,20 +304,20 @@ def main(argv=None) -> int:
                          f"({u.remote_calls} calls, {u.cache_hits} hits, "
                          f"{u.transport_failures} failures)")
             print(line)
-    if cache is not None:
-        print(f"[serve] cache: {cache.stats.hits} hits / "
-              f"{cache.stats.misses} misses "
-              f"(hit rate {cache.stats.hit_rate:.2f})")
-    if controller is not None:
-        cs = controller.state
+    if eng.cache is not None:
+        print(f"[serve] cache: {eng.cache.stats.hits} hits / "
+              f"{eng.cache.stats.misses} misses "
+              f"(hit rate {eng.cache.stats.hit_rate:.2f})")
+    if eng.controller is not None:
+        cs = eng.controller.state
         print(f"[serve] controller: {cs.windows} windows, "
               f"ema remote fraction {cs.ema_fraction:.3f}, "
               f"t_local={cs.t_local}, t_remote={cs.t_remote}, "
               f"{cs.drift_events} drift events")
-        if args.cost_budget is not None:
+        if cfg.cost_budget is not None:
             per_esc = cs.ema_cost_per_escalation
             print(f"[serve] dollar budget: target "
-                  f"${args.cost_budget:.5f}/req, realised "
+                  f"${cfg.cost_budget:.5f}/req, realised "
                   f"${st.total_cost / max(st.requests, 1):.5f}/req "
                   f"(learned $/escalation "
                   f"{'n/a' if per_esc is None else f'{per_esc:.5f}'}, "

@@ -12,7 +12,8 @@ Composes with ``repro.serving.engine.CascadeEngine`` (see DESIGN.md):
 
 from repro.runtime.cache import (CacheStats, RemoteResponseCache,
                                  content_key, content_keys)
-from repro.runtime.calibration import (OperatingPoint, calibrate,
+from repro.runtime.calibration import (EscalationPrior, OperatingPoint,
+                                       calibrate, fit_escalation_prior,
                                        pareto_frontier,
                                        select_operating_point,
                                        sweep_operating_points)
@@ -23,16 +24,18 @@ from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
                                      CircuitOpenError, RemoteBackend,
                                      RemoteCallError, RemoteRouter,
                                      RemoteTimeout, RemoteTransport,
-                                     RouterStats, TransportConfig,
-                                     TransportFuture, TransportStats)
+                                     RouteConstraint, RouterStats,
+                                     TransportConfig, TransportFuture,
+                                     TransportStats)
 
 __all__ = [
     "ROUTE_POLICIES", "AdaptiveController", "CacheStats", "CircuitBreaker",
     "CircuitOpenError", "ControllerConfig", "ControllerState",
-    "OperatingPoint", "RemoteBackend", "RemoteCallError",
+    "EscalationPrior", "OperatingPoint", "RemoteBackend", "RemoteCallError",
     "RemoteResponseCache", "RemoteRouter", "RemoteTimeout",
-    "RemoteTransport", "RouterStats", "TransportConfig", "TransportFuture",
-    "TransportStats", "calibrate", "content_key", "content_keys",
-    "pareto_frontier", "population_stability_index",
-    "select_operating_point", "sweep_operating_points",
+    "RemoteTransport", "RouteConstraint", "RouterStats", "TransportConfig",
+    "TransportFuture", "TransportStats", "calibrate", "content_key",
+    "content_keys", "fit_escalation_prior", "pareto_frontier",
+    "population_stability_index", "select_operating_point",
+    "sweep_operating_points",
 ]

@@ -142,6 +142,58 @@ def select_operating_point(points: Sequence[OperatingPoint],
                                         -p.rejection_rate))
 
 
+class EscalationPrior:
+    """P(escalate | proxy score): the calibration-table prior behind the
+    scheduler's policy-aware window packing (DESIGN.md §8).
+
+    Fit from calibration-time pairs of a *request-observable* proxy score
+    (anything cheap the caller can compute before the local forward — a
+    feature margin, input length, a stale cached confidence; the 1st-level
+    supervisor confidence itself when scoring offline) and the escalation
+    outcome under the selected ``t_local``. Scores are bucketed at
+    quantile edges; calling the prior with a new proxy score returns the
+    bucket's empirical escalation rate. Monotone inputs give a monotone
+    table, but nothing requires the proxy to be the confidence itself.
+    """
+
+    def __init__(self, edges: np.ndarray, rates: np.ndarray):
+        self.edges = np.asarray(edges, np.float64)      # [bins+1]
+        self.rates = np.asarray(rates, np.float64)      # [bins]
+
+    def __call__(self, score: float) -> float:
+        i = int(np.searchsorted(self.edges, score, side="right")) - 1
+        return float(self.rates[np.clip(i, 0, self.rates.size - 1)])
+
+    def batch(self, scores: np.ndarray) -> np.ndarray:
+        idx = np.searchsorted(self.edges, np.asarray(scores, np.float64),
+                              side="right") - 1
+        return self.rates[np.clip(idx, 0, self.rates.size - 1)]
+
+
+def fit_escalation_prior(proxy_scores: np.ndarray,
+                         escalated: np.ndarray, *,
+                         bins: int = 16) -> EscalationPrior:
+    """Bucket ``proxy_scores`` at quantile edges and record each bucket's
+    empirical escalation rate. ``escalated`` is the 0/1 outcome under the
+    chosen operating point (e.g. ``local_conf <= t_local``). Empty
+    buckets inherit the global rate."""
+    s = np.asarray(proxy_scores, np.float64).ravel()
+    e = np.asarray(escalated, bool).ravel()
+    if s.size != e.size or s.size == 0:
+        raise ValueError("need matching, non-empty proxy/escalated arrays")
+    edges = np.unique(np.quantile(s, np.linspace(0.0, 1.0, bins + 1)))
+    if edges.size < 2:                      # constant proxy: one bucket
+        edges = np.array([s[0] - 1e-9, s[0] + 1e-9])
+    idx = np.clip(np.searchsorted(edges, s, side="right") - 1,
+                  0, edges.size - 2)
+    rates = np.full(edges.size - 1, float(e.mean()))
+    for b in range(edges.size - 1):
+        m = idx == b
+        if m.any():
+            rates[b] = float(e[m].mean())
+    return EscalationPrior(edges, rates)
+
+
 def calibrate(local_conf, local_correct, remote_conf, remote_correct, *,
               budget: float | None = None, batch_size: int, grid: int = 33,
               cost_budget: float | None = None,

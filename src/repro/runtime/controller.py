@@ -128,15 +128,22 @@ class AdaptiveController:
     # -- observations the engine feeds back --------------------------------
     def observe(self, local_conf: np.ndarray, escalated: int,
                 requests: int, remote_conf: np.ndarray | None = None,
-                cost: float = 0.0) -> None:
+                cost: float = 0.0, policy_blocked: int = 0) -> None:
         """Record one served batch (real rows only) and update per window.
         ``cost`` is the batch's realised billed $ (per-backend pricing), so
-        the controller can hold a dollar budget (DESIGN.md §6)."""
+        the controller can hold a dollar budget (DESIGN.md §6).
+        ``policy_blocked`` counts rows the per-request policy layer
+        withheld from escalation (deadline/cost downgrades,
+        ``escalation="never"`` — DESIGN.md §8): they are excluded from
+        the realised-fraction denominator so the budget loop tracks the
+        *eligible* population instead of chasing rows it can never
+        escalate (which would drag ``t_local`` up and overspend on the
+        rest)."""
         conf = np.asarray(local_conf, np.float64).ravel()
         self._scores.extend(conf.tolist())
         self._win_scores.extend(conf.tolist())
         self._win_escalated += int(escalated)
-        self._win_requests += int(requests)
+        self._win_requests += max(int(requests) - int(policy_blocked), 0)
         self._win_cost += float(cost)
         if remote_conf is not None:
             rc = np.asarray(remote_conf, np.float64).ravel()

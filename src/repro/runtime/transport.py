@@ -41,7 +41,15 @@ one per escalation window under a pluggable policy:
     standbys;
   * ``cheapest-available``  — ascending ``cost_per_request``;
   * ``latency-ema``         — ascending measured latency EMA (seeded from
-    the modelled ``latency_s`` until a backend has observations).
+    the modelled ``latency_s`` until a backend has observations);
+  * ``weighted``            — spread windows across equally-priced healthy
+    backends by inverse in-flight count (load balancing — DESIGN.md §8).
+
+Per-request policy (DESIGN.md §8): ``pick``/``redeem_replay`` accept a
+``RouteConstraint`` merged from the window's escalated rows — a cost
+ceiling, a remaining-deadline latency ceiling and an advisory backend
+hint — and ``min_available_cost``/``min_latency_estimate`` expose the
+feasibility signals the engine's deadline/cost downgrades consult.
 
 ``pick()`` skips any backend whose breaker would refuse the call *at
 submit time* (the speculative-failover fast path: an open breaker reroutes
@@ -400,6 +408,10 @@ class RemoteBackend:
         self.transport = transport
         self.cost_per_request = cost_per_request
         self.latency_s = latency_s
+        # windows handed to this backend and not yet resolved — the
+        # `weighted` routing policy's load signal
+        self._inflight = 0
+        self._inflight_lock = threading.Lock()
 
     # -- delegation to the owned transport -----------------------------
     @property
@@ -415,16 +427,37 @@ class RemoteBackend:
         return self.transport.stats
 
     def call(self, batch: Any):
-        return self.transport.call(batch)
+        self._track(+1)
+        try:
+            return self.transport.call(batch)
+        finally:
+            self._track(-1)
 
     def submit(self, batch: Any) -> TransportFuture:
-        return self.transport.submit(batch)
+        self._track(+1)
+        try:
+            fut = self.transport.submit(batch)
+        except BaseException:
+            self._track(-1)     # pool-shutdown race etc.: don't leak the
+            raise               # counter and skew `weighted` routing
+        fut.add_done_callback(lambda _f: self._track(-1))
+        return fut
 
     def poll(self, future: TransportFuture) -> bool:
         return self.transport.poll(future)
 
     def shutdown(self, wait: bool = True) -> None:
         self.transport.shutdown(wait=wait)
+
+    def _track(self, delta: int) -> None:
+        with self._inflight_lock:
+            self._inflight = max(0, self._inflight + delta)
+
+    @property
+    def inflight(self) -> int:
+        """Windows routed here and not yet resolved (load signal)."""
+        with self._inflight_lock:
+            return self._inflight
 
     # -- routing signals ------------------------------------------------
     def available(self) -> bool:
@@ -444,7 +477,36 @@ class RemoteBackend:
                 f"latency={self.latency_s})")
 
 
-ROUTE_POLICIES = ("primary-failover", "cheapest-available", "latency-ema")
+ROUTE_POLICIES = ("primary-failover", "cheapest-available", "latency-ema",
+                  "weighted")
+
+
+@dataclass(frozen=True)
+class RouteConstraint:
+    """Per-window routing constraint merged from the escalated rows'
+    ``RequestPolicy`` objects (DESIGN.md §8). One window is served by one
+    backend, so the backend must satisfy the *tightest* row: ``max_cost``
+    is the smallest ``cost_cap`` present, ``max_latency_s`` the smallest
+    remaining deadline. ``hint`` is advisory — the hinted backend is
+    preferred when available and satisfying; ``default_cost`` prices
+    backends that carry no ``cost_per_request`` of their own (the
+    engine's CostModel constant)."""
+    max_cost: float | None = None
+    max_latency_s: float | None = None
+    hint: str | None = None
+    default_cost: float | None = None
+
+    def admits(self, backend: "RemoteBackend") -> bool:
+        if self.max_cost is not None:
+            cost = (backend.cost_per_request
+                    if backend.cost_per_request is not None
+                    else self.default_cost)
+            if cost is not None and cost > self.max_cost + 1e-12:
+                return False
+        if (self.max_latency_s is not None
+                and backend.latency_estimate() > self.max_latency_s):
+            return False
+        return True
 
 
 @dataclass
@@ -518,19 +580,76 @@ class RemoteRouter:
                                          b.cost_per_request or 0.0))
         if self.policy == "latency-ema":
             return sorted(self.backends, key=RemoteBackend.latency_estimate)
+        if self.policy == "weighted":
+            # spread windows across equally-priced backends by inverse
+            # in-flight count (least-loaded first; price still dominates,
+            # registration order breaks the remaining ties)
+            return sorted(self.backends,
+                          key=lambda b: (b.cost_per_request is None,
+                                         b.cost_per_request or 0.0,
+                                         b.inflight))
         return list(self.backends)
 
-    def pick(self) -> RemoteBackend | None:
-        """First available backend in policy order; None when every
-        breaker refuses (the window degrades to REJECTED/fallback)."""
-        for i, b in enumerate(self.candidates()):
-            if b.available():
-                self.stats.picks[b.name] += 1
-                if i > 0:
-                    self.stats.failovers += 1
-                return b
+    def _ordered(self, constraint: RouteConstraint | None
+                 ) -> list[RemoteBackend]:
+        """Policy order with an advisory routing hint applied: the hinted
+        backend (if registered) moves to the front of the candidate
+        list; constraint filtering still applies to it."""
+        cands = self.candidates()
+        if constraint is not None and constraint.hint is not None:
+            hinted = [b for b in cands if b.name == constraint.hint]
+            if hinted:
+                cands = hinted + [b for b in cands if b is not hinted[0]]
+        return cands
+
+    def pick(self, constraint: RouteConstraint | None = None
+             ) -> RemoteBackend | None:
+        """First available backend in policy order that satisfies the
+        window's merged ``RouteConstraint`` (None = unconstrained); None
+        when every breaker (or the constraint) refuses — the window
+        degrades to REJECTED/fallback. ``failovers`` counts picks that
+        skipped a breaker-refused preferred backend (constraint skips are
+        policy, not failure)."""
+        skipped_unavailable = False
+        for b in self._ordered(constraint):
+            if not b.available():
+                skipped_unavailable = True
+                continue
+            if constraint is not None and not constraint.admits(b):
+                continue
+            self.stats.picks[b.name] += 1
+            if skipped_unavailable:
+                self.stats.failovers += 1
+            return b
         self.stats.unrouted += 1
         return None
+
+    # -- policy-layer feasibility signals (DESIGN.md §8) ----------------
+    def min_available_cost(self, default: float) -> float | None:
+        """Cheapest per-call price among currently-available backends
+        (``default`` prices backends without their own); None when no
+        backend is available. The engine's cost-cap feasibility check."""
+        costs = [b.cost_per_request if b.cost_per_request is not None
+                 else default for b in self.backends if b.available()]
+        return min(costs) if costs else None
+
+    def min_latency_estimate(self, *, max_cost: float | None = None,
+                             default_cost: float | None = None
+                             ) -> float | None:
+        """Fastest round-trip estimate among available backends (optional
+        cost ceiling applied first); None when no backend qualifies. The
+        engine's deadline-vs-EMA feasibility check (DESIGN.md §8)."""
+        ests = []
+        for b in self.backends:
+            if not b.available():
+                continue
+            if max_cost is not None:
+                cost = (b.cost_per_request
+                        if b.cost_per_request is not None else default_cost)
+                if cost is not None and cost > max_cost + 1e-12:
+                    continue
+            ests.append(b.latency_estimate())
+        return min(ests) if ests else None
 
     # -- bounded replay of (unrouted) windows (DESIGN.md §7) ------------
     def acquire_replay_slot(self) -> bool:
@@ -546,7 +665,8 @@ class RemoteRouter:
         self.stats.replay_enqueued += 1
         return True
 
-    def redeem_replay(self) -> RemoteBackend | None:
+    def redeem_replay(self, constraint: RouteConstraint | None = None
+                      ) -> RemoteBackend | None:
         """Replay pick for a parked (unrouted) window at drain time: the
         first backend in policy order whose breaker has half-opened since
         submit serves the window — the replay call doubles as the probe —
@@ -554,8 +674,9 @@ class RemoteRouter:
         breaker still refuses (the window keeps the REJECTED/fallback
         path). Always releases the ticket's slot."""
         self._replay_slots = max(0, self._replay_slots - 1)
-        for b in self.candidates():
-            if b.available():
+        for b in self._ordered(constraint):
+            if b.available() and (constraint is None
+                                  or constraint.admits(b)):
                 self.stats.picks[b.name] += 1
                 self.stats.replay_served += 1
                 return b

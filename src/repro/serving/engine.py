@@ -41,6 +41,17 @@ i+1 begins — so the accelerator computes batch i+1 while batch i's
 escalations cross the host boundary. ``flush_dispatch`` unparks the final
 window once no more begins are coming.
 
+Per-request policy (DESIGN.md §8): every serve path accepts one
+``RequestPolicy`` per genuine row (deadline SLA, cost cap, routing hint,
+escalation override). The host half enforces them before any cache or
+transport work — deadline-infeasible escalations downgrade to the local
+prediction with the ``DEADLINE_LOCAL`` disposition instead of blowing
+the SLA — and every result row carries ``disposition``/``backend``/
+``cost`` so billing attribution surfaces at the API boundary. The
+engine (like the scheduler and router) is constructed from a single
+``ServeConfig`` facade via ``from_config``; the keyword constructor
+below survives one PR as a deprecated shim.
+
 Multi-remote routing (DESIGN.md §6): the runtime/pipelined paths accept a
 ``RemoteRouter`` of named ``RemoteBackend``s in place of a bare transport
 (a bare ``RemoteTransport`` is auto-wrapped as a single-backend registry,
@@ -55,6 +66,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator
@@ -67,7 +79,40 @@ from repro.core.cascade import (combine_escalated, escalation_capacity,
                                 gather_requests, select_escalations)
 from repro.core.supervisors import SOFTMAX_SUPERVISORS
 from repro.kernels.confidence_gate.ops import confidence_gate
-from repro.runtime.transport import RemoteBackend, RemoteRouter
+from repro.runtime.transport import (RemoteBackend, RemoteRouter,
+                                     RouteConstraint)
+from repro.serving.policy import (CACHED, DEADLINE_LOCAL, LOCAL,
+                                  POLICY_LOCAL, REJECTED, REMOTE,
+                                  RequestPolicy, ServeConfig)
+
+# legacy keyword constructors warn once per process (DESIGN.md §8): the
+# ServeConfig facade is the supported construction path for one PR, then
+# the keyword sprawl goes away. Tests reset this to re-arm the warning.
+_LEGACY_WARNED: set[str] = set()
+
+
+def _warn_legacy_ctor(name: str) -> None:
+    if name in _LEGACY_WARNED:
+        return
+    _LEGACY_WARNED.add(name)
+    warnings.warn(
+        f"constructing {name} from individual keyword arguments is "
+        f"deprecated; build a repro.serving.ServeConfig and use "
+        f"{name}.from_config (DESIGN.md §8 migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
+def _reset_legacy_ctor_warnings() -> None:
+    """Re-arm the once-per-process constructor deprecation warnings
+    (test hook; lives beside the shim machinery so removing the shims
+    next PR removes it too)."""
+    _LEGACY_WARNED.clear()
+
+
+def _any_policy(policies) -> bool:
+    """True iff some entry actually constrains serving."""
+    return policies is not None and any(
+        p is not None and not p.is_default for p in policies)
 
 # per-backend accounting key for escalations no backend would accept
 # (every breaker open): they fail without touching any transport
@@ -292,6 +337,20 @@ class _InFlight:
     real: int                   # genuine leading rows
     asynchronous: bool          # futures (pipelined) vs sync transport
     capacity: int               # escalation cap snapshotted at dispatch
+    # -- per-request policy layer (DESIGN.md §8) -------------------------
+    policies: Any = None        # [real] RequestPolicy | None per row
+    t_enq: Any = None           # [real] enqueue stamps (deadline anchor)
+    policed: bool = False       # any row carries a non-trivial policy
+    downgraded: dict = field(default_factory=dict)  # row -> disposition
+    forced: set = field(default_factory=set)   # idx POSITIONS policy-REJECTED
+    blocked: int = 0            # rows policy withheld from escalation
+    constraint: Any = None      # merged RouteConstraint (cap/hint part)
+    # earliest absolute deadline among escalating rows (engine clock);
+    # the latency ceiling is recomputed from it at every routing
+    # decision — submit-time pick AND drain-time replay — so a window
+    # that rode the pipeline can't be served against a stale budget
+    abs_deadline: float | None = None
+    early: list = field(default_factory=list)  # rows decidable at host half
     # -- dispatch half (device) ----------------------------------------
     gate_dev: Any = None        # un-fetched device gate output
     remote_batch: Any = None    # batch["remote"], held until the host half
@@ -366,7 +425,11 @@ class CascadeEngine:
                  remote_fraction_budget: float,
                  t_remote: float, cost: CostModel = CostModel(),
                  supervisor="max_softmax", transport=None, controller=None,
-                 cache=None, clock: Callable[[], float] = time.perf_counter):
+                 cache=None, clock: Callable[[], float] = time.perf_counter,
+                 default_policy: RequestPolicy | None = None,
+                 _from_config: bool = False):
+        if not _from_config:
+            _warn_legacy_ctor("CascadeEngine")
         if remote_apply is None and transport is None:
             raise ValueError("need a remote tier: remote_apply or transport")
         self.batch_size = batch_size
@@ -387,7 +450,17 @@ class CascadeEngine:
                                [RemoteBackend("remote", transport=transport)]))
         self.controller = controller
         self.cache = cache
+        # default RequestPolicy applied to rows without their own; a
+        # trivial default collapses to None so unpolicied traffic keeps
+        # the zero-overhead fast path (DESIGN.md §8)
+        self.default_policy = (default_policy
+                               if default_policy is not None
+                               and not default_policy.is_default else None)
         self._clock = clock
+        # opt-in for _early_decide (DESIGN.md §8): only a streaming
+        # consumer reads fl.early, so the streaming scheduler flips this
+        # and the FIFO paths skip the extra host-half supervisor pass
+        self.early_handback = False
         self._inflight: deque[_InFlight] = deque()
         self._seq = 0
         # set by any window's remote future resolving (any backend): the
@@ -402,6 +475,51 @@ class CascadeEngine:
             self._local_step = jax.jit(make_gated_local_step(local_apply,
                                                              supervisor))
 
+    # -- ServeConfig construction (DESIGN.md §8) -----------------------
+    _UNSET = object()
+
+    @classmethod
+    def from_config(cls, config: ServeConfig, local_apply,
+                    remote_apply=None, *, transport=None,
+                    controller=_UNSET, cache=_UNSET,
+                    clock: Callable[[], float] = time.perf_counter
+                    ) -> "CascadeEngine":
+        """Build the engine from one ``ServeConfig`` (the supported
+        construction path). On the runtime path the remote registry is
+        built from ``remote_apply`` per ``config.remotes`` unless a
+        ``transport``/router is passed explicitly; the controller and
+        response cache come from the config unless overridden (pass
+        ``controller=None``/``cache=None`` to force them off)."""
+        if config.fused:
+            eng = cls(local_apply, remote_apply,
+                      batch_size=config.batch_size,
+                      remote_fraction_budget=config.remote_fraction_budget,
+                      t_remote=config.t_remote,
+                      cost=config.cost or CostModel(),
+                      supervisor=config.supervisor, clock=clock,
+                      _from_config=True)
+        else:
+            if transport is None:
+                if remote_apply is None:
+                    raise ValueError("runtime path needs remote_apply or "
+                                     "an explicit transport/router")
+                transport = config.build_router(remote_apply)
+            eng = cls(local_apply, batch_size=config.batch_size,
+                      remote_fraction_budget=config.remote_fraction_budget,
+                      t_remote=config.t_remote,
+                      cost=config.cost or CostModel(),
+                      supervisor=config.supervisor, transport=transport,
+                      controller=(config.build_controller()
+                                  if controller is cls._UNSET
+                                  else controller),
+                      cache=(config.build_cache() if cache is cls._UNSET
+                             else cache),
+                      clock=clock, default_policy=config.default_policy,
+                      _from_config=True)
+        if config.t_local is not None:
+            eng.set_local_threshold(config.t_local)
+        return eng
+
     def set_remote_threshold(self, t: float) -> None:
         """Runtime reconfiguration (paper §4.5)."""
         self.t_remote = t
@@ -411,24 +529,32 @@ class CascadeEngine:
         self.t_local = t
 
     # ------------------------------------------------------------------
-    def serve(self, batch: dict[str, Any],
-              real_rows: int | None = None) -> dict[str, np.ndarray]:
+    def serve(self, batch: dict[str, Any], real_rows: int | None = None,
+              policies=None, t_enq=None) -> dict[str, np.ndarray]:
         """Serve one batch; ``real_rows`` marks how many leading rows are
         genuine — padded replicas beyond it are served (static jit shapes)
-        but never counted or billed."""
+        but never counted or billed. ``policies`` carries one
+        ``RequestPolicy | None`` per genuine row and ``t_enq`` the rows'
+        enqueue stamps (the deadline anchor) — DESIGN.md §8."""
         if self.transport is None:
+            if _any_policy(policies) or self.default_policy is not None:
+                raise RuntimeError("per-request policies need the runtime "
+                                   "path (construct the engine with "
+                                   "transport=...)")
             return self._serve_fused(batch, real_rows)
         if self._inflight:
             raise RuntimeError("pipelined windows in flight; drain them "
                                "with complete_next() before serve()")
-        fl = self._dispatch(batch, real_rows, asynchronous=False)
+        fl = self._dispatch(batch, real_rows, asynchronous=False,
+                            policies=policies, t_enq=t_enq)
         self._host_begin(fl)
         self._finalize(fl)
         return self._commit(fl)
 
     # -- pipelined runtime path (DESIGN.md §5, §7) ---------------------
     def begin_serve(self, batch: dict[str, Any],
-                    real_rows: int | None = None) -> _InFlight:
+                    real_rows: int | None = None,
+                    policies=None, t_enq=None) -> _InFlight:
         """Dispatch one microbatch's local forward on the device, then
         run the host half of the PREVIOUS window (double buffering,
         DESIGN.md §7): the gate triple fetch, cache lookups, routing and
@@ -440,7 +566,8 @@ class CascadeEngine:
             raise RuntimeError("pipelined serving needs the runtime path "
                                "(construct the engine with transport=...)")
         prev = self._inflight[-1] if self._inflight else None
-        fl = self._dispatch(batch, real_rows, asynchronous=True)
+        fl = self._dispatch(batch, real_rows, asynchronous=True,
+                            policies=policies, t_enq=t_enq)
         self._inflight.append(fl)
         if prev is not None and not prev.host_done:
             self._host_begin(prev)
@@ -593,8 +720,8 @@ class CascadeEngine:
         return out
 
     # -- runtime path: dispatch half (device) --------------------------
-    def _dispatch(self, batch, real_rows, *, asynchronous: bool
-                  ) -> _InFlight:
+    def _dispatch(self, batch, real_rows, *, asynchronous: bool,
+                  policies=None, t_enq=None) -> _InFlight:
         """Launch the local forward + confidence gate on the device and
         snapshot the submit-time control state. Returns WITHOUT fetching
         the gate output — the host half (``_host_begin``) runs one begin
@@ -617,7 +744,10 @@ class CascadeEngine:
         self._seq += 1
         return _InFlight(seq=self._seq, t0=t0, b=b, real=real,
                          asynchronous=asynchronous, capacity=capacity,
-                         gate_dev=gate_dev, remote_batch=batch["remote"])
+                         gate_dev=gate_dev, remote_batch=batch["remote"],
+                         policies=policies, t_enq=t_enq,
+                         policed=(_any_policy(policies)
+                                  or self.default_policy is not None))
 
     # -- runtime path: host half ---------------------------------------
     def _host_begin(self, fl: _InFlight) -> None:
@@ -634,23 +764,34 @@ class CascadeEngine:
         fl.k = int(min(cand.size, fl.capacity, fl.real))
         fl.idx = cand[:fl.k]
 
+        if fl.policed:
+            # per-request policy pass (DESIGN.md §8): escalation
+            # overrides, cost-cap and deadline-vs-EMA feasibility — may
+            # shrink/extend fl.idx and record downgrades/forced rejects
+            self._apply_policies(fl)
+
         if fl.k > 0:
             host = jax.tree.map(np.asarray, fl.remote_batch)
             sub = jax.tree.map(lambda a: a[fl.idx], host)  # batched gather
             if self.cache is not None:
                 fl.keys = self.cache.keys_for(sub, fl.k)
-                found = [self.cache.lookup(key) for key in fl.keys]
+                # policy-REJECTED rows never consult cache or transport
+                found = [None if j in fl.forced else self.cache.lookup(key)
+                         for j, key in enumerate(fl.keys)]
                 fl.cached = [f[0] if f is not None else None for f in found]
                 fl.hit_src = [f[1] if f is not None else None for f in found]
             else:
                 fl.keys = [None] * fl.k
                 fl.cached = [None] * fl.k
                 fl.hit_src = [None] * fl.k
-            fl.miss = [j for j, c in enumerate(fl.cached) if c is None]
+            fl.miss = [j for j, c in enumerate(fl.cached)
+                       if c is None and j not in fl.forced]
             if fl.miss:
                 # route the window at submit time; an open breaker fails
-                # over to the next policy candidate immediately
-                fl.backend = self.router.pick()
+                # over to the next policy candidate immediately. The
+                # merged RouteConstraint (cost cap / remaining deadline /
+                # hint) narrows the candidate set (DESIGN.md §8)
+                fl.backend = self.router.pick(self._window_constraint(fl))
                 marr = np.asarray(fl.miss)
                 sub_miss = jax.tree.map(lambda a: a[marr], sub)
                 if fl.backend is not None:
@@ -669,8 +810,160 @@ class CascadeEngine:
                     # could never be served — don't burn a slot on it
                     fl.replay_ticket = True
                     fl.sub_miss = sub_miss
+            if (fl.asynchronous and self.early_handback
+                    and self.controller is None):
+                # cache hits are fully decidable now (static t_remote):
+                # expose them so the streaming scheduler hands them back
+                # with the trusted locals instead of after the window's
+                # remote drain (DESIGN.md §8; the finalize half still
+                # recomputes, keeping FIFO results untouched)
+                self._early_decide(fl)
         fl.remote_batch = None
         fl.host_done = True
+
+    # -- per-request policy layer (DESIGN.md §8) -----------------------
+    def _policy_for(self, fl: _InFlight, i: int) -> RequestPolicy | None:
+        p = fl.policies[i] if fl.policies is not None else None
+        return p if p is not None else self.default_policy
+
+    def _apply_policies(self, fl: _InFlight) -> None:
+        """Apply each genuine row's ``RequestPolicy`` to the gate's
+        escalation set (host half, before any cache/transport work):
+
+        * ``escalation="never"``    — row leaves the set (POLICY_LOCAL);
+        * ``escalation="always"``   — row joins the set even when the
+          gate trusted it (explicit per-request demand; bypasses the
+          batch capacity cap, feasibility still applies);
+        * ``cost_cap`` infeasible (cheapest available backend above the
+          cap, or no backend) — POLICY_LOCAL downgrade, or the REJECTED
+          path with ``on_miss="reject"``;
+        * ``deadline_s`` infeasible — the remaining budget
+          ``deadline_s - (now - t_enq)`` is checked against the fastest
+          available backend's round-trip estimate (measured EMA,
+          modelled prior until observations land): DEADLINE_LOCAL
+          downgrade or REJECTED per ``on_miss``.
+
+        Surviving constrained rows merge into one ``RouteConstraint``
+        (tightest cap/deadline, first hint) since one window is served
+        by exactly one backend."""
+        now = self._clock()
+        default_cost = self.cost.remote_cost_per_request
+        # loop-invariant router scans, hoisted: one availability snapshot
+        # per WINDOW (also more consistent than per-row reads racing
+        # concurrent breaker flips)
+        min_cost = self.router.min_available_cost(default_cost)
+        lat_by_cap: dict[float | None, float | None] = {}
+
+        def min_latency(cap):
+            if cap not in lat_by_cap:
+                lat_by_cap[cap] = self.router.min_latency_estimate(
+                    max_cost=cap, default_cost=default_cost)
+            return lat_by_cap[cap]
+
+        gate_rows = {int(i) for i in fl.idx}
+        drop: set[int] = set()          # downgraded rows (leave the set)
+        forced: set[int] = set()        # policy-REJECTED rows (stay)
+        adds: list[int] = []            # escalation="always" additions
+        caps: list[float] = []
+        abs_deadlines: list[float] = []  # anchor + deadline_s (absolute)
+        hints: list[str] = []
+        for i in range(fl.real):
+            p = self._policy_for(fl, i)
+            if p is None or p.is_default:
+                continue
+            in_gate = i in gate_rows
+            if p.escalation == "never":
+                if in_gate:
+                    drop.add(i)
+                    fl.downgraded[i] = POLICY_LOCAL
+                continue
+            if not in_gate and p.escalation != "always":
+                continue
+            # feasibility: cost cap first, then deadline-vs-EMA
+            infeasible = None
+            if p.cost_cap is not None:
+                if min_cost is None or min_cost > p.cost_cap + 1e-12:
+                    infeasible = POLICY_LOCAL
+            if infeasible is None and p.deadline_s is not None:
+                anchor = (fl.t_enq[i] if fl.t_enq is not None else fl.t0)
+                remaining = p.deadline_s - (now - anchor)
+                est = min_latency(p.cost_cap)
+                if est is None or est > remaining:
+                    infeasible = DEADLINE_LOCAL
+                else:
+                    abs_deadlines.append(anchor + p.deadline_s)
+            if infeasible is not None:
+                if p.on_miss == "reject":
+                    forced.add(i)
+                    if not in_gate:
+                        adds.append(i)
+                else:
+                    if in_gate:
+                        drop.add(i)
+                    fl.downgraded[i] = infeasible
+                continue
+            if not in_gate:
+                adds.append(i)
+            if p.cost_cap is not None:
+                caps.append(p.cost_cap)
+            if p.routing_hint is not None:
+                hints.append(p.routing_hint)
+        new_idx = [i for i in map(int, fl.idx) if i not in drop]
+        # appended demands keep the ascending-confidence convention
+        new_idx.extend(sorted(adds, key=lambda i: float(fl.conf[i])))
+        fl.idx = np.asarray(new_idx, np.int64)
+        fl.k = len(new_idx)
+        fl.forced = {j for j, i in enumerate(new_idx) if i in forced}
+        fl.blocked = len(drop) + len(forced)
+        fl.abs_deadline = min(abs_deadlines) if abs_deadlines else None
+        if caps or abs_deadlines or hints:
+            fl.constraint = RouteConstraint(
+                max_cost=min(caps) if caps else None,
+                hint=hints[0] if hints else None,
+                default_cost=default_cost)
+
+    def _window_constraint(self, fl: _InFlight) -> RouteConstraint | None:
+        """The window's routing constraint AT THIS INSTANT: the latency
+        ceiling is the tightest row's remaining deadline budget
+        recomputed against the current clock, so a replay pick after
+        pipeline residency sees the burnt-down budget (an expired one
+        admits no backend and the window keeps the REJECTED path)."""
+        if fl.constraint is None:
+            return None
+        if fl.abs_deadline is None:
+            return fl.constraint
+        return RouteConstraint(
+            max_cost=fl.constraint.max_cost,
+            max_latency_s=fl.abs_deadline - self._clock(),
+            hint=fl.constraint.hint,
+            default_cost=fl.constraint.default_cost)
+
+    def _early_decide(self, fl: _InFlight) -> None:
+        """Pre-decide rows that need no remote round trip — cache hits —
+        with the CURRENT (static) ``t_remote``, so the streaming
+        scheduler hands them back at gate-clear time instead of after
+        the window's drain (the satellite latency fix; DESIGN.md §8).
+        Only runs without a controller: a live controller couples
+        acceptance to commit order."""
+        hit = [j for j in range(fl.k)
+               if j not in fl.forced and fl.cached[j] is not None]
+        if not hit:
+            return
+        rlogits = jnp.asarray(np.stack([fl.cached[j] for j in hit]))
+        rconf = np.asarray(self._supervisor(rlogits))
+        rpred = np.asarray(jnp.argmax(rlogits, -1))
+        for w, j in enumerate(hit):
+            i = int(fl.idx[j])
+            accepted = bool(rconf[w] > self.t_remote)
+            fl.early.append({
+                "row": i, "accepted": accepted,
+                "prediction": int(rpred[w]),
+                "remote_conf": float(rconf[w]),
+                "disposition": CACHED if accepted else REJECTED,
+                "backend": (fl.hit_src[j] if fl.hit_src[j] is not None
+                            else UNATTRIBUTED),
+                "cost": 0.0,
+            })
 
     # -- runtime path: finalize half -----------------------------------
     def _finalize(self, fl: _InFlight) -> None:
@@ -693,7 +986,8 @@ class CascadeEngine:
                     # window rode the pipeline serves it (the call IS the
                     # half-open probe), billed to the replaying backend
                     fl.replay_ticket = False
-                    fl.backend = self.router.redeem_replay()
+                    fl.backend = self.router.redeem_replay(
+                        self._window_constraint(fl))
                     if fl.backend is not None:
                         fl.pending = _Resolved(fl.backend.call(fl.sub_miss))
                     fl.sub_miss = None
@@ -710,7 +1004,7 @@ class CascadeEngine:
                                                source=bname)
                 else:                 # no backend available at submit time
                     n_failed = len(fl.miss)
-            n_hits = fl.k - len(fl.miss)
+            n_hits = fl.k - len(fl.miss) - len(fl.forced)
             got = [j for j, c in enumerate(cached) if c is not None]
             if got:
                 rlogits = jnp.asarray(np.stack([cached[j] for j in got]))
@@ -733,9 +1027,39 @@ class CascadeEngine:
         fl.remote_conf = remote_conf
         fl.n_sent, fl.n_failed, fl.n_hits = n_sent, n_failed, n_hits
         fl.bname = fl.backend.name if fl.backend is not None else UNROUTED
+
+        # per-row billing attribution for the API boundary (DESIGN.md §8):
+        # how each row was served, by which backend, at what billed $
+        disposition = np.full((fl.b,), LOCAL, object)
+        row_backend = np.full((fl.b,), None, object)
+        row_cost = np.zeros((fl.b,), np.float64)
+        for i, d in fl.downgraded.items():
+            disposition[i] = d
+        cost_per = self.cost.backend_cost(fl.backend)
+        miss_set = set(fl.miss)
+        for j, i in enumerate(map(int, fl.idx)):
+            if j in fl.forced:
+                disposition[i] = REJECTED       # policy-rejected, $0
+            elif j in miss_set:
+                if fl.cached[j] is not None:    # billed remote answer
+                    disposition[i] = (REMOTE if accepted[i] else REJECTED)
+                    row_backend[i] = fl.bname
+                    row_cost[i] = cost_per
+                else:                           # transport-lost, $0
+                    disposition[i] = REJECTED
+                    if fl.backend is not None:
+                        row_backend[i] = fl.bname
+            else:                               # cache hit, $0
+                disposition[i] = (CACHED if accepted[i] else REJECTED)
+                row_backend[i] = (fl.hit_src[j]
+                                  if fl.hit_src[j] is not None
+                                  else UNATTRIBUTED)
+
         fl.result = {"prediction": fl.pred, "local_pred": fl.local_pred,
                      "local_conf": fl.conf, "remote_conf": remote_conf,
-                     "escalated": escalated, "accepted": accepted}
+                     "escalated": escalated, "accepted": accepted,
+                     "disposition": disposition, "backend": row_backend,
+                     "cost": row_cost}
         fl.finalized = True
 
     # -- runtime path: commit half -------------------------------------
@@ -758,22 +1082,29 @@ class CascadeEngine:
         if fl.n_hits and fl.hit_src is not None:
             miss_set = set(fl.miss)
             for j in range(fl.k):
-                if j not in miss_set:
+                # policy-forced REJECTED rows are neither misses nor hits
+                if j not in miss_set and j not in fl.forced:
                     src = fl.hit_src[j]
                     self.stats.backend_usage(
                         src if src is not None else UNATTRIBUTED
                     ).cache_hits += 1
 
         accepted = fl.result["accepted"]
-        self._account(fl.real, fl.k, fl.n_sent, fl.n_hits, fl.n_failed,
-                      int((~accepted[:fl.real]).sum()),
+        # policy-rejected rows never touched a tier past the local model:
+        # they are `rejected`, not `escalations` (the billing invariant
+        # escalations = remote_calls + cache_hits + transport_failures
+        # stays exact — DESIGN.md §8)
+        escalations = fl.k - len(fl.forced)
+        self._account(fl.real, escalations, fl.n_sent, fl.n_hits,
+                      fl.n_failed, int((~accepted[:fl.real]).sum()),
                       cost=window_cost,
                       remote_latency_s=fl.n_sent * lat_per)
         self.stats.record_wall(self._clock() - fl.t0, fl.real)
         if self.controller is not None:
-            self.controller.observe(fl.conf[:fl.real], fl.k, fl.real,
+            self.controller.observe(fl.conf[:fl.real], escalations, fl.real,
                                     fl.remote_conf[:fl.real],
-                                    cost=window_cost)
+                                    cost=window_cost,
+                                    policy_blocked=fl.blocked)
         return fl.result
 
     # ------------------------------------------------------------------

@@ -26,21 +26,38 @@ escalated rows return as their remote futures resolve (out of submission
 order when thresholds are static). ``self.responses`` is the reorder-free
 response map — responses are keyed by uid at emission, so no reordering
 buffer ever exists — and every ``Response`` carries its measured
-``latency_s`` (window dispatch -> hand-back, i.e. pipeline residency).
+``latency_s`` (enqueue -> hand-back, consistently for every path).
 Billing and controller state stay bitwise-identical to FIFO because the
 engine commits accounting in submission order either way (with a
 response cache, repeats across concurrently in-flight windows may gain
 extra $0 cache hits vs FIFO — see ``CascadeEngine.complete_ready``).
+
+Per-request policy + window packing (DESIGN.md §8): every ``Request``
+may carry a ``RequestPolicy`` (deadline SLA, cost cap, routing hint,
+escalation override); the scheduler forwards policies and enqueue stamps
+to the engine, and each ``Response`` reports ``disposition`` /
+``backend`` / ``cost`` — how the request was actually served and what it
+was billed. With ``packing="policy"`` the scheduler classifies each
+request at submit time — can it possibly go remote (policy feasibility
+against the router's price/latency estimates), and is it *likely* to
+(the calibration-table escalation ``prior``)? — and packs HOT
+(likely-escalating) and COLD (trusted-local / policy-pinned) rows into
+separate windows, draining cold windows first: trusted-local rows never
+share a window with a remote round trip, and deadline-pinned rows don't
+queue behind one. Windows are never mixed (the tail of each class is
+padded instead); ``packing_stats`` reports the realised purity.
 """
 
 from __future__ import annotations
 
-import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable
 
 import numpy as np
+
+from repro.serving.policy import (CACHED, LOCAL, REJECTED, REMOTE,
+                                  RequestPolicy, ServeConfig)
 
 COMPLETION_MODES = ("fifo", "streaming")
 
@@ -58,6 +75,8 @@ class Request:
     uid: int
     local_input: np.ndarray
     remote_input: np.ndarray
+    policy: RequestPolicy | None = None   # per-request contract (§8)
+    t_enq: float = 0.0                    # stamped at submit()
 
 
 @dataclass
@@ -67,41 +86,138 @@ class Response:
     source: str               # "local" | "remote" | "fallback"
     local_conf: float
     remote_conf: float
-    latency_s: float = 0.0    # measured: window dispatch -> hand-back
+    latency_s: float = 0.0    # measured: enqueue -> hand-back
+    disposition: str = LOCAL  # how the row was served (DESIGN.md §8)
+    backend: str | None = None  # backend billed/attributed (None = local)
+    cost: float = 0.0         # realised $ billed for this request
+    # enqueue -> window dispatch: the load-dependent share of latency_s.
+    # latency_s - queue_s is the SERVICE latency (dispatch -> hand-back),
+    # the basis of the streaming trusted-local-vs-FIFO comparison
+    queue_s: float = 0.0
 
 
 class _Window:
     """Scheduler-side bookkeeping for one in-flight microbatch."""
 
-    __slots__ = ("chunk", "fl", "t0", "local_emitted")
+    __slots__ = ("chunk", "fl", "t_disp", "emitted", "host_emitted")
 
-    def __init__(self, chunk, fl, t0):
+    def __init__(self, chunk, fl, t_disp):
         self.chunk = chunk
         self.fl = fl
-        self.t0 = t0
-        self.local_emitted = False
+        self.t_disp = t_disp            # window dispatch stamp (queue_s)
+        self.emitted: set[int] = set()  # rows already handed back
+        self.host_emitted = False       # host-half emission pass done
 
 
 class MicrobatchScheduler:
     def __init__(self, engine, fallback: Callable[[Request], int] | None = None,
-                 pipeline_depth: int = 1, completion_mode: str = "fifo"):
+                 pipeline_depth: int = 1, completion_mode: str = "fifo",
+                 packing: str = "none",
+                 prior: Callable[[Request], float] | None = None,
+                 _from_config: bool = False):
+        if not _from_config:
+            from repro.serving.engine import _warn_legacy_ctor
+            _warn_legacy_ctor("MicrobatchScheduler")
         if completion_mode not in COMPLETION_MODES:
             raise ValueError(f"unknown completion_mode {completion_mode!r};"
                              f" choose from {COMPLETION_MODES}")
+        if packing not in ("none", "policy"):
+            raise ValueError(f"unknown packing {packing!r}")
+        if packing != "none" and engine.transport is None:
+            raise ValueError("window packing needs the runtime path")
         self.engine = engine
         self.fallback = fallback
         self.pipeline_depth = max(1, pipeline_depth)
         self.completion_mode = completion_mode
-        self.queue: deque[Request] = deque()
+        if completion_mode == "streaming":
+            # we consume fl.early (cache hits handed back at gate-clear);
+            # FIFO consumers leave it off and skip the extra host pass
+            engine.early_handback = True
+        self.packing = packing
+        # P(escalate | request): the calibration-table prior driving the
+        # HOT/COLD split (repro.runtime.fit_escalation_prior). None =
+        # classify by policy feasibility alone (DESIGN.md §8)
+        self.prior = prior
+        self.prior_threshold = 0.5
+        self.queue: deque[Request] = deque()      # HOT / default queue
+        self.cold: deque[Request] = deque()       # trusted-local-bound
         self.responses: dict[int, Response] = {}
         self.fallbacks = 0
+        # window purity telemetry (packing="policy" only): windows are
+        # pure by construction; `mixed` staying 0 is the invariant the
+        # serving bench gates (DESIGN.md §8)
+        self.packing_stats = {"windows": 0, "cold": 0, "hot": 0, "mixed": 0}
         # time from flush start to the first response handed back (the
         # streaming mode's headline telemetry; tracked for FIFO too)
         self.first_response_s: float | None = None
         self._flush_t0: float = 0.0
+        self._clock = engine._clock
 
+    @classmethod
+    def from_config(cls, engine, config: ServeConfig, *,
+                    fallback: Callable[[Request], int] | None = None,
+                    prior: Callable[[Request], float] | None = None
+                    ) -> "MicrobatchScheduler":
+        """Build the scheduler from the one ``ServeConfig`` facade
+        (DESIGN.md §8) — the supported construction path."""
+        return cls(engine, fallback=fallback,
+                   pipeline_depth=config.pipeline_depth,
+                   completion_mode=config.completion_mode,
+                   packing=config.packing, prior=prior, _from_config=True)
+
+    # -- admission ------------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        if req.t_enq == 0.0:
+            req.t_enq = self._clock()   # the deadline/latency anchor
+        if self.packing == "policy":
+            # the label sticks to the REQUEST so window purity is
+            # measured from the rows actually dispatched together, not
+            # from which queue a chunk was drawn from (a cross-queue
+            # mixing bug must show up as `mixed`, not be defined away)
+            req._pack_class = self._classify(req)
+            (self.cold if req._pack_class == "cold"
+             else self.queue).append(req)
+        else:
+            self.queue.append(req)
+
+    def _can_escalate(self, pol: RequestPolicy, t_enq: float) -> bool:
+        """Submit-time feasibility mirror of the engine's policy pass:
+        could this request possibly be served remotely? (The engine
+        re-checks authoritatively at the window's host half.)"""
+        if pol.escalation == "never":
+            return False
+        router = self.engine.router
+        default_cost = self.engine.cost.remote_cost_per_request
+        if pol.cost_cap is not None:
+            mc = router.min_available_cost(default_cost)
+            if mc is None or mc > pol.cost_cap + 1e-12:
+                return False
+        if pol.deadline_s is not None:
+            est = router.min_latency_estimate(max_cost=pol.cost_cap,
+                                              default_cost=default_cost)
+            remaining = pol.deadline_s - (self._clock() - t_enq)
+            if est is None or est > remaining:
+                return False
+        return True
+
+    def _classify(self, req: Request) -> str:
+        """HOT (may ride a remote round trip) vs COLD (stays local):
+        policy feasibility first, then the escalation-likelihood prior."""
+        pol = (req.policy if req.policy is not None
+               else self.engine.default_policy)
+        if pol is not None and not pol.is_default:
+            if not self._can_escalate(pol, req.t_enq):
+                return "cold"
+            if pol.escalation == "always":
+                return "hot"
+        if self.prior is not None:
+            return ("hot" if self.prior(req) >= self.prior_threshold
+                    else "cold")
+        return "hot"
+
+    # -- chunking -------------------------------------------------------
+    def _qsize(self) -> int:
+        return len(self.queue) + len(self.cold)
 
     def _pad(self, reqs: list[Request]) -> list[Request]:
         b = self.engine.batch_size
@@ -109,8 +225,16 @@ class MicrobatchScheduler:
 
     def _next_chunk(self) -> tuple[list[Request], dict[str, Any]]:
         b = self.engine.batch_size
-        chunk = [self.queue.popleft()
-                 for _ in range(min(b, len(self.queue)))]
+        # cold windows drain first (deadline-pinned / trusted-local rows
+        # must not queue behind remote round trips) and classes never
+        # share a window — short tails are padded, not mixed (§8)
+        src = self.cold if self.cold else self.queue
+        chunk = [src.popleft() for _ in range(min(b, len(src)))]
+        if self.packing == "policy":
+            classes = {getattr(r, "_pack_class", "hot") for r in chunk}
+            self.packing_stats["windows"] += 1
+            self.packing_stats[classes.pop() if len(classes) == 1
+                               else "mixed"] += 1
         padded = self._pad(chunk)
         batch = {
             "local": _stack([r.local_input for r in padded]),
@@ -118,17 +242,30 @@ class MicrobatchScheduler:
         }
         return chunk, batch
 
+    @staticmethod
+    def _serve_args(chunk: list[Request]) -> dict[str, Any]:
+        """policies/t_enq kwargs for the engine (omitted when no row in
+        the chunk carries a policy — the unpolicied fast path)."""
+        if all(r.policy is None for r in chunk):
+            return {"t_enq": [r.t_enq for r in chunk]}
+        return {"policies": [r.policy for r in chunk],
+                "t_enq": [r.t_enq for r in chunk]}
+
+    # -- hand-back ------------------------------------------------------
     def _record(self, resp: Response, out: list[Response]) -> None:
         """Reorder-free hand-back: key by uid, never buffer for order."""
         if self.first_response_s is None:
-            self.first_response_s = time.perf_counter() - self._flush_t0
+            self.first_response_s = self._clock() - self._flush_t0
         self.responses[resp.uid] = resp
         out.append(resp)
 
     def _route(self, chunk: list[Request], res: dict,
-               t0: float) -> list[Response]:
+               t_disp: float) -> list[Response]:
         out: list[Response] = []
-        lat = time.perf_counter() - t0
+        now = self._clock()
+        dispo = res.get("disposition")
+        backend = res.get("backend")
+        cost = res.get("cost")
         for i, req in enumerate(chunk):
             escalated = bool(res["escalated"][i])
             accepted = bool(res["accepted"][i])
@@ -143,9 +280,21 @@ class MicrobatchScheduler:
                 self.fallbacks += 1
                 pred = (self.fallback(req) if self.fallback
                         else -1)  # "raise Exception" analogue
+            if dispo is not None:
+                d, b, c = dispo[i], backend[i], float(cost[i])
+            else:
+                # fused path: derive attribution from the routing masks
+                d = LOCAL if not escalated else (REMOTE if accepted
+                                                 else REJECTED)
+                b = None
+                c = (self.engine.cost.remote_cost_per_request
+                     if escalated else 0.0)
             resp = Response(req.uid, pred, src,
                             float(res["local_conf"][i]),
-                            float(res["remote_conf"][i]), latency_s=lat)
+                            float(res["remote_conf"][i]),
+                            latency_s=now - req.t_enq,
+                            disposition=d, backend=b, cost=c,
+                            queue_s=t_disp - req.t_enq)
             self._record(resp, out)
         return out
 
@@ -153,18 +302,19 @@ class MicrobatchScheduler:
         depth = (self.pipeline_depth if pipeline_depth is None
                  else max(1, pipeline_depth))
         self.first_response_s = None
-        self._flush_t0 = time.perf_counter()
+        self._flush_t0 = self._clock()
         if self.engine.transport is not None:
             if self.completion_mode == "streaming":
                 return self._flush_streaming(depth)
             if depth > 1:
                 return self._flush_pipelined(depth)
         out: list[Response] = []
-        while self.queue:
+        while self._qsize():
             chunk, batch = self._next_chunk()
-            t0 = time.perf_counter()
-            res = self.engine.serve(batch, real_rows=len(chunk))
-            out.extend(self._route(chunk, res, t0))
+            t_disp = self._clock()
+            res = self.engine.serve(batch, real_rows=len(chunk),
+                                    **self._serve_args(chunk))
+            out.extend(self._route(chunk, res, t_disp))
         return out
 
     def _check_exclusive_engine(self) -> None:
@@ -182,20 +332,21 @@ class MicrobatchScheduler:
         self._check_exclusive_engine()
         out: list[Response] = []
         pending: deque[tuple[list[Request], float]] = deque()
-        while self.queue or pending:
-            while self.queue and len(pending) < depth:
+        while self._qsize() or pending:
+            while self._qsize() and len(pending) < depth:
                 chunk, batch = self._next_chunk()
-                t0 = time.perf_counter()
-                self.engine.begin_serve(batch, real_rows=len(chunk))
-                pending.append((chunk, t0))
+                t_disp = self._clock()
+                self.engine.begin_serve(batch, real_rows=len(chunk),
+                                        **self._serve_args(chunk))
+                pending.append((chunk, t_disp))
             # about to block on the oldest window: unpark the double-
             # buffered newest one first, so its remote submission (and in
             # streaming mode its trusted-local rows) never waits out a
             # full drain
             self.engine.flush_dispatch()
             res = self.engine.complete_next()
-            chunk, t0 = pending.popleft()
-            out.extend(self._route(chunk, res, t0))
+            chunk, t_disp = pending.popleft()
+            out.extend(self._route(chunk, res, t_disp))
         return out
 
     # -- streaming completion mode (DESIGN.md §7) ----------------------
@@ -216,21 +367,22 @@ class MicrobatchScheduler:
 
         def emit_ready_locals():
             for w in windows.values():
-                if not w.local_emitted and w.fl.host_done:
+                if not w.host_emitted and w.fl.host_done:
                     self._emit_locals(w, out)
 
         def emit_window(seq, res):
             w = windows.pop(seq)
-            if not w.local_emitted:     # host half ran at the finalize
+            if not w.host_emitted:      # host half ran at the finalize
                 self._emit_locals(w, out)
             self._emit_escalated(w, res, out)
 
-        while self.queue or windows:
-            while self.queue and self.engine.inflight < depth:
+        while self._qsize() or windows:
+            while self._qsize() and self.engine.inflight < depth:
                 chunk, batch = self._next_chunk()
-                t0 = time.perf_counter()
-                fl = self.engine.begin_serve(batch, real_rows=len(chunk))
-                windows[fl.seq] = _Window(chunk, fl, t0)
+                t_disp = self._clock()
+                fl = self.engine.begin_serve(batch, real_rows=len(chunk),
+                                             **self._serve_args(chunk))
+                windows[fl.seq] = _Window(chunk, fl, t_disp)
                 emit_ready_locals()     # previous window's host half ran
                 if not fifo_drain:
                     for seq, res in self.engine.complete_ready():
@@ -251,35 +403,77 @@ class MicrobatchScheduler:
         return out
 
     def _emit_locals(self, w: _Window, out: list[Response]) -> None:
-        """Hand back the window's locally-trusted rows (gate cleared, no
-        remote involved): available as soon as the host half has run."""
+        """Hand back every row decidable at the window's host half: the
+        locally-trusted rows (gate cleared), policy/deadline downgrades
+        (served locally by construction — DESIGN.md §8) and pre-decided
+        cache hits (``fl.early``; no remote round trip to wait for — the
+        §8 latency fix: their hand-back no longer includes the window
+        drain)."""
         fl = w.fl
-        lat = time.perf_counter() - w.t0
+        now = self._clock()
         esc = {int(j) for j in fl.idx} if fl.k else set()
         for i, req in enumerate(w.chunk):
-            if i in esc:
+            if i in esc or i in w.emitted:
                 continue
             self._record(Response(req.uid, int(fl.local_pred[i]), "local",
                                   float(fl.conf[i]), float("inf"),
-                                  latency_s=lat), out)
-        w.local_emitted = True
+                                  latency_s=now - req.t_enq,
+                                  disposition=fl.downgraded.get(i, LOCAL),
+                                  queue_s=w.t_disp - req.t_enq),
+                         out)
+            w.emitted.add(i)
+        for e in fl.early:
+            i = e["row"]
+            if i in w.emitted or i >= len(w.chunk):
+                continue
+            req = w.chunk[i]
+            if e["accepted"]:
+                resp = Response(req.uid, e["prediction"], "remote",
+                                float(fl.conf[i]), e["remote_conf"],
+                                latency_s=now - req.t_enq,
+                                disposition=CACHED, backend=e["backend"],
+                                cost=e["cost"],
+                                queue_s=w.t_disp - req.t_enq)
+            else:
+                self.fallbacks += 1
+                pred = self.fallback(req) if self.fallback else -1
+                resp = Response(req.uid, pred, "fallback",
+                                float(fl.conf[i]), e["remote_conf"],
+                                latency_s=now - req.t_enq,
+                                disposition=REJECTED, backend=e["backend"],
+                                cost=e["cost"],
+                                queue_s=w.t_disp - req.t_enq)
+            self._record(resp, out)
+            w.emitted.add(i)
+        w.host_emitted = True
 
     def _emit_escalated(self, w: _Window, res: dict,
                         out: list[Response]) -> None:
         """Hand back the window's escalated rows once finalized."""
         fl = w.fl
-        lat = time.perf_counter() - w.t0
+        now = self._clock()
         for j in fl.idx:
             i = int(j)
+            if i in w.emitted:
+                continue                # handed back at the host half
             req = w.chunk[i]            # idx only covers genuine rows
+            d, b, c = (res["disposition"][i], res["backend"][i],
+                       float(res["cost"][i]))
             if bool(res["accepted"][i]):
                 resp = Response(req.uid, int(res["prediction"][i]),
                                 "remote", float(res["local_conf"][i]),
-                                float(res["remote_conf"][i]), latency_s=lat)
+                                float(res["remote_conf"][i]),
+                                latency_s=now - req.t_enq,
+                                disposition=d, backend=b, cost=c,
+                                queue_s=w.t_disp - req.t_enq)
             else:
                 self.fallbacks += 1
                 pred = self.fallback(req) if self.fallback else -1
                 resp = Response(req.uid, pred, "fallback",
                                 float(res["local_conf"][i]),
-                                float(res["remote_conf"][i]), latency_s=lat)
+                                float(res["remote_conf"][i]),
+                                latency_s=now - req.t_enq,
+                                disposition=d, backend=b, cost=c,
+                                queue_s=w.t_disp - req.t_enq)
             self._record(resp, out)
+            w.emitted.add(i)

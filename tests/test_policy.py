@@ -1,0 +1,575 @@
+"""Per-request policy API + ServeConfig facade (DESIGN.md §8): policy
+edge cases (deadline shorter than the local forward, escalation="never"
+under an untrusted gate, cost_cap=0 forcing local-only, mixed-policy
+windows preserving bitwise billing identity), deadline-vs-EMA downgrades,
+constraint-aware + weighted routing, policy-aware window packing, the
+calibration-table escalation prior, Response billing attribution, and
+the one-PR constructor deprecation shims."""
+
+from __future__ import annotations
+
+import threading
+import time
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteBackend, RemoteResponseCache, RemoteRouter,
+                           RouteConstraint, TransportConfig,
+                           fit_escalation_prior)
+from repro.serving import RemoteSpec, RequestPolicy, ServeConfig
+from repro.serving.engine import (BILLING_FIELDS, CascadeEngine,
+                                  _reset_legacy_ctor_warnings)
+from repro.serving.policy import (CACHED, DEADLINE_LOCAL, LOCAL,
+                                  POLICY_LOCAL, REJECTED, REMOTE)
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def quiet_tconf(**kw):
+    base = dict(retry_backoff_s=0.0, max_retries=0, breaker_failures=10**6,
+                timeout_s=60.0)
+    base.update(kw)
+    return TransportConfig(**base)
+
+
+def mk_config(**kw):
+    base = dict(batch_size=8, remote_fraction_budget=0.5, t_remote=0.0,
+                pipeline_depth=2, cache_size=0, transport=quiet_tconf())
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+def build(remote=remote_apply, *, router=None, cache=None, prior=None,
+          controller=None, **cfg_kw):
+    cfg = mk_config(**cfg_kw)
+    kw = {}
+    if router is not None:
+        kw["transport"] = router
+        remote = None
+    if cache is not None:
+        kw["cache"] = cache
+    if controller is not None:
+        kw["controller"] = controller
+    engine, sched = cfg.build(local_apply, remote, fallback=lambda r: -7,
+                              prior=prior, **kw)
+    return sched, engine
+
+
+def serve_all(sched, xs, policies=None):
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row,
+                             policy=policies[i] if policies else None))
+    return sched.flush()
+
+
+def by_uid(responses):
+    return {r.uid: (r.prediction, r.source) for r in responses}
+
+
+def assert_same_accounting(e_a, e_b):
+    for f in BILLING_FIELDS:
+        assert getattr(e_a.stats, f) == getattr(e_b.stats, f), f
+    assert e_a.stats.per_backend == e_b.stats.per_backend
+
+
+# ------------------------------------------------- RequestPolicy object
+
+def test_request_policy_validation():
+    with pytest.raises(ValueError):
+        RequestPolicy(escalation="sometimes")
+    with pytest.raises(ValueError):
+        RequestPolicy(on_miss="retry")
+    with pytest.raises(ValueError):
+        RequestPolicy(deadline_s=-1.0)
+    with pytest.raises(ValueError):
+        RequestPolicy(cost_cap=-0.01)
+    assert RequestPolicy().is_default
+    assert not RequestPolicy(deadline_s=1.0).is_default
+    assert not RequestPolicy(escalation="never").is_default
+
+
+def test_serve_config_overrides():
+    cfg = ServeConfig().with_overrides([
+        "pipeline_depth=8", "completion_mode=streaming",
+        "transport.timeout_s=1.5", "default_policy.deadline_s=0.5",
+        "remotes=cheap:0.002:0.4;fast:0.008:0.1",
+        "route_policy=weighted", "cost_budget=none", "adaptive=true",
+    ])
+    assert cfg.pipeline_depth == 8
+    assert cfg.completion_mode == "streaming"
+    assert cfg.transport.timeout_s == 1.5
+    assert cfg.default_policy.deadline_s == 0.5
+    assert cfg.remotes == (RemoteSpec("cheap", 0.002, 0.4),
+                           RemoteSpec("fast", 0.008, 0.1))
+    assert cfg.route_policy == "weighted" and cfg.adaptive
+    assert ServeConfig().with_overrides(["remotes=none"]).remotes == ()
+    with pytest.raises(ValueError):
+        ServeConfig(fused=True, remotes=(RemoteSpec("r"),))
+    with pytest.raises(ValueError):
+        ServeConfig().with_overrides(["no_such_field=1"])
+    # non-scalar fields demand nested overrides — a raw string must be
+    # rejected at parse time, not stored to blow up at build time
+    with pytest.raises(ValueError):
+        ServeConfig().with_overrides(["default_policy=fast"])
+    with pytest.raises(ValueError):
+        ServeConfig().with_overrides(["transport=x"])
+    with pytest.raises(ValueError):
+        ServeConfig().with_overrides(["cost=0.5"])
+    with pytest.raises(ValueError):
+        ServeConfig().with_overrides(["badpair"])
+    with pytest.raises(ValueError):
+        ServeConfig(route_policy="psychic")
+    with pytest.raises(ValueError):
+        ServeConfig(fused=True, pipeline_depth=4)
+    with pytest.raises(ValueError):
+        ServeConfig(fused=True,
+                    default_policy=RequestPolicy(deadline_s=1.0))
+
+
+def test_legacy_ctors_warn_once_and_config_path_is_silent():
+    _reset_legacy_ctor_warnings()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        eng = CascadeEngine(local_apply, remote_apply, batch_size=8,
+                            remote_fraction_budget=0.5, t_remote=0.0)
+        CascadeEngine(local_apply, remote_apply, batch_size=8,
+                      remote_fraction_budget=0.5, t_remote=0.0)
+        MicrobatchScheduler(eng)
+        MicrobatchScheduler(eng)
+    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
+    # once per class, not once per construction
+    assert len(dep) == 2
+    assert "ServeConfig" in str(dep[0].message)
+    _reset_legacy_ctor_warnings()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        sched, engine = build()       # the ServeConfig path never warns
+        engine.close()
+
+
+# ----------------------------------------- policy edge-case enforcement
+
+def test_escalation_never_with_untrusted_gate_stays_local():
+    rng = np.random.default_rng(0)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)      # every gate untrusted
+    sched, engine = build(remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, [RequestPolicy(escalation="never")] * 8)
+    assert {r.source for r in resp} == {"local"}
+    assert {r.disposition for r in resp} == {POLICY_LOCAL}
+    assert engine.stats.escalations == 0
+    assert engine.stats.total_cost == 0.0
+    assert all(r.cost == 0.0 and r.backend is None for r in resp)
+    engine.close()
+
+
+def test_escalation_always_with_trusted_gate_escalates_and_bills():
+    rng = np.random.default_rng(1)
+    xs, _ = make_stream(rng, 8, hard_frac=0.0)      # every gate trusted
+    sched, engine = build(remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, [RequestPolicy(escalation="always")] * 8)
+    assert {r.source for r in resp} == {"remote"}
+    assert {r.disposition for r in resp} == {REMOTE}
+    assert engine.stats.remote_calls == 8
+    assert all(r.backend == "remote" and r.cost > 0 for r in resp)
+    np.testing.assert_allclose(sum(r.cost for r in resp),
+                               engine.stats.total_cost)
+    engine.close()
+
+
+def test_cost_cap_zero_forces_local_only():
+    rng = np.random.default_rng(2)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    sched, engine = build(remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, [RequestPolicy(cost_cap=0.0)] * 8)
+    assert {r.source for r in resp} == {"local"}
+    assert {r.disposition for r in resp} == {POLICY_LOCAL}
+    assert engine.stats.total_cost == 0.0 and engine.stats.remote_calls == 0
+    engine.close()
+
+
+def test_deadline_shorter_than_local_forward_still_served():
+    """A deadline no serving mode could meet must not drop or wedge the
+    request: it downgrades to the local prediction (DEADLINE_LOCAL), or
+    the REJECTED path with on_miss="reject"."""
+    rng = np.random.default_rng(3)
+    xs, _ = make_stream(rng, 16, hard_frac=1.0)
+    pol = ([RequestPolicy(deadline_s=1e-9)] * 8
+           + [RequestPolicy(deadline_s=1e-9, on_miss="reject")] * 8)
+    sched, engine = build(remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, pol)
+    assert sorted(r.uid for r in resp) == list(range(16))   # zero drops
+    down = [r for r in resp if r.uid < 8]
+    rej = [r for r in resp if r.uid >= 8]
+    assert {r.disposition for r in down} == {DEADLINE_LOCAL}
+    assert {r.source for r in down} == {"local"}
+    assert {r.disposition for r in rej} == {REJECTED}
+    assert {r.source for r in rej} == {"fallback"}
+    assert all(r.prediction == -7 for r in rej)     # scheduler fallback
+    assert engine.stats.total_cost == 0.0
+    # policy-rejected rows count as rejected, never as escalations: the
+    # billing invariant stays exact
+    st = engine.stats
+    assert st.escalations == st.remote_calls + st.cache_hits \
+        + st.transport_failures
+    assert st.rejected == 8
+    engine.close()
+
+
+def test_deadline_downgrade_uses_measured_latency_ema():
+    """A backend with a fast modelled prior but slow MEASURED latency
+    must be treated as slow: the EMA, not the spec sheet, decides."""
+    rng = np.random.default_rng(4)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    backend = RemoteBackend("only", remote_apply, quiet_tconf(),
+                            latency_s=0.001)        # optimistic prior
+    router = RemoteRouter([backend])
+    sched, engine = build(router=router, remote_fraction_budget=1.0)
+    pol = [RequestPolicy(deadline_s=0.2)] * 8
+    for _ in range(8):                  # measured reality: 0.5 s windows
+        backend.stats.record_latency(0.5)
+    resp = serve_all(sched, xs, pol)
+    assert {r.disposition for r in resp} == {DEADLINE_LOCAL}
+    assert engine.stats.remote_calls == 0
+    engine.close()
+
+
+def test_feasible_deadline_escalates():
+    rng = np.random.default_rng(5)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    sched, engine = build(remote_fraction_budget=1.0,
+                          remotes=(RemoteSpec("remote", None, 0.0),))
+    resp = serve_all(sched, xs, [RequestPolicy(deadline_s=60.0)] * 8)
+    assert {r.disposition for r in resp} == {REMOTE}
+    assert engine.stats.remote_calls == 8
+    engine.close()
+
+
+# ------------------------------------------------ policy-aware routing
+
+def test_routing_hint_prefers_named_backend():
+    rng = np.random.default_rng(6)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    router = RemoteRouter([
+        RemoteBackend("a", remote_apply, quiet_tconf(),
+                      cost_per_request=0.001),
+        RemoteBackend("b", remote_apply, quiet_tconf(),
+                      cost_per_request=0.009),
+    ])
+    sched, engine = build(router=router, remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, [RequestPolicy(routing_hint="b")] * 8)
+    assert {r.backend for r in resp} == {"b"}
+    assert engine.stats.per_backend["b"].remote_calls == 8
+    np.testing.assert_allclose(engine.stats.total_cost, 8 * 0.009)
+    engine.close()
+
+
+def test_cost_cap_steers_routing_to_affordable_backend():
+    rng = np.random.default_rng(7)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    router = RemoteRouter([          # preferred order: expensive first
+        RemoteBackend("fast", remote_apply, quiet_tconf(),
+                      cost_per_request=0.009),
+        RemoteBackend("cheap", remote_apply, quiet_tconf(),
+                      cost_per_request=0.001),
+    ])
+    sched, engine = build(router=router, remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, [RequestPolicy(cost_cap=0.002)] * 8)
+    assert {r.backend for r in resp} == {"cheap"}
+    assert all(r.cost <= 0.002 for r in resp)
+    assert "fast" not in engine.stats.per_backend
+    engine.close()
+
+
+def test_route_constraint_admits():
+    b = RemoteBackend("x", remote_apply, quiet_tconf(),
+                      cost_per_request=0.005, latency_s=0.3)
+    assert RouteConstraint().admits(b)
+    assert RouteConstraint(max_cost=0.005).admits(b)
+    assert not RouteConstraint(max_cost=0.004).admits(b)
+    assert RouteConstraint(max_latency_s=0.3).admits(b)
+    assert not RouteConstraint(max_latency_s=0.2).admits(b)
+    unpriced = RemoteBackend("y", remote_apply, quiet_tconf())
+    assert RouteConstraint(max_cost=0.001).admits(unpriced)
+    assert not RouteConstraint(max_cost=0.001,
+                               default_cost=0.0048).admits(unpriced)
+
+
+def test_weighted_policy_spreads_by_inflight():
+    gate = threading.Event()
+
+    def blocking_remote(x):
+        gate.wait(5.0)
+        return remote_apply(x)
+
+    b1 = RemoteBackend("b1", blocking_remote, quiet_tconf(),
+                       cost_per_request=0.004)
+    b2 = RemoteBackend("b2", blocking_remote, quiet_tconf(),
+                       cost_per_request=0.004)
+    router = RemoteRouter([b1, b2], policy="weighted")
+    first = router.pick()
+    assert first is b1                  # tie -> registration order
+    fut = b1.submit(np.zeros((2, 4), np.float32))
+    assert b1.inflight == 1
+    assert router.pick() is b2          # least-loaded of equal price
+    gate.set()
+    fut.result()
+    assert b1.inflight == 0             # released on completion
+    assert router.pick() is b1
+    # load only breaks ties WITHIN a price class: a busy cheap backend
+    # still beats an idle pricier one
+    b3 = RemoteBackend("b3", blocking_remote, quiet_tconf(),
+                       cost_per_request=0.009)
+    router2 = RemoteRouter([b1, b3], policy="weighted")
+    gate.clear()
+    fut = b1.submit(np.zeros((2, 4), np.float32))
+    assert router2.pick() is b1
+    gate.set()
+    fut.result()
+    b1.shutdown()
+    b2.shutdown()
+    b3.shutdown()
+    assert "weighted" not in ("primary-failover", "cheapest-available",
+                              "latency-ema")        # genuinely new policy
+
+
+# --------------------------------------- bitwise identity + accounting
+
+def test_mixed_policy_window_keeps_bitwise_billing_identity():
+    """A window mixing unconstraining policies with unpolicied rows must
+    answer and bill exactly like the fully-unpolicied path."""
+    rng = np.random.default_rng(8)
+    xs, _ = make_stream(rng, 48)
+    relaxed = RequestPolicy(deadline_s=1e6)         # policied, no bite
+    pols = [relaxed if i % 2 == 0 else None for i in range(48)]
+
+    s_pol, e_pol = build()
+    s_raw, e_raw = build()
+    r_pol = serve_all(s_pol, xs, pols)
+    r_raw = serve_all(s_raw, xs)
+    assert by_uid(r_pol) == by_uid(r_raw)
+    assert_same_accounting(e_pol, e_raw)
+    e_pol.close()
+    e_raw.close()
+
+
+def test_policied_streaming_matches_fifo_accounting():
+    rng = np.random.default_rng(9)
+    xs, _ = make_stream(rng, 64)
+    pols = [RequestPolicy(deadline_s=1e-9) if i % 3 == 0
+            else RequestPolicy(escalation="always") if i % 3 == 1
+            else None for i in range(64)]
+
+    def run(mode):
+        sched, engine = build(completion_mode=mode, pipeline_depth=4)
+        resp = serve_all(sched, xs, list(pols))
+        engine.close()
+        return resp, engine
+
+    r_f, e_f = run("fifo")
+    r_s, e_s = run("streaming")
+    assert by_uid(r_f) == by_uid(r_s)
+    assert_same_accounting(e_f, e_s)
+
+
+def test_response_attribution_cache_hit_and_costs_sum():
+    rng = np.random.default_rng(10)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    cache = RemoteResponseCache(64)
+    sched, engine = build(remote_fraction_budget=1.0, cache=cache)
+    r1 = serve_all(sched, xs)                   # all miss -> billed
+    assert {r.disposition for r in r1} == {REMOTE}
+    for i, row in enumerate(xs):                # identical content -> hits
+        sched.submit(Request(uid=100 + i, local_input=row,
+                             remote_input=row))
+    r2 = sched.flush()
+    assert {r.disposition for r in r2} == {CACHED}
+    assert all(r.cost == 0.0 and r.backend == "remote" for r in r2)
+    total = sum(r.cost for r in r1) + sum(r.cost for r in r2)
+    np.testing.assert_allclose(total, engine.stats.total_cost)
+    engine.close()
+
+
+def test_forced_reject_rows_never_count_as_cache_hits():
+    """A window mixing a genuine cache hit with a policy-REJECTED row:
+    the forced row must not inflate per-backend cache-hit attribution
+    (Σ per-backend hits == aggregate cache_hits)."""
+    rng = np.random.default_rng(16)
+    xs, _ = make_stream(rng, 4, hard_frac=1.0)
+    cache = RemoteResponseCache(64)
+    sched, engine = build(remote_fraction_budget=1.0, cache=cache,
+                          batch_size=8)
+    serve_all(sched, xs)                            # fill the cache
+    fresh, _ = make_stream(rng, 4, hard_frac=1.0)
+    mixed = np.concatenate([xs, fresh])             # 4 hits + 4 forced
+    pols = [None] * 4 + [RequestPolicy(cost_cap=0.0,
+                                       on_miss="reject")] * 4
+    for i, row in enumerate(mixed):
+        sched.submit(Request(uid=100 + i, local_input=row,
+                             remote_input=row, policy=pols[i]))
+    resp = sched.flush()
+    st = engine.stats
+    assert st.cache_hits == 4
+    assert sum(u.cache_hits for u in st.per_backend.values()) == 4
+    assert st.escalations == st.remote_calls + st.cache_hits \
+        + st.transport_failures
+    assert {r.disposition for r in resp if r.uid >= 104} == {REJECTED}
+    engine.close()
+
+
+def test_window_constraint_recomputes_remaining_budget():
+    """The routing constraint's latency ceiling is the remaining
+    deadline budget AT THE ROUTING DECISION, not a snapshot from the
+    host half: after pipeline residency (e.g. an (unrouted) replay at
+    drain time) the burnt-down — possibly expired — budget applies."""
+    from repro.serving.engine import _InFlight
+
+    t = {"now": 0.0}
+    cfg = mk_config(remote_fraction_budget=1.0)
+    engine = cfg.build_engine(local_apply, remote_apply,
+                              clock=lambda: t["now"])
+    fl = _InFlight(seq=1, t0=0.0, b=8, real=8, asynchronous=True,
+                   capacity=8)
+    assert engine._window_constraint(fl) is None
+    fl.constraint = RouteConstraint(max_cost=0.01, default_cost=0.004)
+    assert engine._window_constraint(fl).max_latency_s is None
+    fl.abs_deadline = 5.0                   # enqueue-anchored absolute
+    t["now"] = 1.0
+    assert engine._window_constraint(fl).max_latency_s == 4.0
+    t["now"] = 10.0                         # expired mid-pipeline
+    c = engine._window_constraint(fl)
+    assert c.max_latency_s == -5.0
+    fast = RemoteBackend("fast", remote_apply, quiet_tconf(),
+                         latency_s=0.0)
+    assert not c.admits(fast)               # nobody can serve an expired SLA
+    engine.close()
+
+
+def test_fused_path_rejects_policies():
+    cfg = ServeConfig(batch_size=8, remote_fraction_budget=0.5,
+                      t_remote=0.0, fused=True)
+    engine, sched = cfg.build(local_apply, lambda x: 5.0 * jnp.asarray(x))
+    rng = np.random.default_rng(11)
+    xs, _ = make_stream(rng, 8)
+    with pytest.raises(RuntimeError):
+        serve_all(sched, xs, [RequestPolicy(deadline_s=1.0)] * 8)
+    # unpolicied fused serving still works
+    resp = serve_all(sched, xs)
+    assert len(resp) == 8 and {r.disposition for r in resp} <= {
+        LOCAL, REMOTE, REJECTED}
+
+
+# ------------------------------------------------ policy window packing
+
+def test_packing_separates_hot_and_cold_and_drains_cold_first():
+    rng = np.random.default_rng(12)
+    xs, _ = make_stream(rng, 32, hard_frac=0.5)
+    margins = np.sort(xs, axis=1)
+    hard = (margins[:, -1] - margins[:, -2]) < 1.0
+    prior = lambda req: float(
+        np.sort(req.local_input)[-1] - np.sort(req.local_input)[-2] < 1.0)
+    sched, engine = build(packing="policy", prior=prior,
+                          pipeline_depth=4)
+    resp = serve_all(sched, xs)
+    assert sorted(r.uid for r in resp) == list(range(32))
+    ps = sched.packing_stats
+    assert ps["mixed"] == 0
+    assert ps["cold"] > 0 and ps["hot"] > 0
+    assert ps["windows"] == ps["cold"] + ps["hot"]
+    # FIFO drain: the first response comes from a COLD window
+    assert not hard[resp[0].uid]
+    engine.close()
+
+
+def test_packing_classifies_policy_pinned_rows_cold():
+    """Rows that can never go remote (tight deadline) must land in cold
+    windows even when the prior calls them likely-escalating."""
+    rng = np.random.default_rng(13)
+    xs, _ = make_stream(rng, 16, hard_frac=1.0)     # all look hot
+    pols = [RequestPolicy(deadline_s=1e-9) if i < 8 else None
+            for i in range(16)]
+    sched, engine = build(packing="policy", prior=lambda req: 1.0,
+                          remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, pols)
+    ps = sched.packing_stats
+    assert ps["cold"] == 1 and ps["hot"] == 1 and ps["mixed"] == 0
+    tight = [r for r in resp if r.uid < 8]
+    assert {r.disposition for r in tight} == {DEADLINE_LOCAL}
+    engine.close()
+
+
+def test_packing_requires_runtime_path():
+    with pytest.raises(ValueError):
+        ServeConfig(fused=True, packing="policy")
+
+
+# -------------------------------------- calibration-table prior + ctl
+
+def test_fit_escalation_prior_matches_empirical_rates():
+    rng = np.random.default_rng(14)
+    scores = rng.uniform(0, 1, 4096)
+    escalated = scores < 0.3            # low proxy score -> escalates
+    prior = fit_escalation_prior(scores, escalated, bins=8)
+    assert prior(0.05) > 0.9
+    assert prior(0.9) < 0.1
+    batch = prior.batch(np.array([0.05, 0.9]))
+    assert batch[0] > 0.9 and batch[1] < 0.1
+    with pytest.raises(ValueError):
+        fit_escalation_prior(np.array([]), np.array([]))
+    # constant proxy degrades to the global rate
+    flat = fit_escalation_prior(np.ones(64), np.arange(64) < 16)
+    np.testing.assert_allclose(flat(1.0), 0.25)
+
+
+def test_controller_policy_blocked_excludes_ineligible_rows():
+    ctl = AdaptiveController(ControllerConfig(target_remote_fraction=0.2,
+                                              window=64))
+    conf = np.linspace(0, 1, 32)
+    # half of every batch is policy-blocked: the realised fraction must
+    # be measured over the eligible 16 rows, not all 32
+    for _ in range(4):
+        ctl.observe(conf, escalated=4, requests=32, policy_blocked=16)
+    # 4 batches x 16 eligible rows = one 64-row control window; the
+    # realised fraction is 16/64 over ELIGIBLE rows (it would read
+    # 16/128 if blocked rows were counted)
+    assert ctl.state.windows == 1
+    np.testing.assert_allclose(ctl.state.ema_fraction, 16 / 64)
+
+
+# -------------------------------------------------- enqueue-based SLA
+
+def test_deadline_anchor_is_enqueue_time():
+    """The deadline budget starts at submit(): a request that sat in the
+    queue long enough has no remaining budget and must downgrade even
+    though the round trip alone would have fit."""
+    rng = np.random.default_rng(15)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    sched, engine = build(remote_fraction_budget=1.0,
+                          remotes=(RemoteSpec("remote", None, 0.05),))
+    pol = [RequestPolicy(deadline_s=0.2)] * 8
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row,
+                             policy=pol[i]))
+    time.sleep(0.3)                     # burn the budget in the queue
+    resp = sched.flush()
+    assert {r.disposition for r in resp} == {DEADLINE_LOCAL}
+    assert all(r.latency_s >= 0.3 for r in resp)    # enqueue -> hand-back
+    engine.close()

@@ -253,6 +253,59 @@ def test_streaming_escalations_hand_back_out_of_window_order():
     engine.close()
 
 
+def test_cache_hit_escalations_hand_back_before_window_drain():
+    """Satellite fix (DESIGN.md §8): a cache-hit escalation needs no
+    remote round trip, so in streaming mode it must hand back at the
+    window's host half — its latency no longer includes the window
+    drain wait behind the co-windowed misses."""
+    rng = np.random.default_rng(20)
+    xs, _ = make_stream(rng, 4, hard_frac=1.0)      # will fill the cache
+    fresh, _ = make_stream(rng, 4, hard_frac=1.0)   # misses, same window
+    delay = {"s": 0.0}
+
+    def remote(x):
+        time.sleep(delay["s"])
+        return remote_apply(x)
+
+    cache = RemoteResponseCache(64)
+    sched, engine = build(remote, batch=8, budget=1.0, cache=cache)
+    serve_all(sched, xs)                    # warm jit + fill the cache
+    delay["s"] = 0.25                       # the misses now ride 250 ms
+    mixed = np.concatenate([xs, fresh])
+    for i, row in enumerate(mixed):
+        sched.submit(Request(uid=100 + i, local_input=row,
+                             remote_input=row))
+    resp = sched.flush()
+    hits = [r for r in resp if r.uid < 104]
+    misses = [r for r in resp if r.uid >= 104]
+    assert {r.disposition for r in hits} == {"CACHED"}
+    assert all(r.cost == 0.0 for r in hits)
+    assert {r.disposition for r in misses} == {"REMOTE"}
+    # the fix: hits cleared the gate and returned while the misses were
+    # still on the wire
+    assert max(r.latency_s for r in hits) < 0.5 * delay["s"]
+    assert min(r.latency_s for r in misses) >= delay["s"]
+    engine.close()
+
+
+def test_latency_measured_from_enqueue_consistently():
+    """``Response.latency_s`` is enqueue -> hand-back in every mode:
+    time a request spends queued before the flush counts."""
+    rng = np.random.default_rng(21)
+    xs, _ = make_stream(rng, 8)
+    for mode in ("fifo", "streaming"):
+        sched, engine = build(mode=mode)
+        for i, row in enumerate(xs):
+            sched.submit(Request(uid=i, local_input=row, remote_input=row))
+        time.sleep(0.05)                # queue wait before the flush
+        resp = sched.flush()
+        assert all(r.latency_s >= 0.05 for r in resp), mode
+        # queue_s isolates the pre-dispatch share; service latency
+        # (latency_s - queue_s) excludes it
+        assert all(0.05 <= r.queue_s <= r.latency_s for r in resp), mode
+        engine.close()
+
+
 # ------------------------------------------------ engine-level streaming
 
 def test_engine_complete_ready_and_stream_drain():
