@@ -114,6 +114,7 @@ def check_serving(gate: Gate, fresh: dict, base: dict) -> None:
     gate.hard(fresh, "billing_identical",
               "serving: serial/pipelined billing identical")
     _check_policy_section(gate, fresh, base)
+    _check_observability_section(gate, fresh, base)
     if ("streaming" in fresh) != ("streaming" in base):
         # a FIFO-mode re-baseline (or a FIFO-mode CI run) must not
         # silently disable every streaming invariant
@@ -176,6 +177,37 @@ def _check_policy_section(gate: Gate, fresh: dict, base: dict) -> None:
              "serving: tight-deadline p95")
 
 
+def _check_observability_section(gate: Gate, fresh: dict,
+                                 base: dict) -> None:
+    """Observability gate (DESIGN.md §9): the traced twin must keep
+    answers/billing identical, reconcile spans and metric counters with
+    the billing stats, and cost at most 3% throughput (the bench's own
+    ``overhead_ok`` bar)."""
+    if ("observability" in fresh) != ("observability" in base):
+        gate.failures.append(
+            "serving: 'observability' section present in "
+            f"{'fresh' if 'observability' in fresh else 'baseline'} only "
+            "— rerun the serving bench (and --update-baselines if "
+            "intentional)")
+        return
+    if "observability" not in base:
+        return
+    gate.hard(fresh, "observability.checks.overhead_ok",
+              "serving: traced throughput within 3% of untraced")
+    gate.hard(fresh, "observability.checks.predictions_identical",
+              "serving: tracing does not change predictions")
+    gate.hard(fresh, "observability.checks.billing_identical",
+              "serving: tracing does not change billing")
+    gate.hard(fresh, "observability.checks.one_span_per_request",
+              "serving: exactly one trace span per request")
+    gate.hard(fresh, "observability.checks.spans_monotonic",
+              "serving: span stage timestamps monotonic")
+    gate.hard(fresh, "observability.checks.span_costs_match_billing",
+              "serving: span costs/dispositions match billing")
+    gate.hard(fresh, "observability.checks.metrics_match_stats",
+              "serving: metric counters reconcile with CascadeStats")
+
+
 def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
     gate.hard(fresh, "checks.zero_dropped",
               "routing: zero dropped requests across outage")
@@ -187,6 +219,17 @@ def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
               "routing: failover to secondary during outage")
     gate.hard(fresh, "checks.failback_to_primary",
               "routing: fail-back to primary after recovery")
+    if "observability" in fresh or "observability" in base:
+        gate.hard(fresh, "checks.event_log_ordered",
+                  "routing: breaker/failover events in causal seq order")
+        gate.hard(fresh, "checks.breaker_opens_all_logged",
+                  "routing: every breaker open transition logged")
+        gate.hard(fresh, "checks.failovers_all_logged",
+                  "routing: every router failover logged, none dropped")
+        gate.hard(fresh, "checks.one_span_per_request",
+                  "routing: exactly one trace span per request")
+        gate.hard(fresh, "checks.span_costs_match_billing",
+                  "routing: span costs match billed total")
     gate.throughput(fresh, base, "routed.throughput_rps",
                     "routing: routed throughput")
 

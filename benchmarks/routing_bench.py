@@ -37,8 +37,8 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime import RemoteBackend, RemoteRouter, RemoteTimeout, \
-    TransportConfig
+from repro.runtime import Observability, RemoteBackend, RemoteRouter, \
+    RemoteTimeout, TransportConfig
 from repro.serving import ServeConfig
 from repro.serving.scheduler import Request
 
@@ -87,7 +87,7 @@ def make_backends(outage):
     return primary, secondary
 
 
-def _run(xs_phases, outage, router, depth):
+def _run(xs_phases, outage, router, depth, observe=False):
     """Serve three phases (pre / outage / post) through one engine."""
     cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=TARGET,
                       t_remote=0.0, pipeline_depth=depth, cache_size=0)
@@ -97,6 +97,9 @@ def _run(xs_phases, outage, router, depth):
     engine.serve({"local": xs_phases[0][:BATCH],
                   "remote": xs_phases[0][:BATCH]})
     engine.stats = type(engine.stats)()
+    # observability after the warm-up reset (DESIGN.md §9): every breaker
+    # / failover transition of the outage lands in the shared event log
+    obs = Observability.enabled().install(engine) if observe else None
 
     uid = 0
     answered = 0
@@ -119,7 +122,7 @@ def _run(xs_phases, outage, router, depth):
             for u in ("primary", "secondary")}
     wall = time.perf_counter() - t0
     engine.close()
-    return {"engine": engine, "wall": wall, "submitted": uid,
+    return {"engine": engine, "obs": obs, "wall": wall, "submitted": uid,
             "answered": answered, "fallbacks": fallbacks,
             "calls_after_phase": calls_after}
 
@@ -135,7 +138,7 @@ def run(verbose: bool = True, requests: int = 576, depth: int = 4,
     primary, secondary = make_backends(outage)
     router = RemoteRouter([primary, secondary],
                           policy="cheapest-available")
-    routed = _run(xs_phases, outage, router, depth)
+    routed = _run(xs_phases, outage, router, depth, observe=True)
 
     # --- baseline: single remote (primary only), same outage ---
     outage_b = {"on": False}
@@ -160,7 +163,38 @@ def run(verbose: bool = True, requests: int = 576, depth: int = 4,
         }
     attributed = sum(u.remote_calls + u.cache_hits + u.transport_failures
                      for u in st.per_backend.values())
+
+    # --- event log / trace reconciliation (DESIGN.md §9) ---
+    obs = routed["obs"]
+    ev = obs.events
+    first = {e: ev.first_seq(e) for e in
+             ("breaker_open", "breaker_half_open", "breaker_close",
+              "router_failover", "router_failback")}
+    spans = obs.trace.spans()
+    span_cost = sum(s["cost"] for s in spans)
+    ordered = (
+        # pick only skips the primary once its breaker is OPEN, so the
+        # first failover must be sequenced after the first open; the
+        # breaker lifecycle and fail-back follow in order
+        None not in first.values()
+        and first["breaker_open"] < first["router_failover"]
+        and (first["breaker_open"] < first["breaker_half_open"]
+             < first["breaker_close"])
+        and first["router_failover"] < first["router_failback"])
     checks = {
+        "event_log_ordered": ordered,
+        # every silent transition is in the log, not a sample of them
+        "breaker_opens_all_logged":
+            len(ev.events("breaker_open", "primary"))
+            == backends["primary"]["breaker_opens"],
+        "failovers_all_logged":
+            len(ev.events("router_failover")) == router.stats.failovers
+            and ev.dropped == 0,
+        "one_span_per_request":
+            sorted(s["uid"] for s in spans)
+            == list(range(routed["submitted"])),
+        "span_costs_match_billing":
+            abs(span_cost - st.total_cost) < 1e-9,
         "zero_dropped": (routed["answered"] == routed["submitted"]
                          and baseline["answered"] == baseline["submitted"]),
         # the secondary only serves while the primary breaker is open
@@ -204,6 +238,12 @@ def run(verbose: bool = True, requests: int = 576, depth: int = 4,
             "transport_failures": st_b.transport_failures,
             "fallbacks": baseline["fallbacks"],
         },
+        "observability": {
+            "events": dict(sorted(ev.counts().items())),
+            "events_dropped": ev.dropped,
+            "first_seq": first,
+            "spans": len(spans),
+        },
         "checks": checks,
         "passed": all(checks.values()),
     }
@@ -227,6 +267,8 @@ def run(verbose: bool = True, requests: int = 576, depth: int = 4,
                   f"p95 {v['p95_remote_latency_s'] * 1e3:.0f} ms, "
                   f"ema {0.0 if v['latency_ema_s'] is None else v['latency_ema_s'] * 1e3:.0f} ms, "
                   f"breaker opens {v['breaker_opens']}")
+        print(f"events: {report['observability']['events']} "
+              f"(first seq {first})")
         print(f"checks: {checks}"
               + (f"; JSON -> {json_path}" if json_path else ""))
     return report

@@ -236,7 +236,7 @@ def cache_episode(verbose=True) -> dict:
     if verbose:
         print("\n--- Runtime: remote-response cache ---")
         print(f"escalations {st.escalations}, billed {st.remote_calls}, "
-              f"hits {st.cache_hits} (hit rate {cache.stats.hit_rate:.2f})")
+              f"hits {st.cache_hits} (hit rate {cache.stats.hit_rate or 0.0:.2f})")
         print(f"billed ${st.total_cost:.4f} vs uncached ${naive_cost:.4f} "
               f"({report['savings_fraction']:.0%} saved)")
     return report

@@ -32,6 +32,14 @@ escalations to ``DEADLINE_LOCAL``, so tight-deadline requests meet their
 SLA instead of inheriting the remote round trip. The section reports the
 deadline-hit-rate, packed-window purity and per-disposition counts.
 
+A fifth, observability section (DESIGN.md §9) re-runs the headline
+stream with the full tracing/metrics/event stack enabled and gates:
+traced throughput within 3% of untraced, answers and billing unchanged,
+exactly one monotonic span per request, span costs and commit-time
+metric counters reconciling (bitwise) with ``CascadeStats``.
+``--trace-jsonl`` / ``--metrics-out`` export the traced run's spans and
+metrics snapshot (CI uploads both as artifacts).
+
 Machine-readable results are written to ``BENCH_serving.json`` so the
 perf trajectory is tracked across PRs and gated by
 ``benchmarks/check_regression.py``.
@@ -51,7 +59,8 @@ from collections import Counter
 import jax.numpy as jnp
 import numpy as np
 
-from repro.runtime import TransportConfig, fit_escalation_prior
+from repro.runtime import (Observability, TransportConfig,
+                           fit_escalation_prior)
 from repro.serving import RemoteSpec, RequestPolicy, ServeConfig
 from repro.serving.engine import BILLING_FIELDS
 from repro.serving.scheduler import Request
@@ -60,6 +69,7 @@ BATCH = 32
 NCLS = 8
 TARGET = 0.20           # escalation fraction (capacity-k, no controller)
 STREAMING_P95_RATIO = 0.5       # trusted-local p95 <= ratio * FIFO p95
+OVERHEAD_BAR = 0.97             # traced throughput >= 97% untraced (§9)
 DEADLINE_HIT_BAR = 0.95         # tight rows meeting their SLA (§8)
 PURITY_BAR = 0.95               # packed windows from one class only
 
@@ -101,13 +111,18 @@ def _mk_config(depth: int, latency_s: float, completion_mode="fifo",
 
 
 def _serve(xs, depth: int, latency_s: float, completion_mode="fifo",
-           policies=None, packing="none", prior=None, t_local=None):
+           policies=None, packing="none", prior=None, t_local=None,
+           observability=False):
     cfg = _mk_config(depth, latency_s, completion_mode, packing, t_local)
     engine, sched = cfg.build(local_apply, make_remote(latency_s),
                               fallback=lambda r: -1, prior=prior)
     # warm the jit cache with one out-of-band batch, then reset accounting
     engine.serve({"local": xs[:BATCH], "remote": xs[:BATCH]})
     engine.stats = type(engine.stats)()
+    if observability:
+        # installed AFTER the warm-up reset so the commit-time counters
+        # stay bitwise-reconcilable with the (reset) CascadeStats
+        Observability.enabled().install(engine)
     t0 = time.perf_counter()
     for i, row in enumerate(xs):
         sched.submit(Request(uid=i, local_input=row, remote_input=row,
@@ -262,6 +277,81 @@ def _policy_section(xs, depth: int, latency_s: float) -> dict:
     }
 
 
+def _spans_monotonic(spans) -> bool:
+    for s in spans:
+        ts = [t for _, t in s["stages"]]
+        if ts != sorted(ts):
+            return False
+    return True
+
+
+def _observability_section(xs, depth, latency_s, completion_mode,
+                           trace_jsonl=None, metrics_out=None) -> dict:
+    """Traced twin of the headline run (DESIGN.md §9): the SAME stream
+    against the same sleeping fake remote, with the full observability
+    stack on. Both arms take the best of 5 walls — against a sleeping
+    remote the wall clock quantises to whole round trips, so a single
+    missed window overlap in one run would masquerade as ~50% overhead.
+    Gated: tracing must not change answers or billing, must cost <=3%
+    throughput, must produce exactly one monotonic span per request,
+    and the commit-time metric counters must reconcile bitwise with
+    ``CascadeStats``."""
+    n = len(xs)
+
+    def best_of(observability):
+        best = None
+        for _ in range(5):
+            r, eng, w, _s = _serve(xs, depth=depth, latency_s=latency_s,
+                                   completion_mode=completion_mode,
+                                   observability=observability)
+            if best is None or w < best[2]:
+                best = (r, eng, w)
+        return best
+
+    r_base, eng_base, w_base = best_of(False)
+    r_tr, eng_tr, w_tr = best_of(True)
+    obs = eng_tr.observability
+    st = eng_tr.stats
+    spans = obs.trace.spans()
+    counters = obs.metrics.snapshot()["counters"]
+    span_cost = sum(s["cost"] for s in spans)
+    span_disp = dict(Counter(s["disposition"] for s in spans))
+    resp_disp = dict(Counter(r.disposition for r in r_tr))
+    checks = {
+        "overhead_ok": (n / w_tr) >= OVERHEAD_BAR * (n / w_base),
+        "predictions_identical": _by_uid(r_tr) == _by_uid(r_base),
+        "billing_identical": _billing_identical(eng_tr, eng_base),
+        "one_span_per_request":
+            sorted(s["uid"] for s in spans) == list(range(n)),
+        "spans_monotonic": _spans_monotonic(spans),
+        "span_costs_match_billing":
+            abs(span_cost - st.total_cost) < 1e-9
+            and span_disp == resp_disp,
+        # commit-order counter updates reconcile BITWISE with the stats
+        "metrics_match_stats": (
+            counters.get("cascade_requests_total") == st.requests
+            and counters.get("cascade_escalations_total") == st.escalations
+            and counters.get("cascade_remote_calls_total") == st.remote_calls
+            and counters.get("cascade_cost_dollars_total") == st.total_cost),
+    }
+    if trace_jsonl:
+        obs.trace.write_jsonl(trace_jsonl)
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            json.dump(obs.metrics.snapshot(), f, indent=1, sort_keys=True)
+    return {
+        "untraced_throughput_rps": n / w_base,
+        "traced_throughput_rps": n / w_tr,
+        "overhead_ratio": (n / w_tr) / (n / w_base),
+        "spans": len(spans),
+        "trace_dropped": obs.trace.dropped,
+        "events": dict(sorted(obs.events.counts().items())),
+        "dispositions": span_disp,
+        "checks": checks,
+        "passed": all(checks.values()),
+    }
+
+
 def _billing_identical(a, b) -> bool:
     if any(getattr(a.stats, f) != getattr(b.stats, f) for f in BILLING_FIELDS):
         return False
@@ -271,7 +361,9 @@ def _billing_identical(a, b) -> bool:
 
 def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
         remote_latency_s: float = 0.3, completion_mode: str = "streaming",
-        json_path: str | None = "BENCH_serving.json") -> dict:
+        json_path: str | None = "BENCH_serving.json",
+        trace_jsonl: str | None = None,
+        metrics_out: str | None = None) -> dict:
     rng = np.random.default_rng(0)
     xs, _ = make_load(rng, requests)
 
@@ -339,6 +431,13 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
     report["policy"] = _policy_section(xs, depth, remote_latency_s)
     report["passed"] = report["passed"] and report["policy"]["passed"]
 
+    # --- observability overhead + trace/metric reconciliation (§9) ---
+    report["observability"] = _observability_section(
+        xs, depth, remote_latency_s, completion_mode, trace_jsonl,
+        metrics_out)
+    report["passed"] = (report["passed"]
+                        and report["observability"]["passed"])
+
     if json_path:
         with open(json_path, "w") as f:
             json.dump(report, f, indent=1)
@@ -376,6 +475,13 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
         print(f"window packing {pol['packing_stats']} -> purity "
               f"{pol['packed_window_purity']:.2f}; dispositions "
               f"{pol['dispositions']}; checks {pol['checks']}")
+        ob = report["observability"]
+        print("--- Observability overhead (DESIGN.md §9) ---")
+        print(f"traced {ob['traced_throughput_rps']:.1f} req/s vs "
+              f"untraced {ob['untraced_throughput_rps']:.1f} req/s "
+              f"-> ratio {ob['overhead_ratio']:.3f} "
+              f"(bar {OVERHEAD_BAR}); {ob['spans']} spans "
+              f"({ob['trace_dropped']} dropped); checks {ob['checks']}")
         if json_path:
             print(f"JSON -> {json_path}")
     return report
@@ -394,11 +500,19 @@ def main(argv=None) -> int:
                          "section (DESIGN.md §7); fifo skips it")
     ap.add_argument("--json", default="BENCH_serving.json",
                     help="machine-readable output path ('' disables)")
+    ap.add_argument("--trace-jsonl", default="",
+                    help="write the traced run's span timelines here "
+                         "(JSONL, one span per line; '' disables)")
+    ap.add_argument("--metrics-out", default="",
+                    help="write the traced run's metrics snapshot here "
+                         "(JSON; '' disables)")
     args = ap.parse_args(argv)
     report = run(requests=args.requests, depth=args.depth,
                  remote_latency_s=args.remote_latency,
                  completion_mode=args.completion_mode,
-                 json_path=args.json or None)
+                 json_path=args.json or None,
+                 trace_jsonl=args.trace_jsonl or None,
+                 metrics_out=args.metrics_out or None)
     return 0 if report["passed"] else 1
 
 

@@ -134,12 +134,12 @@ print(f"[phase 3b] recovery: {serve(1024, 0.40)} "
 
 print(f"\n[phase 4] duplicate-heavy: {serve(2048, 0.40, dup_frac=0.5)}")
 print(f"          cache: {engine.cache.stats.hits} hits "
-      f"(rate {engine.cache.stats.hit_rate:.2f})")
+      f"(rate {engine.cache.stats.hit_rate or 0.0:.2f})")
 
 print(f"\n[total] {st.requests} requests, {st.escalations} escalations, "
       f"{st.remote_calls} billed remote calls, {st.cache_hits} cache hits, "
       f"{st.transport_failures} transport failures")
 print(f"[total] bill ${st.total_cost:.4f} vs remote-only "
       f"${st.requests * engine.cost.remote_cost_per_request:.4f}; "
-      f"mean latency {st.mean_latency_s * 1e3:.0f} ms vs remote-only "
+      f"mean latency {(st.mean_latency_s or 0.0) * 1e3:.0f} ms vs remote-only "
       f"{engine.cost.remote_latency_s * 1e3:.0f} ms")

@@ -118,5 +118,5 @@ st = eng.stats
 print(f"[camera] cost: ${st.total_cost:.4f} vs remote-only "
       f"${st.requests * eng.cost.remote_cost_per_request:.4f} "
       f"({1 - st.remote_fraction:.0%} saved); "
-      f"mean latency {st.mean_latency_s * 1e3:.0f}ms vs "
+      f"mean latency {(st.mean_latency_s or 0.0) * 1e3:.0f}ms vs "
       f"{eng.cost.remote_latency_s * 1e3:.0f}ms remote-only")

@@ -32,6 +32,12 @@ Workload-level knobs keep first-class flags:
   --calibrate       offline Pareto sweep picking (t_local, t_remote, k)
   --fused           bypass the transport: seed-style fully-jitted cascade
 
+Observability (DESIGN.md §9): ``--metrics-dump`` / ``--metrics-interval``
+snapshot the metrics registry (JSON or Prometheus text by extension),
+``--trace`` writes per-request span timelines as JSONL and
+``--trace-chrome`` exports Chrome ``trace_event`` JSON for perfetto.
+Any of these implies ``observability=True`` on the ``ServeConfig``.
+
 On this CPU container use ``--smoke`` (reduced remote config).
 
 Usage:
@@ -44,6 +50,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import threading
 import time
 from collections import Counter
 
@@ -116,9 +124,29 @@ def main(argv=None) -> int:
                          "default_policy.* (DESIGN.md §8 migration "
                          "table), e.g. --set pipeline_depth=8 "
                          "--set default_policy.deadline_s=0.5")
+    ap.add_argument("--metrics-dump", metavar="PATH",
+                    help="write the final metrics snapshot here: JSON "
+                         "for *.json, Prometheus exposition text "
+                         "otherwise (implies observability)")
+    ap.add_argument("--metrics-interval", type=float, metavar="S",
+                    help="re-dump/print metrics every S seconds while "
+                         "serving (implies observability)")
+    ap.add_argument("--trace", metavar="PATH",
+                    help="write per-request span timelines as JSONL "
+                         "(implies observability)")
+    ap.add_argument("--trace-chrome", metavar="PATH",
+                    help="write Chrome trace_event JSON for perfetto / "
+                         "chrome://tracing (implies observability)")
     args = ap.parse_args(argv)
+    want_obs = (args.metrics_dump or args.metrics_interval
+                or args.trace or args.trace_chrome)
     try:
         cfg = build_serve_config(args)
+        if want_obs:
+            if cfg.fused:
+                ap.error("--metrics-dump/--metrics-interval/--trace "
+                         "require the transport path (not --fused)")
+            cfg = dataclasses.replace(cfg, observability=True)
     except ValueError as e:
         ap.error(str(e))
     if (cfg.cost_budget is not None and not cfg.adaptive
@@ -233,6 +261,37 @@ def main(argv=None) -> int:
         eng, sched = cfg.build(local_apply, transport=router, cache=cache,
                                fallback=lambda r: -1)
 
+    obs = eng.observability
+
+    def dump_metrics(path):
+        # JSON snapshot for *.json, Prometheus exposition text otherwise
+        if path.endswith(".json"):
+            text = json.dumps(obs.metrics.snapshot(), indent=2,
+                              sort_keys=True) + "\n"
+        else:
+            text = obs.metrics.render_prometheus()
+        with open(path, "w") as f:
+            f.write(text)
+
+    stop_pump = threading.Event()
+
+    def pump():
+        while not stop_pump.wait(args.metrics_interval):
+            if args.metrics_dump:
+                dump_metrics(args.metrics_dump)
+            else:
+                c = obs.metrics.snapshot()["counters"]
+                print(f"[serve] metrics: "
+                      f"{c.get('cascade_requests_total', 0):.0f} requests, "
+                      f"{c.get('cascade_escalations_total', 0):.0f} "
+                      f"escalated, "
+                      f"${c.get('cascade_cost_dollars_total', 0.0):.4f}")
+
+    pump_thread = None
+    if obs is not None and args.metrics_interval:
+        pump_thread = threading.Thread(target=pump, daemon=True)
+        pump_thread.start()
+
     t0 = time.perf_counter()
     try:
         for i in range(args.requests):
@@ -243,6 +302,9 @@ def main(argv=None) -> int:
         responses = sched.flush()
     finally:
         eng.close()     # drain windows + shut down every backend pool
+        if pump_thread is not None:
+            stop_pump.set()
+            pump_thread.join(timeout=5.0)
     wall = time.perf_counter() - t0
 
     correct = sum(r.prediction == labels[r.uid] for r in responses
@@ -261,14 +323,17 @@ def main(argv=None) -> int:
     print(f"[serve] modelled cost: ${st.total_cost:.4f} "
           f"(${st.total_cost / max(st.requests, 1):.5f}/req; remote-only "
           f"would be ${st.requests * eng.cost.remote_cost_per_request:.4f})")
-    print(f"[serve] modelled mean latency: {st.mean_latency_s * 1e3:.0f} ms "
-          f"(remote-only {eng.cost.remote_latency_s * 1e3:.0f} ms)")
-    print(f"[serve] measured wall latency: "
-          f"p50 {st.wall_percentile(50) * 1e3:.0f} ms, "
-          f"p95 {st.wall_percentile(95) * 1e3:.0f} ms "
-          f"(throughput {len(responses) / max(wall, 1e-9):.0f} req/s, "
-          f"pipeline depth {cfg.pipeline_depth}, "
-          f"completion mode {cfg.completion_mode})")
+    if st.mean_latency_s is not None:
+        print(f"[serve] modelled mean latency: "
+              f"{st.mean_latency_s * 1e3:.0f} ms "
+              f"(remote-only {eng.cost.remote_latency_s * 1e3:.0f} ms)")
+    p50, p95 = st.wall_percentile(50), st.wall_percentile(95)
+    if p50 is not None:
+        print(f"[serve] measured wall latency: "
+              f"p50 {p50 * 1e3:.0f} ms, p95 {p95 * 1e3:.0f} ms "
+              f"(throughput {len(responses) / max(wall, 1e-9):.0f} req/s, "
+              f"pipeline depth {cfg.pipeline_depth}, "
+              f"completion mode {cfg.completion_mode})")
     # per-request hand-back latency, split trusted-local vs escalated
     # (the streaming mode's value proposition — DESIGN.md §7)
     if sched.first_response_s is not None:
@@ -294,20 +359,23 @@ def main(argv=None) -> int:
               f"replays {rs.replay_served}/{rs.replay_enqueued} served")
         for b in router:
             ts, u = b.stats, st.per_backend.get(b.name)
+            p95r = ts.latency_percentile(95)
             line = (f"[serve]   {b.name}: {ts.windows} windows, "
                     f"{ts.failed_requests} failed reqs, "
                     f"{ts.retries} retries, "
                     f"breaker opens {ts.breaker_opens}, "
-                    f"p95 remote {ts.latency_percentile(95) * 1e3:.0f} ms")
+                    f"p95 remote "
+                    f"{'n/a' if p95r is None else f'{p95r * 1e3:.0f} ms'}")
             if u is not None:
                 line += (f"; billed ${u.cost:.4f} "
                          f"({u.remote_calls} calls, {u.cache_hits} hits, "
                          f"{u.transport_failures} failures)")
             print(line)
     if eng.cache is not None:
+        hr = eng.cache.stats.hit_rate
         print(f"[serve] cache: {eng.cache.stats.hits} hits / "
               f"{eng.cache.stats.misses} misses "
-              f"(hit rate {eng.cache.stats.hit_rate:.2f})")
+              f"(hit rate {'n/a' if hr is None else f'{hr:.2f}'})")
     if eng.controller is not None:
         cs = eng.controller.state
         print(f"[serve] controller: {cs.windows} windows, "
@@ -322,6 +390,24 @@ def main(argv=None) -> int:
                   f"(learned $/escalation "
                   f"{'n/a' if per_esc is None else f'{per_esc:.5f}'}, "
                   f"effective target fraction {cs.effective_target})")
+    if obs is not None:
+        evc = obs.events.counts()
+        if evc:
+            drop = (f" ({obs.events.dropped} dropped)"
+                    if obs.events.dropped else "")
+            print(f"[serve] events: {dict(sorted(evc.items()))}{drop}")
+        if obs.trace is not None and obs.trace.dropped:
+            print(f"[serve] trace: {obs.trace.dropped} spans dropped "
+                  f"(capacity {obs.trace.capacity})")
+        if args.trace:
+            n = obs.trace.write_jsonl(args.trace)
+            print(f"[serve] wrote {n} spans -> {args.trace}")
+        if args.trace_chrome:
+            n = obs.trace.write_chrome_trace(args.trace_chrome)
+            print(f"[serve] wrote {n} trace events -> {args.trace_chrome}")
+        if args.metrics_dump:
+            dump_metrics(args.metrics_dump)
+            print(f"[serve] wrote metrics snapshot -> {args.metrics_dump}")
     return 0
 
 

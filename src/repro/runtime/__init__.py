@@ -8,10 +8,14 @@ Composes with ``repro.serving.engine.CascadeEngine`` (see DESIGN.md):
     policies, breaker-driven failover)
   * cache       — content-keyed dedup of billed remote calls (entries
     remember which backend filled them, so hits attribute correctly)
+  * observability — zero-dependency metrics registry, per-request trace
+    spans and the structured event log (DESIGN.md §9)
 """
 
 from repro.runtime.cache import (CacheStats, RemoteResponseCache,
                                  content_key, content_keys)
+from repro.runtime.observability import (EventLog, MetricsRegistry,
+                                         Observability, TraceSink)
 from repro.runtime.calibration import (EscalationPrior, OperatingPoint,
                                        calibrate, fit_escalation_prior,
                                        pareto_frontier,
@@ -31,11 +35,12 @@ from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
 __all__ = [
     "ROUTE_POLICIES", "AdaptiveController", "CacheStats", "CircuitBreaker",
     "CircuitOpenError", "ControllerConfig", "ControllerState",
-    "EscalationPrior", "OperatingPoint", "RemoteBackend", "RemoteCallError",
+    "EscalationPrior", "EventLog", "MetricsRegistry", "Observability",
+    "OperatingPoint", "RemoteBackend", "RemoteCallError",
     "RemoteResponseCache", "RemoteRouter", "RemoteTimeout",
-    "RemoteTransport", "RouteConstraint", "RouterStats", "TransportConfig",
-    "TransportFuture", "TransportStats", "calibrate", "content_key",
-    "content_keys", "fit_escalation_prior", "pareto_frontier",
-    "population_stability_index", "select_operating_point",
-    "sweep_operating_points",
+    "RemoteTransport", "RouteConstraint", "RouterStats", "TraceSink",
+    "TransportConfig", "TransportFuture", "TransportStats", "calibrate",
+    "content_key", "content_keys", "fit_escalation_prior",
+    "pareto_frontier", "population_stability_index",
+    "select_operating_point", "sweep_operating_points",
 ]

@@ -105,8 +105,13 @@ class CacheStats:
     evictions: int = 0
 
     @property
-    def hit_rate(self) -> float:
-        return self.hits / max(self.hits + self.misses, 1)
+    def hit_rate(self) -> float | None:
+        """Hit ratio; None before any lookup — an untouched cache must
+        not report a 0.0 hit rate (DESIGN.md §9 empty-stats contract)."""
+        looked = self.hits + self.misses
+        if looked == 0:
+            return None
+        return self.hits / looked
 
 
 class RemoteResponseCache:

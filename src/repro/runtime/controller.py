@@ -106,6 +106,12 @@ class AdaptiveController:
         self._win_cost = 0.0
         self._ref_hist: np.ndarray | None = None
         self._bin_edges: np.ndarray | None = None
+        # observability (DESIGN.md §9): shared EventLog installed by the
+        # Observability facade (None = disabled). ``event_window`` is the
+        # engine window being committed when ``observe`` runs, so control
+        # updates and drift flags carry the window that triggered them.
+        self.events = None
+        self.event_window: int | None = None
 
     # -- knobs the engine reads each batch ---------------------------------
     @property
@@ -190,6 +196,12 @@ class AdaptiveController:
         drifted = self._detect_drift(np.asarray(self._win_scores))
         if drifted:
             st.drift_events += 1
+            if self.events is not None:
+                self.events.emit("controller_drift",
+                                 window=self.event_window,
+                                 psi=st.last_psi,
+                                 threshold=self.config.drift_threshold,
+                                 drift_events=st.drift_events)
             st.integral = 0.0
             st.ema_fraction = target
             err = 0.0
@@ -207,6 +219,15 @@ class AdaptiveController:
                 np.asarray(self._remote_scores), cfg.target_rejection_rate))
 
         st.windows += 1
+        if self.events is not None:
+            # one bounded event per control window (not per batch): the
+            # knob values the next windows will be served under
+            self.events.emit("controller_update",
+                             window=self.event_window,
+                             rho=st.rho, t_local=st.t_local,
+                             t_remote=st.t_remote,
+                             ema_fraction=st.ema_fraction,
+                             effective_target=st.effective_target)
         self._win_scores = []
         self._win_escalated = 0
         self._win_requests = 0

@@ -72,6 +72,17 @@ from typing import Any, Callable, ClassVar
 
 import numpy as np
 
+from .observability import (
+    EV_BREAKER_CLOSE,
+    EV_BREAKER_HALF_OPEN,
+    EV_BREAKER_OPEN,
+    EV_REPLAY_DROPPED,
+    EV_REPLAY_PARKED,
+    EV_REPLAY_SERVED,
+    EV_ROUTER_FAILBACK,
+    EV_ROUTER_FAILOVER,
+)
+
 
 class RemoteCallError(Exception):
     """Remote tier invocation failed (transient or terminal)."""
@@ -130,13 +141,19 @@ class TransportStats:
         self.latency_samples.append(float(window_s))
 
     @property
-    def mean_latency_s(self) -> float:
-        return self.latency_sum_s / max(self.latency_windows, 1)
+    def mean_latency_s(self) -> float | None:
+        """Mean per-window remote latency; None before any successful
+        window — a transport that never measured anything must not
+        report a flattering 0.0 (DESIGN.md §9 empty-stats contract)."""
+        if self.latency_windows == 0:
+            return None
+        return self.latency_sum_s / self.latency_windows
 
-    def latency_percentile(self, q: float) -> float:
-        """q-th percentile (0-100) of recent per-window remote latency."""
+    def latency_percentile(self, q: float) -> float | None:
+        """q-th percentile (0-100) of recent per-window remote latency;
+        None when no window has succeeded yet."""
         if not self.latency_samples:
-            return 0.0
+            return None
         return float(np.percentile(np.fromiter(self.latency_samples,
                                                np.float64), q))
 
@@ -257,6 +274,25 @@ class RemoteTransport:
         self._pool: ThreadPoolExecutor | None = None
         self.breaker = CircuitBreaker(config.breaker_failures,
                                       config.breaker_reset_s, clock=clock)
+        # observability (DESIGN.md §9): an EventLog installed by the
+        # Observability facade; None = disabled, every hook short-circuits
+        # on one attribute test. ``event_source`` is the backend name the
+        # router wires in (a bare transport reports as "remote").
+        self.events: Any = None
+        self.event_source = "remote"
+
+    _BREAKER_EVENTS: ClassVar[dict] = {OPEN: EV_BREAKER_OPEN,
+                                       HALF_OPEN: EV_BREAKER_HALF_OPEN,
+                                       CLOSED: EV_BREAKER_CLOSE}
+
+    def _emit_breaker(self, prev: str, cur: str, tag: int | None) -> None:
+        """Emit a breaker state-transition event (call OUTSIDE the
+        transport lock; prev/cur were captured inside it)."""
+        if self.events is None or cur == prev:
+            return
+        self.events.emit(self._BREAKER_EVENTS[cur], window=tag,
+                         backend=self.event_source, prev=prev,
+                         failures=self.breaker.consecutive_failures)
 
     # -- single window -----------------------------------------------------
     def _call_window(self, window: Any) -> np.ndarray:
@@ -268,7 +304,8 @@ class RemoteTransport:
                 f"remote window exceeded {self.config.timeout_s}s deadline")
         return out
 
-    def _call_with_retries(self, window: Any) -> np.ndarray:
+    def _call_with_retries(self, window: Any,
+                           tag: int | None = None) -> np.ndarray:
         """One window: retries absorb transient faults; only a window that
         exhausts its retries counts as a breaker failure (so a single
         flaky window never opens the breaker on its own)."""
@@ -277,7 +314,10 @@ class RemoteTransport:
         for attempt in range(1 + self.config.max_retries):  # so a flaky
             # backend can't report a flattering EMA/p95 to the router
             with self._lock:
+                prev = self.breaker.state
                 allowed = self.breaker.allow()
+                cur = self.breaker.state
+            self._emit_breaker(prev, cur, tag)
             if not allowed:
                 raise CircuitOpenError("circuit breaker open")
             try:
@@ -295,7 +335,10 @@ class RemoteTransport:
             else:
                 with self._lock:
                     self.stats.record_latency(self._clock() - t0)
+                    prev = self.breaker.state
                     self.breaker.record_success()
+                    cur = self.breaker.state
+                self._emit_breaker(prev, cur, tag)
                 return out
             if attempt < self.config.max_retries:
                 with self._lock:
@@ -303,13 +346,17 @@ class RemoteTransport:
                 if self.config.retry_backoff_s > 0:
                     self._sleep(self.config.retry_backoff_s * (attempt + 1))
         with self._lock:
+            prev = self.breaker.state
             self.breaker.record_failure()
+            cur = self.breaker.state
+        self._emit_breaker(prev, cur, tag)
         raise RemoteCallError(f"remote window failed after "
                               f"{1 + self.config.max_retries} attempts: "
                               f"{last!r}") from last
 
     # -- public API --------------------------------------------------------
-    def call(self, batch: Any) -> tuple[np.ndarray | None, np.ndarray]:
+    def call(self, batch: Any, tag: int | None = None
+             ) -> tuple[np.ndarray | None, np.ndarray]:
         n = _rows(batch)
         ok = np.zeros((n,), bool)
         outs: list[tuple[int, np.ndarray]] = []
@@ -319,14 +366,17 @@ class RemoteTransport:
             with self._lock:
                 self.stats.windows += 1
                 self.stats.requests += hi - lo
+                prev = self.breaker.state
                 allowed = self.breaker.allow()
+                cur = self.breaker.state
+            self._emit_breaker(prev, cur, tag)
             if not allowed:
                 with self._lock:
                     self.stats.short_circuited += hi - lo
                     self.stats.failed_requests += hi - lo
                 continue
             try:
-                out = self._call_with_retries(_slice(batch, lo, hi))
+                out = self._call_with_retries(_slice(batch, lo, hi), tag)
             except CircuitOpenError:
                 with self._lock:
                     self.stats.short_circuited += hi - lo
@@ -348,7 +398,7 @@ class RemoteTransport:
             logits[lo:lo + out.shape[0]] = out
         return logits, ok
 
-    def submit(self, batch: Any) -> TransportFuture:
+    def submit(self, batch: Any, tag: int | None = None) -> TransportFuture:
         """Non-blocking ``call``: schedule the batch on the thread pool and
         return a future resolving to the same ``(logits, ok)`` pair."""
         with self._lock:
@@ -357,7 +407,8 @@ class RemoteTransport:
                     max_workers=max(1, self.config.max_concurrent),
                     thread_name_prefix="remote-transport")
             pool = self._pool
-        return TransportFuture(pool.submit(self.call, batch), _rows(batch))
+        return TransportFuture(pool.submit(self.call, batch, tag),
+                               _rows(batch))
 
     def poll(self, future: TransportFuture) -> bool:
         """True iff the future's (logits, ok) is ready to drain."""
@@ -426,17 +477,17 @@ class RemoteBackend:
     def stats(self) -> TransportStats:
         return self.transport.stats
 
-    def call(self, batch: Any):
+    def call(self, batch: Any, tag: int | None = None):
         self._track(+1)
         try:
-            return self.transport.call(batch)
+            return self.transport.call(batch, tag)
         finally:
             self._track(-1)
 
-    def submit(self, batch: Any) -> TransportFuture:
+    def submit(self, batch: Any, tag: int | None = None) -> TransportFuture:
         self._track(+1)
         try:
-            fut = self.transport.submit(batch)
+            fut = self.transport.submit(batch, tag)
         except BaseException:
             self._track(-1)     # pool-shutdown race etc.: don't leak the
             raise               # counter and skew `weighted` routing
@@ -558,6 +609,12 @@ class RemoteRouter:
         self.replay_max = max(0, replay_max)
         self._replay_slots = 0      # tickets currently parked with windows
         self.stats = RouterStats(picks={b.name: 0 for b in backends})
+        # observability (DESIGN.md §9): shared EventLog, installed by the
+        # Observability facade (None = disabled). ``_failed_over`` tracks
+        # whether routing has drifted off the policy-preferred backend so
+        # the return to it is emitted as one fail-back event.
+        self.events: Any = None
+        self._failed_over = False
 
     def __len__(self) -> int:
         return len(self.backends)
@@ -602,8 +659,8 @@ class RemoteRouter:
                 cands = hinted + [b for b in cands if b is not hinted[0]]
         return cands
 
-    def pick(self, constraint: RouteConstraint | None = None
-             ) -> RemoteBackend | None:
+    def pick(self, constraint: RouteConstraint | None = None, *,
+             window: int | None = None) -> RemoteBackend | None:
         """First available backend in policy order that satisfies the
         window's merged ``RouteConstraint`` (None = unconstrained); None
         when every breaker (or the constraint) refuses — the window
@@ -611,7 +668,8 @@ class RemoteRouter:
         skipped a breaker-refused preferred backend (constraint skips are
         policy, not failure)."""
         skipped_unavailable = False
-        for b in self._ordered(constraint):
+        ordered = self._ordered(constraint)
+        for b in ordered:
             if not b.available():
                 skipped_unavailable = True
                 continue
@@ -620,6 +678,15 @@ class RemoteRouter:
             self.stats.picks[b.name] += 1
             if skipped_unavailable:
                 self.stats.failovers += 1
+                self._failed_over = True
+                if self.events is not None:
+                    self.events.emit(EV_ROUTER_FAILOVER, window=window,
+                                     backend=b.name, policy=self.policy)
+            elif self._failed_over and b is ordered[0]:
+                self._failed_over = False
+                if self.events is not None:
+                    self.events.emit(EV_ROUTER_FAILBACK, window=window,
+                                     backend=b.name, policy=self.policy)
             return b
         self.stats.unrouted += 1
         return None
@@ -652,7 +719,7 @@ class RemoteRouter:
         return min(ests) if ests else None
 
     # -- bounded replay of (unrouted) windows (DESIGN.md §7) ------------
-    def acquire_replay_slot(self) -> bool:
+    def acquire_replay_slot(self, *, window: int | None = None) -> bool:
         """Park an (unrouted) escalation window for a later replay pick
         instead of degrading it to REJECTED immediately. Bounded: at most
         ``replay_max`` windows may hold a ticket at once — a full queue
@@ -660,13 +727,19 @@ class RemoteRouter:
         redeems the ticket when the window drains (``redeem_replay``)."""
         if self._replay_slots >= self.replay_max:
             self.stats.replay_dropped += 1
+            if self.events is not None:
+                self.events.emit(EV_REPLAY_DROPPED, window=window,
+                                 reason="queue_full")
             return False
         self._replay_slots += 1
         self.stats.replay_enqueued += 1
+        if self.events is not None:
+            self.events.emit(EV_REPLAY_PARKED, window=window,
+                             parked=self._replay_slots)
         return True
 
-    def redeem_replay(self, constraint: RouteConstraint | None = None
-                      ) -> RemoteBackend | None:
+    def redeem_replay(self, constraint: RouteConstraint | None = None, *,
+                      window: int | None = None) -> RemoteBackend | None:
         """Replay pick for a parked (unrouted) window at drain time: the
         first backend in policy order whose breaker has half-opened since
         submit serves the window — the replay call doubles as the probe —
@@ -679,8 +752,14 @@ class RemoteRouter:
                                   or constraint.admits(b)):
                 self.stats.picks[b.name] += 1
                 self.stats.replay_served += 1
+                if self.events is not None:
+                    self.events.emit(EV_REPLAY_SERVED, window=window,
+                                     backend=b.name)
                 return b
         self.stats.replay_dropped += 1
+        if self.events is not None:
+            self.events.emit(EV_REPLAY_DROPPED, window=window,
+                             reason="no_backend")
         return None
 
     def expected_cost_per_escalation(self, default: float) -> float:

@@ -50,7 +50,15 @@ the SLA — and every result row carries ``disposition``/``backend``/
 ``cost`` so billing attribution surfaces at the API boundary. The
 engine (like the scheduler and router) is constructed from a single
 ``ServeConfig`` facade via ``from_config``; the keyword constructor
-below survives one PR as a deprecated shim.
+remains as the low-level composition-root API (tests, bespoke wiring).
+
+Observability (DESIGN.md §9): construct with ``observability=`` (or
+``ServeConfig(observability=True)``) and the engine stamps a per-window
+stage timeline into ``_InFlight.tr`` (dispatch → gate → route → remote →
+commit), publishes commit-time counters into the metrics registry, and
+emits downgrade events; the scheduler turns window stamps into one span
+per request at hand-back. Every hook is guarded by a single
+``is not None`` test, so the disabled mode adds zero per-row work.
 
 Multi-remote routing (DESIGN.md §6): the runtime/pipelined paths accept a
 ``RemoteRouter`` of named ``RemoteBackend``s in place of a bare transport
@@ -66,7 +74,6 @@ from __future__ import annotations
 
 import threading
 import time
-import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterator
@@ -79,35 +86,13 @@ from repro.core.cascade import (combine_escalated, escalation_capacity,
                                 gather_requests, select_escalations)
 from repro.core.supervisors import SOFTMAX_SUPERVISORS
 from repro.kernels.confidence_gate.ops import confidence_gate
+from repro.runtime.observability import (EV_DEADLINE_DOWNGRADE,
+                                         EV_POLICY_DOWNGRADE)
 from repro.runtime.transport import (RemoteBackend, RemoteRouter,
                                      RouteConstraint)
 from repro.serving.policy import (CACHED, DEADLINE_LOCAL, LOCAL,
                                   POLICY_LOCAL, REJECTED, REMOTE,
                                   RequestPolicy, ServeConfig)
-
-# legacy keyword constructors warn once per process (DESIGN.md §8): the
-# ServeConfig facade is the supported construction path for one PR, then
-# the keyword sprawl goes away. Tests reset this to re-arm the warning.
-_LEGACY_WARNED: set[str] = set()
-
-
-def _warn_legacy_ctor(name: str) -> None:
-    if name in _LEGACY_WARNED:
-        return
-    _LEGACY_WARNED.add(name)
-    warnings.warn(
-        f"constructing {name} from individual keyword arguments is "
-        f"deprecated; build a repro.serving.ServeConfig and use "
-        f"{name}.from_config (DESIGN.md §8 migration table)",
-        DeprecationWarning, stacklevel=3)
-
-
-def _reset_legacy_ctor_warnings() -> None:
-    """Re-arm the once-per-process constructor deprecation warnings
-    (test hook; lives beside the shim machinery so removing the shims
-    next PR removes it too)."""
-    _LEGACY_WARNED.clear()
-
 
 def _any_policy(policies) -> bool:
     """True iff some entry actually constrains serving."""
@@ -198,8 +183,13 @@ class CascadeStats:
         return self.escalations / max(self.requests, 1)
 
     @property
-    def mean_latency_s(self) -> float:
-        return self.total_latency_s / max(self.requests, 1)
+    def mean_latency_s(self) -> float | None:
+        """Modelled mean per-request latency; None before any request —
+        empty stats must render as absent, not as a flattering 0.0
+        (DESIGN.md §9 empty-stats contract)."""
+        if self.requests == 0:
+            return None
+        return self.total_latency_s / self.requests
 
     # -- measured wall-clock latency (vs the modelled numbers above) ----
     def record_wall(self, window_wall_s: float, real: int) -> None:
@@ -210,13 +200,18 @@ class CascadeStats:
         self.wall_samples.append(float(window_wall_s))
 
     @property
-    def mean_wall_latency_s(self) -> float:
-        return self.wall_latency_s / max(self.requests, 1)
+    def mean_wall_latency_s(self) -> float | None:
+        """Measured mean per-request wall latency; None before any
+        request (empty-stats contract, see ``mean_latency_s``)."""
+        if self.requests == 0:
+            return None
+        return self.wall_latency_s / self.requests
 
-    def wall_percentile(self, q: float) -> float:
-        """q-th percentile (0-100) of recent per-window wall latency."""
+    def wall_percentile(self, q: float) -> float | None:
+        """q-th percentile (0-100) of recent per-window wall latency;
+        None before any window has been timed."""
         if not self.wall_samples:
-            return 0.0
+            return None
         return float(np.percentile(np.fromiter(self.wall_samples,
                                                np.float64), q))
 
@@ -377,6 +372,11 @@ class _InFlight:
     n_failed: int = 0
     n_hits: int = 0
     bname: str = UNROUTED
+    # -- observability (DESIGN.md §9) -----------------------------------
+    # per-window stage timestamps (dispatch/gate/route/remote/commit) +
+    # the gating threshold; None when observability is disabled, so the
+    # hot path allocates nothing per window, let alone per row
+    tr: dict | None = None
 
 
 class CascadeEngine:
@@ -427,9 +427,7 @@ class CascadeEngine:
                  supervisor="max_softmax", transport=None, controller=None,
                  cache=None, clock: Callable[[], float] = time.perf_counter,
                  default_policy: RequestPolicy | None = None,
-                 _from_config: bool = False):
-        if not _from_config:
-            _warn_legacy_ctor("CascadeEngine")
+                 observability=None):
         if remote_apply is None and transport is None:
             raise ValueError("need a remote tier: remote_apply or transport")
         self.batch_size = batch_size
@@ -468,6 +466,12 @@ class CascadeEngine:
         self._ready = threading.Event()
         self._supervisor = (supervisor if callable(supervisor)
                             else SOFTMAX_SUPERVISORS[supervisor])
+        # observability facade (DESIGN.md §9): None = disabled; install()
+        # wires the router/transports/controller into the shared event
+        # log and registers the snapshot-time metrics collector
+        self.observability = None
+        if observability is not None:
+            observability.install(self)
         if transport is None:
             self._step = jax.jit(make_cascade_step(
                 local_apply, remote_apply, self.capacity, supervisor))
@@ -496,8 +500,7 @@ class CascadeEngine:
                       remote_fraction_budget=config.remote_fraction_budget,
                       t_remote=config.t_remote,
                       cost=config.cost or CostModel(),
-                      supervisor=config.supervisor, clock=clock,
-                      _from_config=True)
+                      supervisor=config.supervisor, clock=clock)
         else:
             if transport is None:
                 if remote_apply is None:
@@ -515,7 +518,7 @@ class CascadeEngine:
                       cache=(config.build_cache() if cache is cls._UNSET
                              else cache),
                       clock=clock, default_policy=config.default_policy,
-                      _from_config=True)
+                      observability=config.build_observability())
         if config.t_local is not None:
             eng.set_local_threshold(config.t_local)
         return eng
@@ -742,12 +745,18 @@ class CascadeEngine:
 
         gate_dev = self._local_step(batch["local"], t, np.int32(real))
         self._seq += 1
-        return _InFlight(seq=self._seq, t0=t0, b=b, real=real,
-                         asynchronous=asynchronous, capacity=capacity,
-                         gate_dev=gate_dev, remote_batch=batch["remote"],
-                         policies=policies, t_enq=t_enq,
-                         policed=(_any_policy(policies)
-                                  or self.default_policy is not None))
+        fl = _InFlight(seq=self._seq, t0=t0, b=b, real=real,
+                       asynchronous=asynchronous, capacity=capacity,
+                       gate_dev=gate_dev, remote_batch=batch["remote"],
+                       policies=policies, t_enq=t_enq,
+                       policed=(_any_policy(policies)
+                                or self.default_policy is not None))
+        if self.observability is not None:
+            # per-window stage timeline (DESIGN.md §9): one dict per
+            # WINDOW, so disabled mode allocates nothing
+            fl.tr = {"dispatch": t0,
+                     "t_local": None if t_local is None else float(t_local)}
+        return fl
 
     # -- runtime path: host half ---------------------------------------
     def _host_begin(self, fl: _InFlight) -> None:
@@ -763,6 +772,8 @@ class CascadeEngine:
         cand = cand[cand >= 0]          # eligible rows, ascending by conf
         fl.k = int(min(cand.size, fl.capacity, fl.real))
         fl.idx = cand[:fl.k]
+        if fl.tr is not None:
+            fl.tr["gate"] = self._clock()
 
         if fl.policed:
             # per-request policy pass (DESIGN.md §8): escalation
@@ -791,18 +802,21 @@ class CascadeEngine:
                 # over to the next policy candidate immediately. The
                 # merged RouteConstraint (cost cap / remaining deadline /
                 # hint) narrows the candidate set (DESIGN.md §8)
-                fl.backend = self.router.pick(self._window_constraint(fl))
+                fl.backend = self.router.pick(self._window_constraint(fl),
+                                              window=fl.seq)
                 marr = np.asarray(fl.miss)
                 sub_miss = jax.tree.map(lambda a: a[marr], sub)
                 if fl.backend is not None:
-                    fl.pending = (fl.backend.submit(sub_miss)
+                    fl.pending = (fl.backend.submit(sub_miss, fl.seq)
                                   if fl.asynchronous
-                                  else _Resolved(fl.backend.call(sub_miss)))
+                                  else _Resolved(
+                                      fl.backend.call(sub_miss, fl.seq)))
                     if fl.asynchronous:
                         # ready-set wakeup for the streaming drain
                         fl.pending.add_done_callback(
                             lambda _f: self._ready.set())
-                elif fl.asynchronous and self.router.acquire_replay_slot():
+                elif (fl.asynchronous
+                      and self.router.acquire_replay_slot(window=fl.seq)):
                     # every breaker refused: park the window with a
                     # bounded replay ticket — redeemed at its drain, when
                     # a breaker may have half-opened (DESIGN.md §7). The
@@ -818,6 +832,8 @@ class CascadeEngine:
                 # remote drain (DESIGN.md §8; the finalize half still
                 # recomputes, keeping FIFO results untouched)
                 self._early_decide(fl)
+        if fl.tr is not None and fl.k > 0:
+            fl.tr["route"] = self._clock()
         fl.remote_batch = None
         fl.host_done = True
 
@@ -987,9 +1003,10 @@ class CascadeEngine:
                     # half-open probe), billed to the replaying backend
                     fl.replay_ticket = False
                     fl.backend = self.router.redeem_replay(
-                        self._window_constraint(fl))
+                        self._window_constraint(fl), window=fl.seq)
                     if fl.backend is not None:
-                        fl.pending = _Resolved(fl.backend.call(fl.sub_miss))
+                        fl.pending = _Resolved(
+                            fl.backend.call(fl.sub_miss, fl.seq))
                     fl.sub_miss = None
                 if fl.pending is not None:
                     logits, ok = fl.pending.result()
@@ -1023,6 +1040,10 @@ class CascadeEngine:
         if self.controller is not None and self.controller.t_remote is not None:
             t_remote = self.controller.t_remote
         accepted = (~escalated) | (remote_conf > t_remote)
+        if fl.tr is not None:
+            if fl.k > 0:
+                fl.tr["remote"] = self._clock()
+            fl.tr["t_remote"] = float(t_remote)
 
         fl.remote_conf = remote_conf
         fl.n_sent, fl.n_failed, fl.n_hits = n_sent, n_failed, n_hits
@@ -1060,6 +1081,19 @@ class CascadeEngine:
                      "escalated": escalated, "accepted": accepted,
                      "disposition": disposition, "backend": row_backend,
                      "cost": row_cost}
+        if fl.tr is not None:
+            # window trace handed to the scheduler, which turns it into
+            # one span per request at hand-back (DESIGN.md §9). Row sets
+            # tell the span builder which stage a row went through:
+            # remote_rows attempted a billed remote call, hit_rows were
+            # served from cache.
+            fl.result["trace"] = {
+                "window": fl.seq,
+                "stages": fl.tr,
+                "remote_rows": {int(fl.idx[j]) for j in miss_set},
+                "hit_rows": {int(fl.idx[j]) for j in range(fl.k)
+                             if j not in miss_set and j not in fl.forced},
+            }
         fl.finalized = True
 
     # -- runtime path: commit half -------------------------------------
@@ -1095,17 +1129,57 @@ class CascadeEngine:
         # escalations = remote_calls + cache_hits + transport_failures
         # stays exact — DESIGN.md §8)
         escalations = fl.k - len(fl.forced)
+        rejected = int((~accepted[:fl.real]).sum())
         self._account(fl.real, escalations, fl.n_sent, fl.n_hits,
-                      fl.n_failed, int((~accepted[:fl.real]).sum()),
+                      fl.n_failed, rejected,
                       cost=window_cost,
                       remote_latency_s=fl.n_sent * lat_per)
-        self.stats.record_wall(self._clock() - fl.t0, fl.real)
+        wall_s = self._clock() - fl.t0
+        self.stats.record_wall(wall_s, fl.real)
+        if fl.tr is not None:
+            fl.tr["commit"] = self._clock()
+        if self.observability is not None:
+            self._publish_commit(fl, window_cost, escalations, rejected,
+                                 wall_s)
+            if self.controller is not None:
+                self.controller.event_window = fl.seq
         if self.controller is not None:
             self.controller.observe(fl.conf[:fl.real], escalations, fl.real,
                                     fl.remote_conf[:fl.real],
                                     cost=window_cost,
                                     policy_blocked=fl.blocked)
         return fl.result
+
+    def _publish_commit(self, fl: _InFlight, window_cost: float,
+                        escalations: int, rejected: int,
+                        wall_s: float) -> None:
+        """Commit-half metrics/events (observability enabled only).
+        Counters update strictly in commit (= submission) order with the
+        SAME per-window increments as ``_account``, so the running
+        ``cascade_cost_dollars_total`` float is bitwise-identical to
+        ``CascadeStats.total_cost`` at every commit boundary."""
+        m = self.observability.metrics
+        m.counter("cascade_windows_total").inc()
+        m.counter("cascade_requests_total").inc(fl.real)
+        m.counter("cascade_escalations_total").inc(escalations)
+        m.counter("cascade_remote_calls_total").inc(fl.n_sent)
+        m.counter("cascade_cache_hits_total").inc(fl.n_hits)
+        m.counter("cascade_transport_failures_total").inc(fl.n_failed)
+        m.counter("cascade_rejected_total").inc(rejected)
+        m.counter("cascade_cost_dollars_total").inc(window_cost)
+        names, counts = np.unique(
+            fl.result["disposition"][:fl.real].astype(str),
+            return_counts=True)
+        for d, c in zip(names, counts):
+            m.counter("cascade_disposition_total",
+                      disposition=str(d)).inc(int(c))
+        m.histogram("cascade_window_wall_seconds").observe(wall_s)
+        ev = self.observability.events
+        if ev is not None and fl.downgraded:
+            for i, d in sorted(fl.downgraded.items()):
+                ev.emit(EV_DEADLINE_DOWNGRADE if d == DEADLINE_LOCAL
+                        else EV_POLICY_DOWNGRADE,
+                        window=fl.seq, row=int(i), disposition=d)
 
     # ------------------------------------------------------------------
     def close(self, wait: bool = True) -> None:

@@ -18,8 +18,9 @@ dependent:
 * ``ServeConfig`` — one immutable facade subsuming the flag/constructor
   sprawl: ``serve.py`` builds exactly one and every runtime component
   (``CascadeEngine``, ``MicrobatchScheduler``, ``RemoteRouter``, the
-  budget controller, the response cache) is constructed *from* it. The
-  old keyword constructors survive one PR as thin deprecated shims.
+  budget controller, the response cache, the observability layer) is
+  constructed *from* it. The keyword constructors remain as the
+  low-level composition-root API for tests and bespoke wiring.
 
 Dispositions (``Response.disposition``) surface how each request was
 actually served — the billing attribution at the API boundary:
@@ -183,6 +184,10 @@ class ServeConfig:
     # -- per-request policy layer (DESIGN.md §8) ------------------------
     default_policy: RequestPolicy = field(default_factory=RequestPolicy)
     packing: str = "none"               # window packing: none | policy
+    # -- observability (DESIGN.md §9) -----------------------------------
+    observability: bool = False         # metrics + traces + event log
+    trace_capacity: int = 65536         # bounded TraceSink (spans kept)
+    event_capacity: int = 8192          # bounded EventLog (events kept)
 
     def __post_init__(self):
         if self.completion_mode not in ("fifo", "streaming"):
@@ -199,10 +204,12 @@ class ServeConfig:
                            or self.cost_budget is not None
                            or not self.default_policy.is_default
                            or self.packing != "none"
-                           or self.remotes):
+                           or self.remotes
+                           or self.observability):
             raise ValueError("fused bypasses the transport path: drop "
                              "adaptive/pipeline_depth/streaming/"
-                             "cost_budget/default_policy/packing/remotes")
+                             "cost_budget/default_policy/packing/remotes/"
+                             "observability")
 
     # -- component builders --------------------------------------------
     def build_router(self, remote_apply: Callable, **kw) -> RemoteRouter:
@@ -223,6 +230,18 @@ class ServeConfig:
             window=self.control_window,
             target_rejection_rate=self.target_rejection_rate,
             cost_budget_per_request=self.cost_budget))
+
+    def build_observability(self):
+        """Fully-enabled ``Observability`` facade (metrics + trace sink +
+        event log) sized from the config; None when disabled. The engine
+        installs it at construction (``from_config``), which wires the
+        router, every backend transport and the controller into the
+        shared event log (DESIGN.md §9)."""
+        if not self.observability:
+            return None
+        from repro.runtime.observability import Observability
+        return Observability.enabled(trace_capacity=self.trace_capacity,
+                                     event_capacity=self.event_capacity)
 
     def build_cache(self, **kw) -> RemoteResponseCache | None:
         """Response cache sized from the config (``key_fn`` /

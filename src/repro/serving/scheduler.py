@@ -113,11 +113,7 @@ class MicrobatchScheduler:
     def __init__(self, engine, fallback: Callable[[Request], int] | None = None,
                  pipeline_depth: int = 1, completion_mode: str = "fifo",
                  packing: str = "none",
-                 prior: Callable[[Request], float] | None = None,
-                 _from_config: bool = False):
-        if not _from_config:
-            from repro.serving.engine import _warn_legacy_ctor
-            _warn_legacy_ctor("MicrobatchScheduler")
+                 prior: Callable[[Request], float] | None = None):
         if completion_mode not in COMPLETION_MODES:
             raise ValueError(f"unknown completion_mode {completion_mode!r};"
                              f" choose from {COMPLETION_MODES}")
@@ -152,6 +148,10 @@ class MicrobatchScheduler:
         self.first_response_s: float | None = None
         self._flush_t0: float = 0.0
         self._clock = engine._clock
+        # observability (DESIGN.md §9): memoized per-response latency
+        # histogram handle; resolved lazily so installing the facade
+        # after scheduler construction still works. None while disabled.
+        self._lat_hist = None
 
     @classmethod
     def from_config(cls, engine, config: ServeConfig, *,
@@ -163,7 +163,7 @@ class MicrobatchScheduler:
         return cls(engine, fallback=fallback,
                    pipeline_depth=config.pipeline_depth,
                    completion_mode=config.completion_mode,
-                   packing=config.packing, prior=prior, _from_config=True)
+                   packing=config.packing, prior=prior)
 
     # -- admission ------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -258,6 +258,53 @@ class MicrobatchScheduler:
             self.first_response_s = self._clock() - self._flush_t0
         self.responses[resp.uid] = resp
         out.append(resp)
+        obs = self.engine.observability
+        if obs is not None:
+            h = self._lat_hist
+            if h is None:
+                h = self._lat_hist = obs.metrics.histogram(
+                    "cascade_request_latency_seconds")
+            h.observe(resp.latency_s)
+
+    # -- per-request trace spans (DESIGN.md §9) ------------------------
+    def _emit_span(self, resp: Response, req: Request, t_disp: float,
+                   tr: dict, window: int, handback: float, *,
+                   remote: bool, hit: bool) -> None:
+        """Assemble one request's span timeline from its window's stage
+        stamps. Stages are appended in canonical ``SPAN_STAGES`` order —
+        enqueue → pack → dispatch → gate → route → cache_hit/remote →
+        commit → hand-back — and each stamp was taken later than the one
+        before it, so timestamps are nondecreasing by construction.
+        ``commit`` is present whenever the window committed before the
+        row was handed back (always true for sync/FIFO drains; absent
+        for streaming rows emitted ahead of their window's commit)."""
+        stages = [["enqueue", req.t_enq], ["pack", t_disp],
+                  ["dispatch", tr["dispatch"]]]
+        if "gate" in tr:
+            stages.append(["gate", tr["gate"]])
+        if (remote or hit) and "route" in tr:
+            stages.append(["route", tr["route"]])
+            if hit:
+                # the lookup happened inside the gate→route interval;
+                # the route stamp is its completion time
+                stages.append(["cache_hit", tr["route"]])
+        if remote and "remote" in tr:
+            stages.append(["remote", tr["remote"]])
+        if "commit" in tr:
+            stages.append(["commit", tr["commit"]])
+        stages.append(["handback", handback])
+        self.engine.observability.trace.emit({
+            "uid": resp.uid, "window": window,
+            "disposition": resp.disposition, "backend": resp.backend,
+            "cost": resp.cost, "source": resp.source,
+            "t_local_gate": tr.get("t_local"),
+            "t_remote_gate": tr.get("t_remote"),
+            "stages": stages,
+        })
+
+    def _tracing(self) -> bool:
+        obs = self.engine.observability
+        return obs is not None and obs.trace is not None
 
     def _route(self, chunk: list[Request], res: dict,
                t_disp: float) -> list[Response]:
@@ -266,6 +313,7 @@ class MicrobatchScheduler:
         dispo = res.get("disposition")
         backend = res.get("backend")
         cost = res.get("cost")
+        trace = res.get("trace") if self._tracing() else None
         for i, req in enumerate(chunk):
             escalated = bool(res["escalated"][i])
             accepted = bool(res["accepted"][i])
@@ -296,6 +344,11 @@ class MicrobatchScheduler:
                             disposition=d, backend=b, cost=c,
                             queue_s=t_disp - req.t_enq)
             self._record(resp, out)
+            if trace is not None:
+                self._emit_span(resp, req, t_disp, trace["stages"],
+                                trace["window"], now,
+                                remote=i in trace["remote_rows"],
+                                hit=i in trace["hit_rows"])
         return out
 
     def flush(self, pipeline_depth: int | None = None) -> list[Response]:
@@ -411,16 +464,20 @@ class MicrobatchScheduler:
         drain)."""
         fl = w.fl
         now = self._clock()
+        tr = fl.tr if self._tracing() else None
         esc = {int(j) for j in fl.idx} if fl.k else set()
         for i, req in enumerate(w.chunk):
             if i in esc or i in w.emitted:
                 continue
-            self._record(Response(req.uid, int(fl.local_pred[i]), "local",
-                                  float(fl.conf[i]), float("inf"),
-                                  latency_s=now - req.t_enq,
-                                  disposition=fl.downgraded.get(i, LOCAL),
-                                  queue_s=w.t_disp - req.t_enq),
-                         out)
+            resp = Response(req.uid, int(fl.local_pred[i]), "local",
+                            float(fl.conf[i]), float("inf"),
+                            latency_s=now - req.t_enq,
+                            disposition=fl.downgraded.get(i, LOCAL),
+                            queue_s=w.t_disp - req.t_enq)
+            self._record(resp, out)
+            if tr is not None:
+                self._emit_span(resp, req, w.t_disp, tr, fl.seq, now,
+                                remote=False, hit=False)
             w.emitted.add(i)
         for e in fl.early:
             i = e["row"]
@@ -444,6 +501,9 @@ class MicrobatchScheduler:
                                 cost=e["cost"],
                                 queue_s=w.t_disp - req.t_enq)
             self._record(resp, out)
+            if tr is not None:
+                self._emit_span(resp, req, w.t_disp, tr, fl.seq, now,
+                                remote=False, hit=True)
             w.emitted.add(i)
         w.host_emitted = True
 
@@ -452,6 +512,7 @@ class MicrobatchScheduler:
         """Hand back the window's escalated rows once finalized."""
         fl = w.fl
         now = self._clock()
+        trace = res.get("trace") if self._tracing() else None
         for j in fl.idx:
             i = int(j)
             if i in w.emitted:
@@ -476,4 +537,9 @@ class MicrobatchScheduler:
                                 disposition=d, backend=b, cost=c,
                                 queue_s=w.t_disp - req.t_enq)
             self._record(resp, out)
+            if trace is not None:
+                self._emit_span(resp, req, w.t_disp, trace["stages"],
+                                trace["window"], now,
+                                remote=i in trace["remote_rows"],
+                                hit=i in trace["hit_rows"])
             w.emitted.add(i)

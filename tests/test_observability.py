@@ -1,0 +1,564 @@
+"""Cascade observability layer (DESIGN.md §9): metrics registry, event
+log and trace-sink units; per-request span completeness across every
+Response disposition path under FIFO, streaming and adversarial
+completion orders; breaker / router / replay / controller / downgrade
+event telemetry; and the disabled-mode zero-perturbation contract
+(observability off must be bitwise-identical to the seed behaviour)."""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime import (AdaptiveController, ControllerConfig,
+                           RemoteBackend, RemoteResponseCache, RemoteRouter,
+                           RemoteTimeout, TransportConfig)
+from repro.runtime.observability import (EV_BREAKER_CLOSE,
+                                         EV_BREAKER_HALF_OPEN,
+                                         EV_BREAKER_OPEN,
+                                         EV_CONTROLLER_DRIFT,
+                                         EV_CONTROLLER_UPDATE,
+                                         EV_DEADLINE_DOWNGRADE,
+                                         EV_POLICY_DOWNGRADE,
+                                         EV_REPLAY_PARKED, EV_REPLAY_SERVED,
+                                         EV_ROUTER_FAILBACK,
+                                         EV_ROUTER_FAILOVER, SPAN_STAGES,
+                                         EventLog, MetricsRegistry,
+                                         Observability, TraceSink)
+from repro.serving import RequestPolicy, ServeConfig
+from repro.serving.engine import BILLING_FIELDS
+from repro.serving.policy import (CACHED, DEADLINE_LOCAL, LOCAL,
+                                  POLICY_LOCAL, REJECTED, REMOTE)
+from repro.serving.scheduler import Request
+
+STAGE_ORDER = {s: i for i, s in enumerate(SPAN_STAGES)}
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def quiet_tconf(**kw):
+    base = dict(retry_backoff_s=0.0, max_retries=0, breaker_failures=10**6,
+                timeout_s=60.0)
+    base.update(kw)
+    return TransportConfig(**base)
+
+
+def build(remote=remote_apply, *, router=None, cache=None,
+          observability=True, **cfg_kw):
+    base = dict(batch_size=8, remote_fraction_budget=0.5, t_remote=0.0,
+                pipeline_depth=2, cache_size=0, transport=quiet_tconf(),
+                observability=observability)
+    base.update(cfg_kw)
+    cfg = ServeConfig(**base)
+    kw = {}
+    if router is not None:
+        kw["transport"] = router
+        remote = None
+    if cache is not None:
+        kw["cache"] = cache
+    engine, sched = cfg.build(local_apply, remote, fallback=lambda r: -7,
+                              **kw)
+    return sched, engine
+
+
+def serve_all(sched, xs, policies=None):
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row,
+                             policy=policies[i] if policies else None))
+    return sched.flush()
+
+
+def assert_valid_spans(spans, responses):
+    """Exactly one span per response; stage names in canonical SPAN_STAGES
+    order with nondecreasing timestamps; disposition/cost agree with the
+    Response the span describes."""
+    assert sorted(s["uid"] for s in spans) \
+        == sorted(r.uid for r in responses)
+    by_uid = {r.uid: r for r in responses}
+    for s in spans:
+        names = [n for n, _ in s["stages"]]
+        ts = [t for _, t in s["stages"]]
+        assert len(set(names)) == len(names), s
+        assert names == sorted(names, key=STAGE_ORDER.__getitem__), s
+        assert ts == sorted(ts), s
+        assert names[0] == "enqueue" and names[-1] == "handback", s
+        r = by_uid[s["uid"]]
+        assert s["disposition"] == r.disposition
+        assert s["cost"] == r.cost
+        assert s["source"] == r.source
+
+
+def stages_of(spans, uid):
+    (s,) = [s for s in spans if s["uid"] == uid]
+    return [n for n, _ in s["stages"]]
+
+
+# ------------------------------------------------------- metrics registry
+
+def test_counter_gauge_histogram_basics():
+    reg = MetricsRegistry()
+    reg.counter("req_total").inc()
+    reg.counter("req_total").inc(3)
+    assert reg.counter("req_total").value == 4
+    reg.counter("calls", backend="a").inc()
+    reg.counter("calls", backend="b").inc(2)
+    assert reg.counter("calls", backend="a").value == 1
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    for v in (0.05, 0.5, 5.0):
+        h.observe(v)
+    assert h.total == 3 and h.cumulative() == [1, 2]
+    assert h.sum == 0.05 + 0.5 + 5.0
+    snap = reg.snapshot()
+    assert snap["counters"]['calls{backend="b"}'] == 2
+    assert snap["histograms"]["lat"]["count"] == 3
+    assert snap["histograms"]["lat"]["buckets"] == {"0.1": 1, "1.0": 2}
+
+
+def test_snapshot_omits_unobserved_gauges():
+    # the empty-stats contract: a gauge never set must be ABSENT from
+    # snapshots and exposition, not a flattering 0.0
+    reg = MetricsRegistry()
+    reg.gauge("never_set")
+    reg.gauge("set_then_cleared").set(1.0)
+    reg.gauge("set_then_cleared").set(None)
+    reg.gauge("observed").set(0.25)
+    snap = reg.snapshot()
+    assert snap["gauges"] == {"observed": 0.25}
+    text = reg.render_prometheus()
+    assert "never_set" not in text and "set_then_cleared" not in text
+    assert "observed 0.25" in text
+
+
+def test_prometheus_rendering():
+    reg = MetricsRegistry()
+    reg.counter("calls", backend="a").inc(2)
+    reg.counter("calls", backend="b").inc()
+    h = reg.histogram("lat", buckets=(0.1, 1.0))
+    h.observe(0.05)
+    h.observe(3.0)
+    text = reg.render_prometheus()
+    lines = text.splitlines()
+    assert lines.count("# TYPE calls counter") == 1    # one header/name
+    assert 'calls{backend="a"} 2' in lines
+    assert "# TYPE lat histogram" in lines
+    assert 'lat_bucket{le="0.1"} 1' in lines
+    assert 'lat_bucket{le="1"} 1' in lines              # cumulative
+    assert 'lat_bucket{le="+Inf"} 2' in lines
+    assert "lat_count 2" in lines
+    assert any(line.startswith("lat_sum ") for line in lines)
+
+
+def test_collectors_sample_at_snapshot_time():
+    reg = MetricsRegistry()
+    live = {"v": 1.0}
+    reg.register_collector(lambda r: r.gauge("live").set(live["v"]))
+    assert reg.snapshot()["gauges"]["live"] == 1.0
+    live["v"] = 7.0                     # hot path never touched the gauge
+    assert reg.snapshot()["gauges"]["live"] == 7.0
+
+
+# ------------------------------------------------------------- event log
+
+def test_event_log_seq_order_filters_and_bound():
+    log = EventLog(capacity=4, clock=time.monotonic)
+    for i in range(6):
+        log.emit("tick", window=i, backend="a" if i % 2 else "b")
+    assert log.total == 6 and log.dropped == 2
+    evs = log.events()
+    assert [e["seq"] for e in evs] == [2, 3, 4, 5]   # oldest evicted
+    assert all(e["window"] == e["seq"] for e in evs)
+    assert [e["seq"] for e in log.events(backend="a")] == [3, 5]
+    assert log.counts() == {"tick": 4}
+    assert log.first_seq("tick", backend="b") == 2
+    assert log.first_seq("nope") is None
+
+
+def test_event_log_cross_thread_seq_unique():
+    # the ordering contract: seq is a global monotonic counter assigned
+    # under the log's lock, usable across pool + engine threads
+    log = EventLog(capacity=4096)
+    n_threads, per = 8, 50
+
+    def emitter(tag):
+        for _ in range(per):
+            log.emit("e", backend=tag)
+
+    threads = [threading.Thread(target=emitter, args=(str(i),))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    seqs = sorted(e["seq"] for e in log.events())
+    assert seqs == list(range(n_threads * per))
+
+
+# ------------------------------------------------------------ trace sink
+
+def test_trace_sink_bounded_and_exports(tmp_path):
+    sink = TraceSink(capacity=2)
+    span = {"uid": 0, "window": 1, "disposition": "LOCAL", "cost": 0.0,
+            "stages": [["enqueue", 1.0], ["dispatch", 2.0],
+                       ["handback", 3.0]]}
+    sink.emit(span)
+    sink.emit({**span, "uid": 1})
+    sink.emit({**span, "uid": 2})               # past capacity
+    assert len(sink) == 2 and sink.dropped == 1
+
+    jl = tmp_path / "t.jsonl"
+    assert sink.write_jsonl(str(jl)) == 2
+    rows = [json.loads(line) for line in jl.read_text().splitlines()]
+    assert [r["uid"] for r in rows] == [0, 1]
+
+    ch = tmp_path / "t.json"
+    n_ev = sink.write_chrome_trace(str(ch))
+    doc = json.loads(ch.read_text())
+    # one complete "X" slice per consecutive stage pair
+    assert n_ev == len(doc["traceEvents"]) == 2 * 2
+    ev = doc["traceEvents"][0]
+    assert ev["ph"] == "X" and ev["name"] == "dispatch"
+    assert ev["ts"] == 0.0 and ev["dur"] == 1e6     # seconds -> µs
+    assert ev["tid"] == 1
+
+
+# ----------------------------------- span timelines per disposition path
+
+def test_spans_trusted_local_and_escalated_fifo():
+    rng = np.random.default_rng(0)
+    xs, _ = make_stream(rng, 32)
+    sched, engine = build(completion_mode="fifo")
+    resp = serve_all(sched, xs)
+    spans = engine.observability.trace.spans()
+    assert_valid_spans(spans, resp)
+    for s in spans:
+        names = [n for n, _ in s["stages"]]
+        if s["disposition"] == REMOTE:
+            assert {"route", "remote", "commit"} <= set(names)
+            assert s["backend"] == "remote"
+            assert s["t_remote_gate"] is not None
+        else:
+            assert s["disposition"] == LOCAL
+            assert "remote" not in names and "route" not in names
+        assert "commit" in names            # FIFO: commit precedes drain
+    engine.close()
+
+
+def test_spans_streaming_and_adversarial_completion_orders():
+    """Streaming hand-back with later windows completing FIRST: every
+    request still gets exactly one monotonic span; trusted-local rows
+    emitted ahead of their window's commit simply omit the commit
+    stage (documented §9 caveat)."""
+    rng = np.random.default_rng(1)
+    xs, _ = make_stream(rng, 64)
+    calls = {"n": 0}
+    lock = threading.Lock()
+
+    def reordering_remote(x):
+        with lock:
+            calls["n"] += 1
+            i = calls["n"]
+        time.sleep(0.03 * max(0, 4 - i))    # first windows finish last
+        return remote_apply(x)
+
+    sched, engine = build(reordering_remote, pipeline_depth=4,
+                          completion_mode="streaming")
+    resp = serve_all(sched, xs)
+    spans = engine.observability.trace.spans()
+    assert_valid_spans(spans, resp)
+    remote_spans = [s for s in spans if s["disposition"] == REMOTE]
+    assert remote_spans and all(
+        "remote" in [n for n, _ in s["stages"]] for s in remote_spans)
+    engine.close()
+
+
+def test_spans_cache_hit_path():
+    rng = np.random.default_rng(2)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    cache = RemoteResponseCache(64)
+    sched, engine = build(cache=cache)
+    serve_all(sched, xs)                        # all miss, all billed
+    engine.observability.trace._spans.clear()
+    resp = serve_all(sched, xs)                 # identical content: hits
+    hits = [r for r in resp if r.disposition == CACHED]
+    assert hits
+    spans = engine.observability.trace.spans()
+    assert_valid_spans(spans, resp)
+    for r in hits:
+        names = stages_of(spans, r.uid)
+        assert "cache_hit" in names and "remote" not in names
+    engine.close()
+
+
+def test_spans_policy_paths_and_downgrade_events():
+    """POLICY_LOCAL / DEADLINE_LOCAL / REJECTED rows each produce one
+    span that never touches route/remote, and every downgrade lands in
+    the event log with its window and row."""
+    rng = np.random.default_rng(3)
+    xs, _ = make_stream(rng, 24, hard_frac=1.0)
+    pol = ([RequestPolicy(escalation="never")] * 8
+           + [RequestPolicy(deadline_s=1e-9)] * 8
+           + [RequestPolicy(deadline_s=1e-9, on_miss="reject")] * 8)
+    sched, engine = build(remote_fraction_budget=1.0)
+    resp = serve_all(sched, xs, pol)
+    spans = engine.observability.trace.spans()
+    assert_valid_spans(spans, resp)
+    disp = {r.uid: r.disposition for r in resp}
+    assert {disp[u] for u in range(8)} == {POLICY_LOCAL}
+    assert {disp[u] for u in range(8, 16)} == {DEADLINE_LOCAL}
+    assert {disp[u] for u in range(16, 24)} == {REJECTED}
+    for s in spans:
+        names = [n for n, _ in s["stages"]]
+        assert "remote" not in names and "route" not in names
+
+    ev = engine.observability.events
+    pol_ev = ev.events(EV_POLICY_DOWNGRADE)
+    dl_ev = ev.events(EV_DEADLINE_DOWNGRADE)
+    assert len(pol_ev) == 8 and len(dl_ev) == 8
+    for e in pol_ev + dl_ev:
+        assert e["window"] is not None and "row" in e
+    assert {e["disposition"] for e in pol_ev} == {POLICY_LOCAL}
+    assert {e["disposition"] for e in dl_ev} == {DEADLINE_LOCAL}
+    engine.close()
+
+
+def test_replay_redemption_events_and_window_trace():
+    """The (unrouted) replay path: a window parked while every breaker
+    is open must log replay_parked, then replay_served when the drain's
+    half-open probe redeems it — and its window trace still carries the
+    remote stage (the rows were billed and served)."""
+    t = {"now": 0.0}
+    down = {"on": True}
+
+    def fn(x):
+        if down["on"]:
+            raise RemoteTimeout("outage")
+        return remote_apply(x)
+
+    backend = RemoteBackend(
+        "only", fn, quiet_tconf(breaker_failures=1, breaker_reset_s=1.0),
+        cost_per_request=0.004, clock=lambda: t["now"])
+    router = RemoteRouter([backend])
+    rng = np.random.default_rng(10)
+    xs, _ = make_stream(rng, 8, hard_frac=1.0)
+    _, engine = build(router=router)
+    obs = engine.observability
+
+    # window 1 fails on the wire -> breaker opens
+    engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    engine.flush_dispatch()
+    assert engine.complete_ready(block=True)
+    # window 2 submitted while open -> parked with a replay ticket
+    fl = engine.begin_serve({"local": xs, "remote": xs}, real_rows=8)
+    engine.flush_dispatch()
+    assert fl.replay_ticket
+    # outage ends, reset elapses mid-flight -> drain redeems the ticket
+    down["on"] = False
+    t["now"] += 2.0
+    ((_, res),) = engine.complete_ready(block=True)
+    assert bool(res["accepted"].all())
+    assert "remote" in res["trace"]["stages"]
+    stamps = res["trace"]["stages"]
+    assert stamps["dispatch"] <= stamps["gate"] <= stamps["remote"] \
+        <= stamps["commit"]
+
+    ev = obs.events
+    assert ev.first_seq(EV_BREAKER_OPEN, "only") is not None
+    parked = ev.first_seq(EV_REPLAY_PARKED)
+    served = ev.first_seq(EV_REPLAY_SERVED)
+    assert parked is not None and served is not None
+    assert ev.first_seq(EV_BREAKER_OPEN, "only") < parked < served
+    assert ev.events(EV_REPLAY_SERVED)[0]["backend"] == "only"
+    engine.close()
+
+
+# ------------------------------------------- metrics <-> stats reconcile
+
+def test_metrics_counters_bitwise_match_stats():
+    rng = np.random.default_rng(4)
+    xs, _ = make_stream(rng, 48)
+    sched, engine = build(completion_mode="streaming")
+    resp = serve_all(sched, xs)
+    st = engine.stats
+    snap = engine.observability.metrics.snapshot()
+    c = snap["counters"]
+    assert c["cascade_requests_total"] == st.requests
+    assert c["cascade_windows_total"] == len(st.wall_samples)
+    assert c["cascade_escalations_total"] == st.escalations
+    assert c["cascade_remote_calls_total"] == st.remote_calls
+    assert c["cascade_cache_hits_total"] == st.cache_hits
+    assert c["cascade_transport_failures_total"] == st.transport_failures
+    # commit-order accumulation: bitwise equality, not approx
+    assert c["cascade_cost_dollars_total"] == st.total_cost
+    disp = {k: v for k, v in c.items()
+            if k.startswith("cascade_disposition_total")}
+    assert sum(disp.values()) == st.requests
+    hist = snap["histograms"]["cascade_request_latency_seconds"]
+    assert hist["count"] == len(resp)
+    assert snap["histograms"]["cascade_window_wall_seconds"]["count"] \
+        == len(st.wall_samples)
+    # per-request span costs also reconcile with billing
+    spans = engine.observability.trace.spans()
+    assert abs(sum(s["cost"] for s in spans) - st.total_cost) < 1e-9
+    # derived gauges sampled at snapshot time
+    g = snap["gauges"]
+    assert g["cascade_escalation_fraction"] == st.escalation_fraction
+    assert g['backend_breaker_state{backend="remote"}'] == 0
+    assert g["cache_hit_ratio"] if engine.cache else True
+    engine.close()
+
+
+def test_observability_off_is_bitwise_identical_and_allocation_free():
+    rng = np.random.default_rng(5)
+    xs, _ = make_stream(rng, 32)
+    s_off, e_off = build(observability=False)
+    s_on, e_on = build(observability=True)
+    r_off = serve_all(s_off, xs)
+    r_on = serve_all(s_on, xs)
+    assert [(r.uid, r.prediction, r.source, r.disposition, r.cost)
+            for r in r_off] \
+        == [(r.uid, r.prediction, r.source, r.disposition, r.cost)
+            for r in r_on]
+    for f in BILLING_FIELDS:
+        assert getattr(e_off.stats, f) == getattr(e_on.stats, f), f
+    assert e_off.stats.per_backend == e_on.stats.per_backend
+    assert e_off.observability is None
+    # disabled mode carries NO per-window trace state and the result
+    # dict has no trace payload (zero per-row allocations on the hot
+    # path — the engine guards on one attribute test)
+    res_off = e_off.serve({"local": xs[:8], "remote": xs[:8]})
+    res_on = e_on.serve({"local": xs[:8], "remote": xs[:8]})
+    assert "trace" not in res_off and "trace" in res_on
+    e_off.close()
+    e_on.close()
+
+
+# ------------------------------------------------- component event wiring
+
+def test_breaker_transition_events_in_order():
+    t = {"now": 0.0}
+    down = {"on": True}
+
+    def fn(x):
+        if down["on"]:
+            raise RemoteTimeout("down")
+        return remote_apply(x)
+
+    backend = RemoteBackend(
+        "b0", fn, quiet_tconf(breaker_failures=2, breaker_reset_s=1.0),
+        clock=lambda: t["now"])
+    log = EventLog()
+    backend.transport.events = log
+    backend.transport.event_source = "b0"
+    x = np.float32(np.eye(4))
+    for _ in range(2):                      # 2 failures -> OPEN
+        backend.call(x)
+    down["on"] = False
+    t["now"] += 2.0                         # reset elapses
+    backend.call(x)                         # half-open probe -> CLOSED
+    opens = log.events(EV_BREAKER_OPEN, "b0")
+    halfs = log.events(EV_BREAKER_HALF_OPEN, "b0")
+    closes = log.events(EV_BREAKER_CLOSE, "b0")
+    assert len(opens) == len(halfs) == len(closes) == 1
+    assert opens[0]["seq"] < halfs[0]["seq"] < closes[0]["seq"]
+    assert opens[0]["prev"] == "closed" and opens[0]["failures"] >= 2
+    assert halfs[0]["prev"] == "open"
+    assert closes[0]["prev"] == "half_open"
+    backend.transport.shutdown()
+
+
+def test_router_failover_and_failback_events():
+    a = RemoteBackend("a", remote_apply, quiet_tconf(breaker_failures=1),
+                      cost_per_request=0.001)
+    b = RemoteBackend("b", remote_apply, quiet_tconf(),
+                      cost_per_request=0.009)
+    router = RemoteRouter([a, b], policy="cheapest-available")
+    log = EventLog()
+    router.events = log
+    assert router.pick(window=0) is a       # healthy: cheap primary
+    a.breaker.record_failure()              # open the cheap breaker
+    assert router.pick(window=1) is b
+    a.breaker.record_success()              # recover
+    assert router.pick(window=2) is a
+    fo = log.events(EV_ROUTER_FAILOVER)
+    fb = log.events(EV_ROUTER_FAILBACK)
+    assert len(fo) == 1 and len(fb) == 1
+    assert fo[0]["window"] == 1 and fo[0]["backend"] == "b"
+    assert fb[0]["window"] == 2 and fb[0]["backend"] == "a"
+    assert fo[0]["seq"] < fb[0]["seq"]
+    a.transport.shutdown()
+    b.transport.shutdown()
+
+
+def test_controller_update_and_drift_events():
+    rng = np.random.default_rng(6)
+    ctl = AdaptiveController(ControllerConfig(
+        target_remote_fraction=0.2, window=64))
+    log = EventLog()
+    ctl.events = log
+
+    def run_phase(easy_frac, batches):
+        for _ in range(batches):
+            easy = rng.random(32) < easy_frac
+            conf = np.where(easy, rng.uniform(0.8, 1.0, 32),
+                            rng.uniform(0.3, 0.7, 32))
+            t = ctl.t_local
+            k = min(ctl.capacity(32),
+                    32 if t is None else int((conf < t).sum()))
+            ctl.observe(conf, k, 32)
+
+    run_phase(0.9, 32)                  # settle
+    run_phase(0.5, 32)                  # drift: harder mix
+    updates = log.events(EV_CONTROLLER_UPDATE)
+    drifts = log.events(EV_CONTROLLER_DRIFT)
+    assert len(updates) == ctl.state.windows
+    assert len(drifts) == ctl.state.drift_events >= 1
+    d = drifts[0]
+    assert d["psi"] > d["threshold"]
+    # the drift is sequenced before the control update that absorbs it
+    first_after = [u for u in updates if u["seq"] > d["seq"]]
+    assert first_after
+    engine_updates = [u["ema_fraction"] for u in updates]
+    assert all(isinstance(v, float) for v in engine_updates)
+
+
+def test_install_shares_one_event_log_across_components():
+    rng = np.random.default_rng(7)
+    xs, _ = make_stream(rng, 16)
+    a = RemoteBackend("a", remote_apply, quiet_tconf())
+    router = RemoteRouter([a])
+    ctl = AdaptiveController(ControllerConfig(target_remote_fraction=0.3,
+                                              window=8))
+    cfg = ServeConfig(batch_size=8, remote_fraction_budget=0.5,
+                      t_remote=0.0, pipeline_depth=1, cache_size=16,
+                      observability=True, transport=quiet_tconf())
+    engine, sched = cfg.build(local_apply, None, transport=router,
+                              controller=ctl, fallback=lambda r: -7)
+    obs = engine.observability
+    assert obs is not None
+    assert router.events is obs.events
+    assert a.transport.events is obs.events
+    assert a.transport.event_source == "a"
+    assert ctl.events is obs.events
+    serve_all(sched, xs)
+    # controller updates landed in the shared log with the window id
+    ups = obs.events.events(EV_CONTROLLER_UPDATE)
+    assert ups and all(u["window"] is not None for u in ups)
+    engine.close()

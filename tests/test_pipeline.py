@@ -265,10 +265,12 @@ def test_wall_clock_latency_tracked_alongside_modelled():
     tr.shutdown()
 
 
-def test_wall_stats_empty_percentile_is_zero():
+def test_wall_stats_empty_render_as_none():
+    # empty stats must be ABSENT, not a flattering 0.0 (DESIGN.md §9)
     st = CascadeStats()
-    assert st.wall_percentile(50) == 0.0
-    assert st.mean_wall_latency_s == 0.0
+    assert st.wall_percentile(50) is None
+    assert st.mean_wall_latency_s is None
+    assert st.mean_latency_s is None
 
 
 # ------------------------------------------------ batched cache keys

@@ -3,14 +3,12 @@ edge cases (deadline shorter than the local forward, escalation="never"
 under an untrusted gate, cost_cap=0 forcing local-only, mixed-policy
 windows preserving bitwise billing identity), deadline-vs-EMA downgrades,
 constraint-aware + weighted routing, policy-aware window packing, the
-calibration-table escalation prior, Response billing attribution, and
-the one-PR constructor deprecation shims."""
+calibration-table escalation prior, and Response billing attribution."""
 
 from __future__ import annotations
 
 import threading
 import time
-import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -21,11 +19,10 @@ from repro.runtime import (AdaptiveController, ControllerConfig,
                            RouteConstraint, TransportConfig,
                            fit_escalation_prior)
 from repro.serving import RemoteSpec, RequestPolicy, ServeConfig
-from repro.serving.engine import (BILLING_FIELDS, CascadeEngine,
-                                  _reset_legacy_ctor_warnings)
+from repro.serving.engine import BILLING_FIELDS
 from repro.serving.policy import (CACHED, DEADLINE_LOCAL, LOCAL,
                                   POLICY_LOCAL, REJECTED, REMOTE)
-from repro.serving.scheduler import MicrobatchScheduler, Request
+from repro.serving.scheduler import Request
 
 
 def local_apply(x):
@@ -143,27 +140,6 @@ def test_serve_config_overrides():
     with pytest.raises(ValueError):
         ServeConfig(fused=True,
                     default_policy=RequestPolicy(deadline_s=1.0))
-
-
-def test_legacy_ctors_warn_once_and_config_path_is_silent():
-    _reset_legacy_ctor_warnings()
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        eng = CascadeEngine(local_apply, remote_apply, batch_size=8,
-                            remote_fraction_budget=0.5, t_remote=0.0)
-        CascadeEngine(local_apply, remote_apply, batch_size=8,
-                      remote_fraction_budget=0.5, t_remote=0.0)
-        MicrobatchScheduler(eng)
-        MicrobatchScheduler(eng)
-    dep = [w for w in rec if issubclass(w.category, DeprecationWarning)]
-    # once per class, not once per construction
-    assert len(dep) == 2
-    assert "ServeConfig" in str(dep[0].message)
-    _reset_legacy_ctor_warnings()
-    with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
-        sched, engine = build()       # the ServeConfig path never warns
-        engine.close()
 
 
 # ----------------------------------------- policy edge-case enforcement
