@@ -1,0 +1,386 @@
+"""Trace-driven load + chaos bench (ISSUE 7 acceptance; DESIGN.md §10).
+
+A diurnal open-loop trace (valley 24 rps, peak 128 rps — the peak lands
+mid-run) is served through the full runtime stack — two-backend router,
+admission control, observability — while a seeded ``ChaosSchedule``
+scripts five episodes of remote-tier misbehaviour on a virtual clock:
+
+    10-16 s  brownout-primary   80% of primary calls fail
+    20-26 s  ramp-primary       +30 ms latency, ramping in
+    30-34 s  blackout           BOTH backends hard down (peak load!)
+    40-46 s  flap-primary       1 s down / 1 s up link flapping
+    50-54 s  storm-primary      every primary call times out (+20 ms)
+
+Everything runs in virtual time (``VirtualClock`` drives the engine,
+both transports and the chaos wrapper), with ``pipeline_depth=1`` so
+window completion is serialised behind the driver: the whole scenario
+— arrivals, fault draws, breaker transitions, sheds — is a pure
+function of the seeds. The bench VERIFIES exactly that, plus the ISSUE
+7 acceptance criteria:
+
+  * deterministic replay — the full scenario runs TWICE and every
+    response (prediction/disposition/cost/latency), billing field,
+    admission counter, chaos injection count and event-log count must
+    match bit for bit;
+  * causally ordered events — each scripted episode's
+    ``chaos_episode_begin`` precedes the breaker open it causes, which
+    precedes the router failover; ``open < half_open < close`` and
+    ``failover < failback`` per backend; replay tickets park only
+    after the correlated blackout begins;
+  * zero silent drops — every submitted uid is answered exactly once
+    (shed requests included, at $0), and shed + served counts
+    reconcile bitwise with ``CascadeStats`` billing;
+  * recovery — no breaker is stuck open once chaos ends.
+
+Machine-readable results go to ``BENCH_chaos.json`` (gated in CI by
+``check_regression.py --chaos``); the full event log of run A goes to
+``BENCH_chaos_events.jsonl`` (uploaded as a CI artifact).
+
+    PYTHONPATH=src python -m benchmarks.chaos_bench \
+        [--duration 60] [--seed 7] [--json BENCH_chaos.json] \
+        [--events-jsonl BENCH_chaos_events.jsonl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.loadgen import generate_trace, make_features, segments
+from repro.runtime import (ChaosEpisode, ChaosSchedule, RemoteBackend,
+                           RemoteRouter, TransportConfig, VirtualClock)
+from repro.runtime.transport import CLOSED
+from repro.serving import ServeConfig
+from repro.serving.engine import BILLING_FIELDS
+from repro.serving.policy import REJECTED, SHED
+from repro.serving.scheduler import Request
+
+BATCH = 32
+NCLS = 8
+TARGET = 0.4                    # escalation fraction (capacity-k)
+SEGMENT_S = 1.0                 # drive-loop granularity (virtual)
+BASE_RATE, PEAK_RATE = 24.0, 128.0
+ADMISSION_LIMIT = 96            # 3 windows of queue, soft watermark 48
+PRIMARY_COST, PRIMARY_LAT = 0.002, 0.08
+SECONDARY_COST, SECONDARY_LAT = 0.008, 0.02
+BREAKER_RESET_S = 1.0
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def make_episodes(duration_s: float) -> tuple[ChaosEpisode, ...]:
+    """The scripted scenario, scaled to fit a shortened ``--duration``
+    (episodes keep their order and relative placement)."""
+    s = duration_s / 60.0
+    return (
+        ChaosEpisode("brownout", 10.0 * s, 6.0 * s,
+                     backends=("primary",), rate=0.8,
+                     name="brownout-primary"),
+        ChaosEpisode("latency_ramp", 20.0 * s, 6.0 * s,
+                     backends=("primary",), extra_latency_s=0.030,
+                     name="ramp-primary"),
+        ChaosEpisode("outage", 30.0 * s, 4.0 * s, name="blackout"),
+        ChaosEpisode("flap", 40.0 * s, 6.0 * s, backends=("primary",),
+                     period_s=2.0 * s, name="flap-primary"),
+        ChaosEpisode("timeout_storm", 50.0 * s, 4.0 * s,
+                     backends=("primary",), extra_latency_s=0.020,
+                     name="storm-primary"),
+    )
+
+
+def build_stack(clock: VirtualClock, seed: int, duration_s: float):
+    """Fresh engine + scheduler + chaos-wrapped router on ``clock``."""
+    def primary_fn(x):
+        return 5.0 * np.asarray(x)
+
+    def secondary_fn(x):
+        return 5.0 * np.asarray(x)
+
+    tconf = TransportConfig(max_in_flight=BATCH, max_retries=0,
+                            retry_backoff_s=0.0, timeout_s=10.0,
+                            breaker_failures=2,
+                            breaker_reset_s=BREAKER_RESET_S)
+    router = RemoteRouter(
+        [RemoteBackend("primary", primary_fn, tconf,
+                       cost_per_request=PRIMARY_COST,
+                       latency_s=PRIMARY_LAT, clock=clock,
+                       sleep=clock.sleep),
+         RemoteBackend("secondary", secondary_fn, tconf,
+                       cost_per_request=SECONDARY_COST,
+                       latency_s=SECONDARY_LAT, clock=clock,
+                       sleep=clock.sleep)],
+        policy="cheapest-available")
+    schedule = ChaosSchedule(make_episodes(duration_s), seed=seed)
+    schedule.wrap_router(router)
+    cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=TARGET,
+                      t_remote=0.0, pipeline_depth=1, cache_size=0,
+                      admission_limit=ADMISSION_LIMIT,
+                      admission_soft_ratio=0.5,
+                      observability=True, event_capacity=65536)
+    engine, sched = cfg.build(local_apply, transport=router,
+                              fallback=lambda r: -1, clock=clock)
+    return engine, sched, router, schedule
+
+
+def drive(trace, xs, seed: int):
+    """One full scenario run: returns everything the checks compare."""
+    clock = VirtualClock()
+    engine, sched, router, schedule = build_stack(clock, seed,
+                                                  trace.duration_s)
+    responses = []
+    t0 = time.perf_counter()
+    for t_end, bucket in segments(trace, SEGMENT_S):
+        for tr in bucket:
+            clock.advance_to(tr.t_arrival_s)
+            sched.submit(Request(uid=tr.uid, local_input=xs[tr.uid],
+                                 remote_input=xs[tr.uid],
+                                 policy=tr.policy))
+            # (a shed response returned here is re-delivered by flush —
+            # collecting flush output alone still covers every uid)
+        clock.advance_to(t_end)
+        responses.extend(sched.flush())
+    wall = time.perf_counter() - t0
+    ev = engine.observability.events
+    schedule.finalize(ev, now=clock())
+    breaker_states = {b.name: b.transport.breaker.state
+                      for b in router.backends}
+    engine.close()
+    return {"engine": engine, "sched": sched, "router": router,
+            "schedule": schedule, "events": ev, "wall": wall,
+            "responses": responses, "breaker_states": breaker_states}
+
+
+def _digest(run) -> dict:
+    """Everything that must replay bit-identically across runs."""
+    st = run["engine"].stats
+    ad = run["sched"].admission
+    ch = run["schedule"].stats
+    return {
+        "responses": [(r.uid, int(r.prediction), r.source, r.disposition,
+                       r.backend, round(r.cost, 12),
+                       round(r.latency_s, 9))
+                      for r in sorted(run["responses"],
+                                      key=lambda r: r.uid)],
+        "billing": {f: getattr(st, f) for f in BILLING_FIELDS},
+        "per_backend": {k: (v.remote_calls, v.cache_hits,
+                            v.transport_failures, round(v.cost, 12))
+                        for k, v in sorted(st.per_backend.items())},
+        "admission": {"submitted": ad.submitted, "admitted": ad.admitted,
+                      "degraded": ad.degraded, "shed": ad.shed,
+                      "shed_reasons": dict(sorted(
+                          ad.shed_reasons.items())),
+                      "degrade_reasons": dict(sorted(
+                          ad.degrade_reasons.items()))},
+        "chaos": {"calls": ch.calls, "injected": ch.injected,
+                  "delayed": ch.delayed,
+                  "by_episode": dict(sorted(ch.by_episode.items())),
+                  "by_kind": dict(sorted(ch.by_kind.items()))},
+        "event_counts": dict(sorted(run["events"].counts().items())),
+    }
+
+
+def _causality(run) -> dict:
+    """Per-episode cause-to-effect sequencing in the shared event log."""
+    ev = run["events"]
+    begin = {e["episode"]: e["seq"]
+             for e in ev.events("chaos_episode_begin")}
+    ended = {e["episode"] for e in ev.events("chaos_episode_end")}
+    p_open = ev.first_seq("breaker_open", "primary")
+    s_open = ev.first_seq("breaker_open", "secondary")
+    p_half = ev.first_seq("breaker_half_open", "primary")
+    p_close = ev.first_seq("breaker_close", "primary")
+    failover = ev.first_seq("router_failover")
+    failback = ev.first_seq("router_failback")
+    parked = ev.first_seq("replay_parked")
+    names = [ep.name for ep in run["schedule"].episodes]
+    seqs = {"episode_begin": begin, "primary_open": p_open,
+            "secondary_open": s_open, "primary_half_open": p_half,
+            "primary_close": p_close, "router_failover": failover,
+            "router_failback": failback, "replay_parked": parked}
+    ok = (None not in (p_open, s_open, p_half, p_close,
+                       failover, failback)
+          # the brownout is the first scripted fault: its begin marker
+          # must precede the open it causes, which precedes failover
+          and begin.get("brownout-primary") is not None
+          and begin["brownout-primary"] < p_open < failover
+          and p_open < p_half < p_close
+          and failover < failback
+          # the secondary only fails under the correlated blackout
+          and begin.get("blackout") is not None
+          and begin["blackout"] < s_open
+          # replay tickets park only once EVERY breaker is open, which
+          # first happens under the blackout
+          and (parked is None or parked > begin["blackout"]))
+    return {"seqs": seqs, "ordered": ok,
+            "all_begun": sorted(begin) == sorted(names),
+            "all_ended": sorted(ended) == sorted(names)}
+
+
+def run(verbose: bool = True, duration_s: float = 60.0, seed: int = 7,
+        json_path: str | None = "BENCH_chaos.json",
+        events_jsonl: str | None = "BENCH_chaos_events.jsonl") -> dict:
+    trace = generate_trace(seed, pattern="diurnal", rate=BASE_RATE,
+                           peak_rate=PEAK_RATE, duration_s=duration_s,
+                           hard_frac=0.25)
+    xs, _ = make_features(trace, NCLS)
+
+    run_a = drive(trace, xs, seed)
+    run_b = drive(trace, xs, seed)
+    dig_a, dig_b = _digest(run_a), _digest(run_b)
+
+    st = run_a["engine"].stats
+    ad = run_a["sched"].admission
+    ch = run_a["schedule"].stats
+    ev = run_a["events"]
+    causal = _causality(run_a)
+
+    uids = sorted(r.uid for r in run_a["responses"])
+    dispositions: dict[str, int] = {}
+    for r in run_a["responses"]:
+        dispositions[r.disposition] = dispositions.get(r.disposition,
+                                                       0) + 1
+    served = len(run_a["responses"]) - dispositions.get(SHED, 0) \
+        - dispositions.get(REJECTED, 0)
+    attributed = sum(u.remote_calls + u.cache_hits + u.transport_failures
+                     for u in st.per_backend.values())
+    fault_episodes = [ep.name for ep in run_a["schedule"].episodes
+                      if ep.kind in ("brownout", "outage", "flap",
+                                     "timeout_storm")]
+    metrics = run_a["engine"].observability.metrics.snapshot()
+    shed_counter = sum(v for k, v in metrics["counters"].items()
+                       if k.startswith("cascade_admission_shed_total"))
+
+    checks = {
+        # -- ISSUE 7 acceptance: seeded replay is bit-identical --------
+        "deterministic_replay": dig_a == dig_b,
+        # -- zero silent drops across overload + chaos -----------------
+        "zero_silent_drop": uids == list(range(len(trace))),
+        "sheds_answered_at_zero_cost": all(
+            r.cost == 0.0 and r.source == "shed"
+            for r in run_a["responses"] if r.disposition == SHED),
+        # -- shed + served reconcile bitwise with billing --------------
+        "admission_reconciles": (
+            ad.submitted == len(trace)
+            and ad.submitted == st.requests + ad.shed
+            and ad.admitted == st.requests
+            and dispositions.get(SHED, 0) == ad.shed
+            and shed_counter == ad.shed
+            and len(ev.events("admission_shed")) == ad.shed),
+        "billing_reconciles": (
+            st.escalations == st.remote_calls + st.cache_hits
+            + st.transport_failures
+            and abs(st.total_cost - sum(u.cost for u in
+                                        st.per_backend.values())) < 1e-9
+            and attributed == st.escalations),
+        # -- every scripted episode fired and is causally ordered ------
+        "events_causal": causal["ordered"],
+        "episodes_all_marked": (causal["all_begun"]
+                                and causal["all_ended"]),
+        "faults_injected": (all(ch.by_episode.get(n, 0) > 0
+                                for n in fault_episodes)
+                            and ch.delayed > 0),
+        "breaker_opens_all_logged": all(
+            len(ev.events("breaker_open", b.name))
+            == b.stats.breaker_opens for b in run_a["router"].backends),
+        "no_events_dropped": ev.dropped == 0,
+        # -- overload actually exercised, system recovered -------------
+        "sheds_exercised": ad.shed > 0 and ad.degraded > 0,
+        "majority_served": served / max(1, len(trace)) >= 0.5,
+        "breakers_recovered": all(
+            s == CLOSED for s in run_a["breaker_states"].values()),
+    }
+
+    backends = {}
+    for b in run_a["router"].backends:
+        u = st.per_backend.get(b.name)
+        backends[b.name] = {
+            "cost_per_request": b.cost_per_request,
+            "remote_calls": u.remote_calls if u else 0,
+            "transport_failures": u.transport_failures if u else 0,
+            "billed_cost": u.cost if u else 0.0,
+            "breaker_opens": b.stats.breaker_opens,
+            "final_breaker_state": run_a["breaker_states"][b.name],
+        }
+    report = {
+        "batch_size": BATCH,
+        "virtual_duration_s": trace.duration_s,
+        "seed": seed,
+        "requests": len(trace),
+        "trace": {"pattern": trace.pattern,
+                  "policy_mix": trace.policy_counts()},
+        "wall_s": run_a["wall"],
+        "throughput_rps": len(trace) / run_a["wall"],
+        "admission": dig_a["admission"],
+        "dispositions": dict(sorted(dispositions.items())),
+        "served_fraction": served / max(1, len(trace)),
+        "billing": dig_a["billing"],
+        "backends": backends,
+        "chaos": dig_a["chaos"],
+        "episodes": [{"name": ep.name, "kind": ep.kind,
+                      "start_s": ep.start_s, "end_s": ep.end_s,
+                      "targets": list(ep.backends) or None,
+                      "faults": ch.by_episode.get(ep.name, 0)}
+                     for ep in run_a["schedule"].episodes],
+        "observability": {"events": dig_a["event_counts"],
+                          "events_dropped": ev.dropped,
+                          "causality": causal["seqs"]},
+        "checks": checks,
+        "passed": all(checks.values()),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+    if events_jsonl:
+        with open(events_jsonl, "w") as f:
+            for e in ev.events():
+                f.write(json.dumps(e) + "\n")
+    if verbose:
+        print(f"\n--- Chaos: {len(trace)} requests over "
+              f"{trace.duration_s:g} virtual s (diurnal "
+              f"{BASE_RATE:g}->{PEAK_RATE:g} rps, "
+              f"{len(run_a['schedule'].episodes)} episodes, seed {seed}, "
+              f"wall {run_a['wall']:.2f}s x2 runs) ---")
+        print(f"admission: {ad.submitted} submitted = "
+              f"{st.requests} admitted + {ad.shed} shed "
+              f"{dict(sorted(ad.shed_reasons.items()))}; "
+              f"{ad.degraded} degraded")
+        print(f"dispositions: {report['dispositions']}")
+        print(f"chaos: {ch.injected} faults "
+              f"{dict(sorted(ch.by_kind.items()))}, "
+              f"{ch.delayed} delayed (+{ch.extra_latency_s:.2f}s virtual)")
+        for name, v in backends.items():
+            print(f"  {name}: {v['remote_calls']} calls "
+                  f"(${v['billed_cost']:.4f}), "
+                  f"{v['transport_failures']} failures, "
+                  f"breaker opens {v['breaker_opens']}, "
+                  f"ends {v['final_breaker_state']}")
+        print(f"events: {report['observability']['events']}")
+        print(f"checks: {checks}"
+              + (f"; JSON -> {json_path}" if json_path else ""))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="virtual scenario length in seconds")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", default="BENCH_chaos.json",
+                    help="machine-readable output path ('' disables)")
+    ap.add_argument("--events-jsonl", default="BENCH_chaos_events.jsonl",
+                    help="event-log artifact path ('' disables)")
+    args = ap.parse_args(argv)
+    report = run(duration_s=args.duration, seed=args.seed,
+                 json_path=args.json or None,
+                 events_jsonl=args.events_jsonl or None)
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,10 +1,11 @@
-"""Perf regression gate for the serving/routing benchmarks (ISSUE 4).
+"""Perf regression gate for the serving/routing/chaos benchmarks
+(ISSUE 4, ISSUE 7).
 
 Compares freshly produced ``BENCH_serving.json`` / ``BENCH_routing.json``
-against the committed baselines in ``benchmarks/baselines/`` and FAILS
-(exit 1) when a tracked metric regresses past tolerance — the
-``BENCH_*.json`` family stops being informational-only and starts gating
-merges.
+/ ``BENCH_chaos.json`` against the committed baselines in
+``benchmarks/baselines/`` and FAILS (exit 1) when a tracked metric
+regresses past tolerance — the ``BENCH_*.json`` family stops being
+informational-only and starts gating merges.
 
 Two kinds of checks:
 
@@ -27,6 +28,7 @@ JSONs (run locally after an intentional perf change, and commit).
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--serving BENCH_serving.json] [--routing BENCH_routing.json] \
+        [--chaos BENCH_chaos.json] \
         [--baseline-dir benchmarks/baselines] [--update-baselines]
 """
 
@@ -208,6 +210,40 @@ def _check_observability_section(gate: Gate, fresh: dict,
               "serving: metric counters reconcile with CascadeStats")
 
 
+def check_chaos(gate: Gate, fresh: dict, base: dict) -> None:
+    """Chaos/load gate (DESIGN.md §10): the bench runs on a virtual
+    clock, so everything here is a hard correctness invariant of the
+    fresh run — there is no host-speed-dependent tolerance to track.
+    The baseline still documents the scenario's expected shape."""
+    gate.hard(fresh, "checks.deterministic_replay",
+              "chaos: seeded scenario replays bit-identically")
+    gate.hard(fresh, "checks.zero_silent_drop",
+              "chaos: every submitted uid answered exactly once")
+    gate.hard(fresh, "checks.sheds_answered_at_zero_cost",
+              "chaos: shed responses cost $0 with source 'shed'")
+    gate.hard(fresh, "checks.admission_reconciles",
+              "chaos: submitted = admitted + shed, counters agree")
+    gate.hard(fresh, "checks.billing_reconciles",
+              "chaos: escalation/billing sums reconcile bitwise")
+    gate.hard(fresh, "checks.events_causal",
+              "chaos: episode begin < breaker open < failover; "
+              "open < half_open < close; failover < failback")
+    gate.hard(fresh, "checks.episodes_all_marked",
+              "chaos: every episode has begin/end markers")
+    gate.hard(fresh, "checks.faults_injected",
+              "chaos: every scripted fault episode actually fired")
+    gate.hard(fresh, "checks.breaker_opens_all_logged",
+              "chaos: every breaker open transition logged")
+    gate.hard(fresh, "checks.no_events_dropped",
+              "chaos: event log dropped nothing")
+    gate.hard(fresh, "checks.sheds_exercised",
+              "chaos: overload produced sheds and degrades")
+    gate.hard(fresh, "checks.majority_served",
+              "chaos: >=50% of offered load served despite chaos")
+    gate.hard(fresh, "checks.breakers_recovered",
+              "chaos: no breaker stuck open after the scenario")
+
+
 def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
     gate.hard(fresh, "checks.zero_dropped",
               "routing: zero dropped requests across outage")
@@ -248,6 +284,8 @@ def main(argv=None) -> int:
                     help="fresh serving bench JSON ('' skips)")
     ap.add_argument("--routing", default="BENCH_routing.json",
                     help="fresh routing bench JSON ('' skips)")
+    ap.add_argument("--chaos", default="BENCH_chaos.json",
+                    help="fresh chaos bench JSON ('' skips)")
     ap.add_argument("--baseline-dir", default=BASELINE_DIR)
     ap.add_argument("--throughput-tol", type=float, default=THROUGHPUT_TOL)
     ap.add_argument("--p95-tol", type=float, default=P95_TOL)
@@ -267,9 +305,13 @@ def main(argv=None) -> int:
         pairs.append((args.routing,
                       os.path.join(args.baseline_dir, "BENCH_routing.json"),
                       check_routing, "routing"))
+    if args.chaos:
+        pairs.append((args.chaos,
+                      os.path.join(args.baseline_dir, "BENCH_chaos.json"),
+                      check_chaos, "chaos"))
     if not pairs:
-        _annotate("error", "nothing to check (both --serving and "
-                  "--routing empty)")
+        _annotate("error", "nothing to check (--serving, --routing and "
+                  "--chaos all empty)")
         return 2
 
     if args.update_baselines:

@@ -1,0 +1,213 @@
+"""Open-loop trace generator for the load/chaos bench (DESIGN.md §10).
+
+Arrivals are OPEN-LOOP: the trace fixes every request's arrival time
+before serving starts, so offered load never slows down because the
+system is struggling — exactly the regime where a closed-loop driver
+would hide overload (coordinated omission). Three arrival processes:
+
+  poisson       — memoryless arrivals at a constant rate (the classic
+                  open-loop baseline);
+  diurnal       — inhomogeneous Poisson whose rate follows a raised
+                  cosine between ``rate`` and ``peak_rate`` (a traffic
+                  day compressed into ``period_s``), sampled by
+                  thinning against the peak;
+  pareto_burst  — renewal process with Pareto inter-arrival gaps scaled
+                  to mean ``1/rate``: most gaps are tiny (bursts), a
+                  heavy tail of long lulls separates them.
+
+Each request also draws a difficulty (``hard`` rows produce low local
+confidence and escalate) and a ``RequestPolicy`` from a weighted mix,
+so admission control sees the full ``on_miss`` vocabulary under load.
+Everything is derived from one integer seed — the same seed replays the
+same trace bit-for-bit, which the chaos bench's determinism check
+relies on.
+
+    trace = generate_trace(7, pattern="diurnal", rate=24.0,
+                           peak_rate=96.0, duration_s=60.0)
+    xs, labels = make_features(trace)
+    for t_end, batch in segments(trace, every_s=1.0):
+        ...submit batch, advance the virtual clock to t_end, flush...
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.serving import RequestPolicy
+
+ARRIVAL_PATTERNS = ("poisson", "diurnal", "pareto_burst")
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """One arm of the policy mix: ``weight`` is relative, not
+    normalised; ``policy=None`` is the unpolicied fast path."""
+    name: str
+    weight: float
+    policy: RequestPolicy | None = None
+
+
+@dataclass(frozen=True)
+class TraceRequest:
+    uid: int
+    t_arrival_s: float
+    hard: bool                  # escalates (low local margin) if True
+    policy_name: str
+    policy: RequestPolicy | None
+
+
+@dataclass
+class LoadTrace:
+    """A fully materialised open-loop request trace."""
+    requests: list = field(default_factory=list)
+    duration_s: float = 0.0
+    pattern: str = "poisson"
+    seed: int = 0
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def policy_counts(self) -> dict[str, int]:
+        out: dict[str, int] = {}
+        for r in self.requests:
+            out[r.policy_name] = out.get(r.policy_name, 0) + 1
+        return out
+
+
+def default_policy_mix() -> tuple[PolicySpec, ...]:
+    """A mix exercising every admission-control arm (DESIGN.md §10):
+    unpolicied traffic degrades under overload, ``on_miss="reject"``
+    traffic sheds, tight deadlines trip the feasibility rule, and
+    ``escalation="never"`` rows are local either way."""
+    return (
+        PolicySpec("default", 0.55, None),
+        PolicySpec("tight", 0.15,
+                   RequestPolicy(deadline_s=0.15)),
+        PolicySpec("tight-reject", 0.10,
+                   RequestPolicy(deadline_s=0.15, on_miss="reject")),
+        PolicySpec("local-only", 0.10,
+                   RequestPolicy(escalation="never")),
+        PolicySpec("strict", 0.10,
+                   RequestPolicy(on_miss="reject")),
+    )
+
+
+# -- arrival processes ----------------------------------------------------
+
+def _poisson_times(rng: np.random.Generator, rate: float,
+                   duration_s: float) -> np.ndarray:
+    n = max(1, int(rate * duration_s * 1.5) + 16)
+    t = np.cumsum(rng.exponential(1.0 / rate, n))
+    while t[-1] < duration_s:                       # top up the tail
+        t = np.concatenate([t, t[-1] + np.cumsum(
+            rng.exponential(1.0 / rate, n))])
+    return t[t < duration_s]
+
+
+def _diurnal_times(rng: np.random.Generator, rate: float,
+                   peak_rate: float, period_s: float,
+                   duration_s: float) -> np.ndarray:
+    """Inhomogeneous Poisson by thinning: simulate at ``peak_rate``,
+    keep each arrival with probability ``rate(t) / peak_rate`` where
+    ``rate(t)`` is a raised cosine valley->peak->valley per period."""
+    if peak_rate < rate:
+        raise ValueError("peak_rate must be >= rate")
+    cand = _poisson_times(rng, peak_rate, duration_s)
+    phase = 0.5 * (1.0 - np.cos(2.0 * math.pi * cand / period_s))
+    accept = rng.random(len(cand)) < (
+        (rate + (peak_rate - rate) * phase) / peak_rate)
+    return cand[accept]
+
+
+def _pareto_burst_times(rng: np.random.Generator, rate: float,
+                        duration_s: float,
+                        alpha: float = 1.5) -> np.ndarray:
+    """Heavy-tail renewal gaps: Pareto(alpha) scaled to mean
+    ``1/rate`` (alpha > 1 so the mean exists). Low alpha = burstier."""
+    if alpha <= 1.0:
+        raise ValueError("alpha must be > 1 (finite mean)")
+    scale = (alpha - 1.0) / alpha / rate             # mean = 1/rate
+    n = max(1, int(rate * duration_s * 1.5) + 16)
+    t = np.cumsum(scale * (rng.pareto(alpha, n) + 1.0))
+    while t[-1] < duration_s:
+        t = np.concatenate([t, t[-1] + np.cumsum(
+            scale * (rng.pareto(alpha, n) + 1.0))])
+    return t[t < duration_s]
+
+
+def arrival_times(rng: np.random.Generator, pattern: str, rate: float,
+                  duration_s: float, *, peak_rate: float | None = None,
+                  period_s: float | None = None,
+                  alpha: float = 1.5) -> np.ndarray:
+    if pattern == "poisson":
+        return _poisson_times(rng, rate, duration_s)
+    if pattern == "diurnal":
+        return _diurnal_times(rng, rate, peak_rate or 4.0 * rate,
+                              period_s or duration_s, duration_s)
+    if pattern == "pareto_burst":
+        return _pareto_burst_times(rng, rate, duration_s, alpha)
+    raise ValueError(f"unknown arrival pattern {pattern!r}; "
+                     f"choose from {ARRIVAL_PATTERNS}")
+
+
+# -- trace ----------------------------------------------------------------
+
+def generate_trace(seed: int, *, pattern: str = "poisson",
+                   rate: float = 32.0, duration_s: float = 30.0,
+                   hard_frac: float = 0.3,
+                   policy_mix: tuple[PolicySpec, ...] | None = None,
+                   peak_rate: float | None = None,
+                   period_s: float | None = None,
+                   alpha: float = 1.5) -> LoadTrace:
+    """Materialise one deterministic open-loop trace from ``seed``."""
+    rng = np.random.default_rng(seed)
+    times = arrival_times(rng, pattern, rate, duration_s,
+                          peak_rate=peak_rate, period_s=period_s,
+                          alpha=alpha)
+    mix = policy_mix if policy_mix is not None else default_policy_mix()
+    weights = np.array([m.weight for m in mix], float)
+    weights = weights / weights.sum()
+    arms = rng.choice(len(mix), size=len(times), p=weights)
+    hard = rng.random(len(times)) < hard_frac
+    reqs = [TraceRequest(uid=i, t_arrival_s=float(times[i]),
+                         hard=bool(hard[i]),
+                         policy_name=mix[arms[i]].name,
+                         policy=mix[arms[i]].policy)
+            for i in range(len(times))]
+    return LoadTrace(requests=reqs, duration_s=duration_s,
+                     pattern=pattern, seed=seed)
+
+
+def make_features(trace: LoadTrace, ncls: int = 8,
+                  seed: int | None = None
+                  ) -> tuple[np.ndarray, np.ndarray]:
+    """Feature rows matched to the trace's difficulty labels: easy rows
+    get a wide logit margin (trusted locally), hard rows a narrow one
+    (escalate). Deterministic from the trace seed unless overridden."""
+    rng = np.random.default_rng(trace.seed + 1 if seed is None else seed)
+    n = len(trace)
+    labels = rng.integers(0, ncls, n)
+    x = rng.normal(0, 0.05, (n, ncls))
+    hard = np.array([r.hard for r in trace.requests], bool)
+    margin = np.where(hard, rng.uniform(0.05, 0.4, n),
+                      rng.uniform(2.0, 4.0, n))
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def segments(trace: LoadTrace, every_s: float):
+    """Yield ``(t_end, requests)`` per fixed virtual-time segment — the
+    drive-loop unit: submit the segment's arrivals, advance the clock
+    to ``t_end``, flush. Empty segments are yielded too (the clock must
+    advance across lulls so breaker resets and episode ends fire)."""
+    if every_s <= 0:
+        raise ValueError("every_s must be > 0")
+    nseg = max(1, int(math.ceil(trace.duration_s / every_s)))
+    buckets: list[list[TraceRequest]] = [[] for _ in range(nseg)]
+    for r in trace.requests:
+        buckets[min(nseg - 1, int(r.t_arrival_s / every_s))].append(r)
+    for i, bucket in enumerate(buckets):
+        yield min((i + 1) * every_s, trace.duration_s), bucket

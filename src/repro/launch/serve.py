@@ -352,6 +352,13 @@ def main(argv=None) -> int:
         pure = ps["cold"] + ps["hot"]
         print(f"[serve] window packing: {ps} "
               f"(purity {pure / max(ps['windows'], 1):.2f})")
+    if cfg.admission_limit:
+        ad = sched.admission
+        print(f"[serve] admission: {ad.submitted} submitted, "
+              f"{ad.shed} shed {ad.shed_reasons}, "
+              f"{ad.degraded} degraded {ad.degrade_reasons} "
+              f"(queue limit {sched.admission_limit}, "
+              f"soft {sched.admission_soft})")
     if router is not None:
         rs = router.stats
         print(f"[serve] router: picks {rs.picks}, "

@@ -14,6 +14,9 @@ Composes with ``repro.serving.engine.CascadeEngine`` (see DESIGN.md):
 
 from repro.runtime.cache import (CacheStats, RemoteResponseCache,
                                  content_key, content_keys)
+from repro.runtime.chaos import (CHAOS_KINDS, ChaosEpisode, ChaosFault,
+                                 ChaosRemote, ChaosSchedule, ChaosStats,
+                                 ChaosTimeout, VirtualClock)
 from repro.runtime.observability import (EventLog, MetricsRegistry,
                                          Observability, TraceSink)
 from repro.runtime.calibration import (EscalationPrior, OperatingPoint,
@@ -33,14 +36,16 @@ from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
                                      TransportStats)
 
 __all__ = [
-    "ROUTE_POLICIES", "AdaptiveController", "CacheStats", "CircuitBreaker",
-    "CircuitOpenError", "ControllerConfig", "ControllerState",
-    "EscalationPrior", "EventLog", "MetricsRegistry", "Observability",
-    "OperatingPoint", "RemoteBackend", "RemoteCallError",
-    "RemoteResponseCache", "RemoteRouter", "RemoteTimeout",
-    "RemoteTransport", "RouteConstraint", "RouterStats", "TraceSink",
-    "TransportConfig", "TransportFuture", "TransportStats", "calibrate",
-    "content_key", "content_keys", "fit_escalation_prior",
-    "pareto_frontier", "population_stability_index",
-    "select_operating_point", "sweep_operating_points",
+    "CHAOS_KINDS", "ROUTE_POLICIES", "AdaptiveController", "CacheStats",
+    "ChaosEpisode", "ChaosFault", "ChaosRemote", "ChaosSchedule",
+    "ChaosStats", "ChaosTimeout", "CircuitBreaker", "CircuitOpenError",
+    "ControllerConfig", "ControllerState", "EscalationPrior", "EventLog",
+    "MetricsRegistry", "Observability", "OperatingPoint", "RemoteBackend",
+    "RemoteCallError", "RemoteResponseCache", "RemoteRouter",
+    "RemoteTimeout", "RemoteTransport", "RouteConstraint", "RouterStats",
+    "TraceSink", "TransportConfig", "TransportFuture", "TransportStats",
+    "VirtualClock", "calibrate", "content_key", "content_keys",
+    "fit_escalation_prior", "pareto_frontier",
+    "population_stability_index", "select_operating_point",
+    "sweep_operating_points",
 ]

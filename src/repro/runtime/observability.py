@@ -50,9 +50,13 @@ from collections.abc import Callable
 from typing import Any
 
 __all__ = [
+    "EV_ADMISSION_DEGRADE",
+    "EV_ADMISSION_SHED",
     "EV_BREAKER_CLOSE",
     "EV_BREAKER_HALF_OPEN",
     "EV_BREAKER_OPEN",
+    "EV_CHAOS_BEGIN",
+    "EV_CHAOS_END",
     "EV_CONTROLLER_DRIFT",
     "EV_CONTROLLER_UPDATE",
     "EV_DEADLINE_DOWNGRADE",
@@ -86,6 +90,16 @@ EV_CONTROLLER_DRIFT = "controller_drift"
 EV_CONTROLLER_UPDATE = "controller_update"
 EV_DEADLINE_DOWNGRADE = "deadline_downgrade"
 EV_POLICY_DOWNGRADE = "policy_downgrade"
+# chaos injection (DESIGN.md §10): episode activation markers — emitted
+# by the ChaosRemote wrapper on the first call that observes the episode
+# active / over, so cause (chaos_episode_begin) is always sequenced
+# before effect (the breaker/failover events the faults trigger)
+EV_CHAOS_BEGIN = "chaos_episode_begin"
+EV_CHAOS_END = "chaos_episode_end"
+# admission control (DESIGN.md §10): a request shed at submit (SHED
+# disposition) or degraded to local-only under overload
+EV_ADMISSION_SHED = "admission_shed"
+EV_ADMISSION_DEGRADE = "admission_degrade"
 
 # canonical span stage order (a span contains the subset that applies to
 # its disposition; timestamps are nondecreasing in this order)

@@ -63,10 +63,12 @@ instead of the escalation degrading to REJECTED (DESIGN.md §7).
 
 from __future__ import annotations
 
+import random
 import threading
 import time
 from collections import deque
 from concurrent.futures import Future, ThreadPoolExecutor
+from concurrent.futures import TimeoutError as FutureTimeout
 from dataclasses import dataclass, field
 from typing import Any, Callable, ClassVar
 
@@ -104,7 +106,9 @@ class TransportConfig:
     max_in_flight: int = 8        # requests per transport window
     timeout_s: float = 2.0        # per-window deadline
     max_retries: int = 2          # retries per window (beyond first try)
-    retry_backoff_s: float = 0.02
+    retry_backoff_s: float = 0.02   # base of the exponential backoff
+    retry_backoff_cap_s: float = 1.0  # backoff ceiling (pre-jitter)
+    retry_jitter_seed: int = 0    # per-transport seed for backoff jitter
     breaker_failures: int = 3     # consecutive window failures to open
     breaker_reset_s: float = 5.0  # open -> half-open after this long
     max_concurrent: int = 8       # submit() thread-pool width
@@ -192,6 +196,19 @@ class CircuitBreaker:
             return False
         return True
 
+    def try_probe(self) -> bool:
+        """OPEN -> HALF_OPEN when the reset window has elapsed; the caller
+        becomes the single in-flight probe. The router calls this at pick
+        time so the half-open transition is *sequenced before* the events
+        the probe causes (router_failback, breaker_close) — DESIGN.md §9's
+        causal ordering would otherwise break because ``would_allow()``
+        only peeks. Returns True iff the transition happened here."""
+        if (self.state == OPEN
+                and self._clock() - self._opened_at >= self.reset_s):
+            self.state = HALF_OPEN
+            return True
+        return False
+
     def record_success(self) -> None:
         self.state = CLOSED
         self.consecutive_failures = 0
@@ -272,6 +289,16 @@ class RemoteTransport:
         self._sleep = sleep
         self._lock = threading.RLock()
         self._pool: ThreadPoolExecutor | None = None
+        # attempts run on their own pool so the bounded result() wait can
+        # abandon a hung remote_apply without wedging the caller — which
+        # may itself be a submit()-pool thread (same pool would deadlock).
+        # Created (and one worker pre-spawned) eagerly: the first window
+        # attempt must not pay pool/thread start-up inside its deadline.
+        self._attempt_pool: ThreadPoolExecutor | None = None
+        self._attempts()
+        # deterministic backoff jitter: seeded per transport, drawn under
+        # the lock so a fixed seed gives a reproducible delay sequence
+        self._backoff_rng = random.Random(config.retry_jitter_seed)
         self.breaker = CircuitBreaker(config.breaker_failures,
                                       config.breaker_reset_s, clock=clock)
         # observability (DESIGN.md §9): an EventLog installed by the
@@ -295,14 +322,53 @@ class RemoteTransport:
                          failures=self.breaker.consecutive_failures)
 
     # -- single window -----------------------------------------------------
+    def _attempts(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._attempt_pool is None:
+                # +2 slack: a timed-out attempt abandons its thread until
+                # the hung remote_apply returns; a couple of stragglers
+                # must not starve fresh attempts (if more pile up, queued
+                # attempts time out in result() and the breaker opens)
+                self._attempt_pool = ThreadPoolExecutor(
+                    max_workers=max(1, self.config.max_concurrent) + 2,
+                    thread_name_prefix="remote-attempt")
+                # pre-spawn one worker: the first real attempt must not
+                # pay thread-start latency inside the window deadline
+                self._attempt_pool.submit(lambda: None)
+            return self._attempt_pool
+
     def _call_window(self, window: Any) -> np.ndarray:
-        """One attempt: invoke the remote tier, enforcing the deadline."""
+        """One attempt, with the deadline enforced both ways: the attempt
+        runs on a dedicated pool and the wait is bounded in *wall* time
+        (a hung remote_apply is abandoned, not awaited forever), and the
+        elapsed time on the injectable clock is checked after the fact so
+        chaos schedules driving a virtual clock still produce timeouts
+        without real waits."""
         t0 = self._clock()
-        out = np.asarray(self.remote_apply(window))
+        fut = self._attempts().submit(self.remote_apply, window)
+        try:
+            out = np.asarray(fut.result(timeout=self.config.timeout_s))
+        except FutureTimeout:
+            fut.cancel()        # not started -> never runs; else abandoned
+            raise RemoteTimeout(
+                f"remote window exceeded {self.config.timeout_s}s "
+                f"deadline (attempt abandoned)") from None
         if self._clock() - t0 > self.config.timeout_s:
             raise RemoteTimeout(
                 f"remote window exceeded {self.config.timeout_s}s deadline")
         return out
+
+    def _backoff(self, attempt: int) -> float:
+        """Capped exponential backoff with seeded jitter: base * 2^attempt
+        clipped at the cap, then scaled into [0.5, 1.0) so windows that
+        failed together don't retry in lockstep against a recovering
+        backend (linear backoff synchronized them). The rng is seeded per
+        transport (``retry_jitter_seed``), so tests replaying a schedule
+        see the same delay sequence."""
+        raw = min(self.config.retry_backoff_s * (2 ** attempt),
+                  self.config.retry_backoff_cap_s)
+        with self._lock:
+            return raw * (0.5 + 0.5 * self._backoff_rng.random())
 
     def _call_with_retries(self, window: Any,
                            tag: int | None = None) -> np.ndarray:
@@ -344,7 +410,7 @@ class RemoteTransport:
                 with self._lock:
                     self.stats.retries += 1
                 if self.config.retry_backoff_s > 0:
-                    self._sleep(self.config.retry_backoff_s * (attempt + 1))
+                    self._sleep(self._backoff(attempt))
         with self._lock:
             prev = self.breaker.state
             self.breaker.record_failure()
@@ -414,12 +480,28 @@ class RemoteTransport:
         """True iff the future's (logits, ok) is ready to drain."""
         return future.done()
 
+    def grant_probe(self, tag: int | None = None) -> None:
+        """Transition an elapsed OPEN breaker to HALF_OPEN *now* and emit
+        the transition. The router calls this for the backend it picked,
+        so ``breaker_half_open`` is sequenced before any failback/close
+        event the probe window goes on to cause (DESIGN.md §9)."""
+        with self._lock:
+            prev = self.breaker.state
+            granted = self.breaker.try_probe()
+        if granted:
+            self._emit_breaker(prev, self.breaker.state, tag)
+
     def shutdown(self, wait: bool = True) -> None:
         """Tear down the submit() pool (in-flight calls finish if wait)."""
         with self._lock:
             pool, self._pool = self._pool, None
+            attempts, self._attempt_pool = self._attempt_pool, None
         if pool is not None:
             pool.shutdown(wait=wait)
+        if attempts is not None:
+            # never wait on the attempt pool: an abandoned hung attempt
+            # would block shutdown forever (the bug this pool fixes)
+            attempts.shutdown(wait=False, cancel_futures=True)
 
 
 # ---------------------------------------------------------------------------
@@ -675,6 +757,10 @@ class RemoteRouter:
                 continue
             if constraint is not None and not constraint.admits(b):
                 continue
+            # an elapsed OPEN breaker half-opens HERE, not when the call
+            # hits the wire: the half_open event must be sequenced before
+            # the failback/close events this probe window causes
+            b.transport.grant_probe(window)
             self.stats.picks[b.name] += 1
             if skipped_unavailable:
                 self.stats.failovers += 1
@@ -750,6 +836,7 @@ class RemoteRouter:
         for b in self._ordered(constraint):
             if b.available() and (constraint is None
                                   or constraint.admits(b)):
+                b.transport.grant_probe(window)   # see pick()
                 self.stats.picks[b.name] += 1
                 self.stats.replay_served += 1
                 if self.events is not None:

@@ -76,7 +76,7 @@ import threading
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Callable, Iterator
+from typing import Any, Callable, ClassVar, Iterator
 
 import jax
 import jax.numpy as jnp
@@ -170,6 +170,12 @@ class CascadeStats:
     # representative of CURRENT behaviour on long-running servers
     wall_samples: deque = field(
         default_factory=lambda: deque(maxlen=65536), repr=False)
+    # EMA of per-window wall service time — the admission controller's
+    # queue-wait estimator (DESIGN.md §10): expected_wait ≈ windows_ahead
+    # * window_service_ema_s. None until the first window commits.
+    window_service_ema_s: float | None = None
+
+    SERVICE_EMA_ALPHA: ClassVar[float] = 0.2
 
     def backend_usage(self, name: str) -> BackendUsage:
         return self.per_backend.setdefault(name, BackendUsage())
@@ -198,6 +204,10 @@ class CascadeStats:
         latency includes pipeline residency, not just compute."""
         self.wall_latency_s += window_wall_s * real
         self.wall_samples.append(float(window_wall_s))
+        a = self.SERVICE_EMA_ALPHA
+        self.window_service_ema_s = (
+            window_wall_s if self.window_service_ema_s is None
+            else a * window_wall_s + (1 - a) * self.window_service_ema_s)
 
     @property
     def mean_wall_latency_s(self) -> float | None:

@@ -34,6 +34,10 @@ actually served — the billing attribution at the API boundary:
                    make the round trip inside ``deadline_s`` (DESIGN.md §8)
 ``POLICY_LOCAL``   escalation suppressed by policy (``escalation="never"``
                    or ``cost_cap`` below every available backend's price)
+``SHED``           refused at admission (DESIGN.md §10): the bounded queue
+                   was full, or overload/deadline-infeasibility plus
+                   ``on_miss="reject"``; answered immediately from the
+                   fallback, never enqueued, $0 billed
 =================  ========================================================
 """
 
@@ -58,8 +62,9 @@ CACHED = "CACHED"
 REJECTED = "REJECTED"
 DEADLINE_LOCAL = "DEADLINE_LOCAL"
 POLICY_LOCAL = "POLICY_LOCAL"
+SHED = "SHED"
 DISPOSITIONS = (LOCAL, REMOTE, CACHED, REJECTED, DEADLINE_LOCAL,
-                POLICY_LOCAL)
+                POLICY_LOCAL, SHED)
 
 PACKING_MODES = ("none", "policy")
 
@@ -184,6 +189,14 @@ class ServeConfig:
     # -- per-request policy layer (DESIGN.md §8) ------------------------
     default_policy: RequestPolicy = field(default_factory=RequestPolicy)
     packing: str = "none"               # window packing: none | policy
+    # -- overload admission control (DESIGN.md §10; 0 disables) ---------
+    # hard queue bound: a request arriving at a full queue is SHED
+    # (answered from the fallback, $0, never enqueued). Above
+    # ``admission_soft_ratio * admission_limit`` the scheduler applies
+    # the request's ``on_miss`` vocabulary instead: ``fallback`` pins
+    # the request local (degrade), ``reject`` sheds it.
+    admission_limit: int = 0
+    admission_soft_ratio: float = 0.5
     # -- observability (DESIGN.md §9) -----------------------------------
     observability: bool = False         # metrics + traces + event log
     trace_capacity: int = 65536         # bounded TraceSink (spans kept)
@@ -199,17 +212,22 @@ class ServeConfig:
         if self.packing not in PACKING_MODES:
             raise ValueError(f"unknown packing {self.packing!r}; "
                              f"choose from {PACKING_MODES}")
+        if self.admission_limit < 0:
+            raise ValueError("admission_limit must be >= 0")
+        if not 0.0 <= self.admission_soft_ratio <= 1.0:
+            raise ValueError("admission_soft_ratio must be in [0, 1]")
         if self.fused and (self.adaptive or self.pipeline_depth > 1
                            or self.completion_mode == "streaming"
                            or self.cost_budget is not None
                            or not self.default_policy.is_default
                            or self.packing != "none"
                            or self.remotes
-                           or self.observability):
+                           or self.observability
+                           or self.admission_limit):
             raise ValueError("fused bypasses the transport path: drop "
                              "adaptive/pipeline_depth/streaming/"
                              "cost_budget/default_policy/packing/remotes/"
-                             "observability")
+                             "observability/admission_limit")
 
     # -- component builders --------------------------------------------
     def build_router(self, remote_apply: Callable, **kw) -> RemoteRouter:

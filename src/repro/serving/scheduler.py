@@ -46,17 +46,35 @@ separate windows, draining cold windows first: trusted-local rows never
 share a window with a remote round trip, and deadline-pinned rows don't
 queue behind one. Windows are never mixed (the tail of each class is
 padded instead); ``packing_stats`` reports the realised purity.
+
+Overload admission control (DESIGN.md §10): with ``admission_limit > 0``
+the queue is bounded. ``submit`` evaluates three rules before enqueueing
+— hard bound (queue full → SHED), soft watermark (queue past
+``admission_soft_ratio``·limit → apply the request's ``on_miss``:
+``fallback`` degrades it to local-only, ``reject`` sheds), and deadline
+feasibility (expected queue wait from the engine's window-service EMA
+plus the fastest backend RTT exceeds the remaining deadline → same
+``on_miss`` split). A shed request is answered *immediately* from the
+fallback with the ``SHED`` disposition, $0 cost and ``source="shed"`` —
+never enqueued, never billed, never silently dropped: shed responses are
+recorded in ``self.responses`` at submit and included in the next
+``flush`` output, so ``submitted == len(responses)`` still holds and
+``AdmissionStats.submitted == engine.stats.requests + shed`` reconciles
+with billing exactly.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Callable
 
 import numpy as np
 
-from repro.serving.policy import (CACHED, LOCAL, REJECTED, REMOTE,
+from repro.runtime.observability import (EV_ADMISSION_DEGRADE,
+                                         EV_ADMISSION_SHED)
+from repro.serving.policy import (CACHED, LOCAL, REJECTED, REMOTE, SHED,
                                   RequestPolicy, ServeConfig)
 
 COMPLETION_MODES = ("fifo", "streaming")
@@ -96,6 +114,20 @@ class Response:
     queue_s: float = 0.0
 
 
+@dataclass
+class AdmissionStats:
+    """Overload admission accounting (DESIGN.md §10). Reconciliation:
+    ``submitted == admitted + shed`` and, once every admitted request is
+    flushed, ``admitted == engine.stats.requests`` — so shed + served +
+    rejected counts tie out bitwise against ``CascadeStats`` billing."""
+    submitted: int = 0          # submit() calls seen
+    admitted: int = 0           # enqueued (includes degraded)
+    degraded: int = 0           # admitted pinned local by overload rules
+    shed: int = 0               # refused, answered via fallback (SHED)
+    shed_reasons: dict = field(default_factory=dict)     # reason -> n
+    degrade_reasons: dict = field(default_factory=dict)  # reason -> n
+
+
 class _Window:
     """Scheduler-side bookkeeping for one in-flight microbatch."""
 
@@ -113,7 +145,9 @@ class MicrobatchScheduler:
     def __init__(self, engine, fallback: Callable[[Request], int] | None = None,
                  pipeline_depth: int = 1, completion_mode: str = "fifo",
                  packing: str = "none",
-                 prior: Callable[[Request], float] | None = None):
+                 prior: Callable[[Request], float] | None = None,
+                 admission_limit: int = 0,
+                 admission_soft_ratio: float = 0.5):
         if completion_mode not in COMPLETION_MODES:
             raise ValueError(f"unknown completion_mode {completion_mode!r};"
                              f" choose from {COMPLETION_MODES}")
@@ -121,6 +155,8 @@ class MicrobatchScheduler:
             raise ValueError(f"unknown packing {packing!r}")
         if packing != "none" and engine.transport is None:
             raise ValueError("window packing needs the runtime path")
+        if admission_limit and engine.transport is None:
+            raise ValueError("admission control needs the runtime path")
         self.engine = engine
         self.fallback = fallback
         self.pipeline_depth = max(1, pipeline_depth)
@@ -139,6 +175,13 @@ class MicrobatchScheduler:
         self.cold: deque[Request] = deque()       # trusted-local-bound
         self.responses: dict[int, Response] = {}
         self.fallbacks = 0
+        # overload admission control (DESIGN.md §10; 0 = unbounded)
+        self.admission_limit = max(0, admission_limit)
+        self.admission_soft = (max(1, int(self.admission_limit
+                                          * admission_soft_ratio))
+                               if self.admission_limit else 0)
+        self.admission = AdmissionStats()
+        self._shed_out: list[Response] = []       # shed since last flush
         # window purity telemetry (packing="policy" only): windows are
         # pure by construction; `mixed` staying 0 is the invariant the
         # serving bench gates (DESIGN.md §8)
@@ -163,12 +206,27 @@ class MicrobatchScheduler:
         return cls(engine, fallback=fallback,
                    pipeline_depth=config.pipeline_depth,
                    completion_mode=config.completion_mode,
-                   packing=config.packing, prior=prior)
+                   packing=config.packing, prior=prior,
+                   admission_limit=config.admission_limit,
+                   admission_soft_ratio=config.admission_soft_ratio)
 
     # -- admission ------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> Response | None:
+        """Enqueue one request. With admission control enabled the
+        overload rules run first; a shed request is answered *here* —
+        the SHED ``Response`` is returned (and re-delivered in the next
+        ``flush`` output, so callers that only collect flush results
+        still see every submission exactly once)."""
         if req.t_enq == 0.0:
             req.t_enq = self._clock()   # the deadline/latency anchor
+        self.admission.submitted += 1
+        if self.admission_limit:
+            action, reason = self._admit(req)
+            if action == "shed":
+                return self._shed(req, reason)
+            if action == "degrade":
+                self._degrade(req, reason)
+        self.admission.admitted += 1
         if self.packing == "policy":
             # the label sticks to the REQUEST so window purity is
             # measured from the rows actually dispatched together, not
@@ -179,6 +237,102 @@ class MicrobatchScheduler:
              else self.queue).append(req)
         else:
             self.queue.append(req)
+        return None
+
+    # -- overload admission control (DESIGN.md §10) ---------------------
+    def _admit(self, req: Request) -> tuple[str, str | None]:
+        """Admission decision: ``("admit"|"degrade"|"shed", reason)``.
+        Hard bound first (queue full always sheds — a degrade cannot
+        bound memory), then the soft watermark and deadline-feasibility
+        rules, both of which resolve through the request's ``on_miss``
+        vocabulary: ``fallback`` degrades to local-only, ``reject``
+        sheds."""
+        depth = self._qsize()
+        if depth >= self.admission_limit:
+            return "shed", "queue_full"
+        pol = (req.policy if req.policy is not None
+               else self.engine.default_policy)
+        on_miss = pol.on_miss if pol is not None else "fallback"
+        miss = "shed" if on_miss == "reject" else "degrade"
+        if depth >= self.admission_soft:
+            return miss, "overload"
+        if pol is not None and pol.deadline_s is not None:
+            wait = self._queue_wait_estimate(depth)
+            if wait is not None:
+                remaining = pol.deadline_s - (self._clock() - req.t_enq)
+                est = (self.engine.router.min_latency_estimate(
+                           max_cost=pol.cost_cap,
+                           default_cost=self.engine.cost
+                           .remote_cost_per_request)
+                       if pol.escalation != "never" else None)
+                if wait + (est or 0.0) > remaining:
+                    # a local-only row that already can't make it only
+                    # sheds (degrading is a no-op for it)
+                    if est is None and miss == "degrade":
+                        return "admit", None
+                    return miss, "deadline"
+        return "admit", None
+
+    def _queue_wait_estimate(self, depth: int) -> float | None:
+        """Expected time for a request joining behind ``depth`` queued
+        rows to clear its own window: full windows ahead of it plus its
+        own, priced at the engine's measured window-service EMA. None
+        until a window has committed (no estimate beats a fabricated
+        one)."""
+        ema = self.engine.stats.window_service_ema_s
+        if ema is None:
+            return None
+        return (depth // self.engine.batch_size + 1) * ema
+
+    def _shed(self, req: Request, reason: str) -> Response:
+        """Refuse ``req`` at admission: answer immediately from the
+        fallback with the SHED disposition ($0, never enqueued). The
+        response is recorded now and re-delivered by the next flush
+        (zero-silent-drop: flush output covers every submission)."""
+        self.admission.shed += 1
+        self.admission.shed_reasons[reason] = (
+            self.admission.shed_reasons.get(reason, 0) + 1)
+        pred = self.fallback(req) if self.fallback else -1
+        now = self._clock()
+        resp = Response(req.uid, pred, "shed", 0.0, 0.0,
+                        latency_s=now - req.t_enq, disposition=SHED,
+                        backend=None, cost=0.0, queue_s=0.0)
+        self.responses[resp.uid] = resp
+        self._shed_out.append(resp)
+        obs = self.engine.observability
+        if obs is not None:
+            obs.metrics.counter("cascade_admission_shed_total",
+                                reason=reason).inc()
+            if obs.events is not None:
+                obs.events.emit(EV_ADMISSION_SHED, uid=req.uid,
+                                reason=reason, depth=self._qsize(),
+                                limit=self.admission_limit)
+        return resp
+
+    def _degrade(self, req: Request, reason: str) -> None:
+        """Admit ``req`` pinned to the local tier: its policy is replaced
+        with an ``escalation="never"`` copy, so the engine serves it as
+        POLICY_LOCAL — load is shed from the *remote* tier while the
+        request still gets its local answer (the ``on_miss="fallback"``
+        arm of the overload rules)."""
+        self.admission.degraded += 1
+        self.admission.degrade_reasons[reason] = (
+            self.admission.degrade_reasons.get(reason, 0) + 1)
+        base = (req.policy if req.policy is not None
+                else self.engine.default_policy) or RequestPolicy()
+        req.policy = dataclasses.replace(base, escalation="never")
+        obs = self.engine.observability
+        if obs is not None:
+            obs.metrics.counter("cascade_admission_degraded_total",
+                                reason=reason).inc()
+            if obs.events is not None:
+                obs.events.emit(EV_ADMISSION_DEGRADE, uid=req.uid,
+                                reason=reason, depth=self._qsize(),
+                                limit=self.admission_limit)
+
+    def _drain_shed(self) -> list[Response]:
+        out, self._shed_out = self._shed_out, []
+        return out
 
     def _can_escalate(self, pol: RequestPolicy, t_enq: float) -> bool:
         """Submit-time feasibility mirror of the engine's policy pass:
@@ -356,12 +510,16 @@ class MicrobatchScheduler:
                  else max(1, pipeline_depth))
         self.first_response_s = None
         self._flush_t0 = self._clock()
+        # requests shed at admission since the last flush lead the output
+        # (they were answered at submit; re-delivering here keeps "flush
+        # returns every submission exactly once" true for every caller)
+        shed = self._drain_shed()
         if self.engine.transport is not None:
             if self.completion_mode == "streaming":
-                return self._flush_streaming(depth)
+                return shed + self._flush_streaming(depth)
             if depth > 1:
-                return self._flush_pipelined(depth)
-        out: list[Response] = []
+                return shed + self._flush_pipelined(depth)
+        out: list[Response] = shed
         while self._qsize():
             chunk, batch = self._next_chunk()
             t_disp = self._clock()

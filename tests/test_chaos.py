@@ -1,0 +1,443 @@
+"""Chaos layer + overload admission control (DESIGN.md §10, ISSUE 7):
+seeded fault injection replays bit-identically on a virtual clock, the
+breaker state machine survives flapping schedules (never stuck OPEN,
+one half-open probe), the bounded-attempt transport deadline fires on a
+hung remote, backoff is capped/jittered/deterministic, and the
+scheduler's admission rules shed/degrade deterministically while
+preserving zero-silent-drop and billing reconciliation."""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import (ChaosEpisode, ChaosFault, ChaosSchedule,
+                           ChaosTimeout, RemoteBackend, RemoteRouter,
+                           RemoteTransport, TransportConfig, VirtualClock)
+from repro.runtime.chaos import ChaosRemote
+from repro.runtime.transport import CLOSED, HALF_OPEN, OPEN, CircuitBreaker
+from repro.serving import RequestPolicy
+from repro.serving.engine import BILLING_FIELDS, CascadeEngine
+from repro.serving.policy import SHED
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def remote_apply(x):
+    return 5.0 * np.asarray(x)
+
+
+def make_stream(rng, n, c=4, hard_frac=0.5):
+    labels = rng.integers(0, c, n)
+    x = rng.normal(0, 0.05, (n, c))
+    margin = np.where(rng.random(n) < hard_frac, 0.1, 3.0)
+    x[np.arange(n), labels] += margin
+    return np.float32(x), labels
+
+
+def quiet_tconf(**kw):
+    base = dict(retry_backoff_s=0.0, max_retries=0,
+                breaker_failures=10**6, timeout_s=60.0)
+    base.update(kw)
+    return TransportConfig(**base)
+
+
+# ------------------------------------------------------------ chaos core
+
+def test_episode_validation_and_defaults():
+    ep = ChaosEpisode("outage", 2.0, 3.0)
+    assert ep.name == "outage@2" and ep.end_s == 5.0
+    assert ep.covers("any", 2.0) and not ep.covers("any", 5.0)
+    assert ep.progress(3.5) == 0.5
+    scoped = ChaosEpisode("outage", 0.0, 1.0, backends=("a",))
+    assert scoped.covers("a", 0.5) and not scoped.covers("b", 0.5)
+    with pytest.raises(ValueError):
+        ChaosEpisode("meteor", 0.0, 1.0)
+    with pytest.raises(ValueError):
+        ChaosEpisode("outage", 0.0, 0.0)
+    with pytest.raises(ValueError):
+        ChaosEpisode("brownout", 0.0, 1.0, rate=1.5)
+    with pytest.raises(ValueError):
+        ChaosSchedule([ChaosEpisode("outage", 0.0, 1.0, name="x"),
+                       ChaosEpisode("flap", 2.0, 1.0, name="x")])
+
+
+def test_virtual_clock_sleep_advances_and_never_rewinds():
+    clk = VirtualClock(5.0)
+    clk.sleep(0.25)
+    assert clk() == 5.25
+    clk.advance_to(4.0)             # never backwards
+    assert clk() == 5.25
+    clk.sleep(-1.0)                 # negative sleep is a no-op
+    assert clk() == 5.25
+
+
+def test_wrap_is_idempotent_and_faults_are_tagged():
+    clk = VirtualClock()
+    t = RemoteTransport(remote_apply, quiet_tconf(), clock=clk,
+                        sleep=clk.sleep)
+    sched = ChaosSchedule([ChaosEpisode("outage", 0.0, 1.0,
+                                        name="ep-tag")])
+    sched.wrap_transport(t, "b")
+    assert isinstance(t.remote_apply, ChaosRemote)
+    with pytest.raises(ValueError):
+        sched.wrap_transport(t, "b")
+    with pytest.raises(ChaosFault, match=r"chaos\[ep-tag\]"):
+        t.remote_apply(np.zeros((1, 2), np.float32))
+    assert sched.stats.by_episode == {"ep-tag": 1}
+
+
+def test_brownout_draws_are_seeded_per_backend_and_replayable():
+    """Same (seed, episode, backend) -> same Bernoulli stream by call
+    COUNT; a different backend name gets an independent stream."""
+    def draws(backend, seed, n=64):
+        clk = VirtualClock(0.5)
+        t = RemoteTransport(remote_apply, quiet_tconf(), clock=clk,
+                            sleep=clk.sleep)
+        sched = ChaosSchedule([ChaosEpisode("brownout", 0.0, 10.0,
+                                            rate=0.4, name="b")],
+                              seed=seed)
+        sched.wrap_transport(t, backend)
+        out = []
+        x = np.zeros((1, 2), np.float32)
+        for _ in range(n):
+            try:
+                t.remote_apply(x)
+                out.append(False)
+            except ChaosFault:
+                out.append(True)
+        return out
+
+    a = draws("alpha", seed=3)
+    assert a == draws("alpha", seed=3)          # bit-identical replay
+    assert a != draws("beta", seed=3)           # decorrelated per backend
+    assert a != draws("alpha", seed=4)          # and per schedule seed
+    assert any(a) and not all(a)                # a partial brownout
+
+
+def test_latency_ramp_and_timeout_storm_drive_virtual_clock():
+    clk = VirtualClock()
+    t = RemoteTransport(remote_apply, quiet_tconf(), clock=clk,
+                        sleep=clk.sleep)
+    sched = ChaosSchedule([
+        ChaosEpisode("latency_ramp", 0.0, 10.0, extra_latency_s=1.0,
+                     name="ramp"),
+        ChaosEpisode("timeout_storm", 20.0, 5.0, extra_latency_s=0.5,
+                     name="storm")])
+    sched.wrap_transport(t, "b")
+    x = np.zeros((1, 2), np.float32)
+    clk.advance_to(5.0)                         # mid-ramp: 50% of 1.0s
+    t.remote_apply(x)
+    assert clk() == pytest.approx(5.5)
+    clk.advance_to(21.0)
+    with pytest.raises(ChaosTimeout, match=r"chaos\[storm\]"):
+        t.remote_apply(x)
+    assert clk() == pytest.approx(21.5)         # storm latency applied
+    assert sched.stats.delayed == 2
+    assert sched.stats.extra_latency_s == pytest.approx(1.0)
+
+
+# ------------------------------------- breaker property-style coverage
+
+def test_breaker_never_stuck_open_under_seeded_flapping():
+    """Drive a breaker-guarded transport through a flapping schedule:
+    whatever the flap does, once chaos ends and the reset elapses the
+    next window must recover the breaker to CLOSED — it is never stuck
+    OPEN past reset + one probe."""
+    clk = VirtualClock()
+    t = RemoteTransport(remote_apply,
+                        quiet_tconf(breaker_failures=1,
+                                    breaker_reset_s=0.5),
+                        clock=clk, sleep=clk.sleep)
+    sched = ChaosSchedule([ChaosEpisode("flap", 0.0, 8.0, period_s=1.0,
+                                        name="f")], seed=1)
+    sched.wrap_transport(t, "b")
+    x = np.zeros((2, 2), np.float32)
+    states = set()
+    for step in range(40):                      # 0.25s steps across chaos
+        clk.advance_to(0.25 * step)
+        t.call(x)
+        states.add(t.breaker.state)
+    assert OPEN in states                       # the flap really bit
+    # after the schedule ends + reset, one window closes the breaker
+    clk.advance_to(sched.episodes[0].end_s + 0.6)
+    logits, ok = t.call(x)
+    assert ok.all() and t.breaker.state == CLOSED
+
+
+def test_single_half_open_probe_and_probe_grant():
+    b = CircuitBreaker(1, reset_s=1.0, clock=lambda: now["t"])
+    now = {"t": 0.0}
+    b.record_failure()
+    assert b.state == OPEN
+    assert not b.try_probe()                    # reset not elapsed
+    now["t"] = 1.5
+    assert b.try_probe()                        # exactly one grant...
+    assert b.state == HALF_OPEN
+    assert not b.try_probe()                    # ...then refused
+    assert not b.would_allow()                  # no second window routed
+    b.record_success()
+    assert b.state == CLOSED
+
+
+def test_router_pick_emits_half_open_before_failback(monkeypatch):
+    """S3: the probe-granted transition happens at pick time, so the
+    event log's ``open < half_open`` and ``failover < failback`` causal
+    assertions hold (the old ``available()`` peek skipped HALF_OPEN)."""
+    from repro.runtime.observability import EventLog
+    clk = VirtualClock()
+    mk = lambda name, cost: RemoteBackend(
+        name, remote_apply,
+        quiet_tconf(breaker_failures=1, breaker_reset_s=0.5),
+        cost_per_request=cost, clock=clk, sleep=clk.sleep)
+    primary, secondary = mk("primary", 0.001), mk("secondary", 0.01)
+    router = RemoteRouter([primary, secondary],
+                          policy="cheapest-available")
+    ev = EventLog(256, clock=clk)
+    router.events = ev
+    for b in router.backends:
+        b.transport.events = ev
+        b.transport.event_source = b.name
+    primary.transport.breaker.record_failure()      # open out of band
+    ev.emit("breaker_open", backend="primary")      # (stand-in marker)
+    assert router.pick(window=1).name == "secondary"   # failover
+    clk.advance_to(1.0)                             # reset elapses
+    picked = router.pick(window=2)
+    assert picked.name == "primary"                 # probe granted here
+    assert primary.transport.breaker.state == HALF_OPEN
+    half = ev.first_seq("breaker_half_open", "primary")
+    failover = ev.first_seq("router_failover")
+    failback = ev.first_seq("router_failback")
+    assert half is not None and failback is not None
+    assert failover < half < failback               # causal order holds
+
+
+# ------------------------------------------------- transport satellites
+
+def test_bounded_attempt_abandons_hung_remote():
+    """S1: a remote_apply that exceeds ``timeout_s`` is abandoned at the
+    deadline (bounded wall-clock wait), counted as a timeout and a
+    breaker failure — not awaited forever."""
+    def hung(x):
+        time.sleep(0.30)                # well past the 50ms deadline
+        return remote_apply(x)
+
+    t = RemoteTransport(hung, quiet_tconf(timeout_s=0.05,
+                                          breaker_failures=1))
+    t0 = time.perf_counter()
+    logits, ok = t.call(np.zeros((2, 2), np.float32))
+    elapsed = time.perf_counter() - t0
+    assert elapsed < 0.25               # returned at the deadline
+    assert logits is None and not ok.any()
+    assert t.stats.timeouts == 1 and t.breaker.state == OPEN
+    t.shutdown(wait=False)              # must not block on the straggler
+
+
+def test_backoff_capped_exponential_with_deterministic_jitter():
+    def sleeps(seed):
+        out = []
+        t = RemoteTransport(
+            lambda x: (_ for _ in ()).throw(RuntimeError("down")),
+            TransportConfig(max_retries=4, retry_backoff_s=0.01,
+                            retry_backoff_cap_s=0.04,
+                            retry_jitter_seed=seed,
+                            breaker_failures=10**6, timeout_s=60.0),
+            sleep=lambda dt: out.append(dt))
+        t.call(np.zeros((1, 2), np.float32))
+        return out
+
+    a = sleeps(seed=0)
+    assert len(a) == 4                  # one sleep per retry
+    raws = [0.01, 0.02, 0.04, 0.04]     # doubling, clipped at the cap
+    for got, raw in zip(a, raws):
+        assert 0.5 * raw <= got < raw   # jitter scales into [0.5, 1.0)
+    assert a == sleeps(seed=0)          # seeded -> reproducible
+    assert a != sleeps(seed=1)
+
+
+# ------------------------------------------- admission control (shed)
+
+def mk_stack(*, batch=8, limit=0, soft=0.5, depth=2, mode="fifo",
+             default_policy=None):
+    t = RemoteTransport(remote_apply, quiet_tconf())
+    engine = CascadeEngine(local_apply, batch_size=batch,
+                           remote_fraction_budget=0.5, t_remote=0.0,
+                           transport=t, default_policy=default_policy)
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7,
+                                pipeline_depth=depth,
+                                completion_mode=mode,
+                                admission_limit=limit,
+                                admission_soft_ratio=soft)
+    return sched, engine
+
+
+def submit_all(sched, xs, policies=None):
+    for i, row in enumerate(xs):
+        pol = policies[i] if policies is not None else None
+        sched.submit(Request(uid=i, local_input=row, remote_input=row,
+                             policy=pol))
+
+
+def test_admission_needs_runtime_path():
+    engine = CascadeEngine(local_apply, remote_apply, batch_size=8,
+                           remote_fraction_budget=0.5, t_remote=0.0)
+    with pytest.raises(ValueError, match="admission"):
+        MicrobatchScheduler(engine, admission_limit=4)
+    engine.close()
+
+
+def test_queue_full_always_sheds_and_soft_watermark_splits():
+    """Hard bound -> SHED regardless of policy (memory safety); soft
+    watermark -> the request's own ``on_miss`` arm decides."""
+    rng = np.random.default_rng(5)
+    xs, _ = make_stream(rng, 40)
+    pols = [RequestPolicy(on_miss="reject") if i % 3 == 0 else None
+            for i in range(40)]
+    sched, engine = mk_stack(batch=8, limit=16, soft=0.5)
+    submit_all(sched, xs, pols)
+    ad = sched.admission
+    assert ad.submitted == 40 and ad.admitted == 16
+    # above the hard limit EVERYTHING sheds, even on_miss="fallback"
+    assert ad.shed_reasons["queue_full"] == 20
+    # between soft (8) and hard (16): reject arm sheds, fallback degrades
+    assert ad.shed_reasons["overload"] > 0 and ad.degraded > 0
+    responses = sched.flush()
+    assert sorted(r.uid for r in responses) == list(range(40))
+    shed = [r for r in responses if r.disposition == SHED]
+    assert len(shed) == ad.shed
+    assert all(r.cost == 0.0 and r.source == "shed" for r in shed)
+    # reconciliation: nothing billed for shed rows, nothing dropped
+    st = engine.stats
+    assert ad.submitted == st.requests + ad.shed
+    assert st.escalations == (st.remote_calls + st.cache_hits
+                              + st.transport_failures)
+    engine.close()
+
+
+def test_shed_decisions_deterministic_across_runs():
+    rng = np.random.default_rng(6)
+    xs, _ = make_stream(rng, 64)
+    pols = [RequestPolicy(on_miss="reject") if i % 4 == 0 else None
+            for i in range(64)]
+
+    def run():
+        sched, engine = mk_stack(batch=8, limit=24, soft=0.5)
+        submit_all(sched, xs, pols)
+        resp = sched.flush()
+        engine.close()
+        return ([(r.uid, r.disposition) for r in
+                 sorted(resp, key=lambda r: r.uid)],
+                dict(sched.admission.shed_reasons))
+
+    a, b = run(), run()
+    assert a == b                       # same queue-depth trajectory
+    assert any(d == SHED for _, d in a[0])
+
+
+def test_deadline_feasibility_uses_service_ema():
+    """With a measured window-service EMA, a deadline that cannot be met
+    sheds (reject) or degrades (fallback); local-only rows that cannot
+    make it are admitted anyway (degrading is a no-op for them)."""
+    sched, engine = mk_stack(batch=8, limit=64, soft=1.0)
+    engine.stats.window_service_ema_s = 0.5     # queue wait >= 0.5s
+    row = np.zeros((4,), np.float32)
+
+    r = sched.submit(Request(uid=0, local_input=row, remote_input=row,
+                             policy=RequestPolicy(deadline_s=0.1,
+                                                  on_miss="reject")))
+    assert r is not None and r.disposition == SHED
+    assert sched.admission.shed_reasons == {"deadline": 1}
+
+    sched.submit(Request(uid=1, local_input=row, remote_input=row,
+                         policy=RequestPolicy(deadline_s=0.1)))
+    assert sched.admission.degrade_reasons == {"deadline": 1}
+
+    sched.submit(Request(uid=2, local_input=row, remote_input=row,
+                         policy=RequestPolicy(deadline_s=0.1,
+                                              escalation="never")))
+    assert sched.admission.degraded == 1        # no-op degrade skipped
+    responses = sched.flush()
+    assert sorted(r.uid for r in responses) == [0, 1, 2]
+    engine.close()
+
+
+def test_streaming_and_fifo_bill_identically_under_chaos():
+    """The billing-identity invariant (DESIGN.md §7) survives fault
+    injection: chaos decisions are count-indexed per backend and windows
+    are submitted in request order in both modes, so seeded brownouts
+    produce the same per-backend failures either way."""
+    rng = np.random.default_rng(8)
+    xs, _ = make_stream(rng, 64, hard_frac=1.0)
+
+    def run(mode):
+        clk = VirtualClock()
+        t = RemoteTransport(remote_apply, quiet_tconf(), clock=clk,
+                            sleep=clk.sleep)
+        sched = ChaosSchedule(
+            [ChaosEpisode("brownout", 0.0, 1e9, rate=0.5, name="b")],
+            seed=9)
+        sched.wrap_transport(t, "remote")
+        engine = CascadeEngine(local_apply, batch_size=8,
+                               remote_fraction_budget=0.5, t_remote=0.0,
+                               transport=t, clock=clk)
+        s = MicrobatchScheduler(engine, fallback=lambda r: -7,
+                                pipeline_depth=2, completion_mode=mode)
+        submit_all(s, xs)
+        resp = s.flush()
+        engine.close()
+        return resp, engine, sched
+
+    r_f, e_f, c_f = run("fifo")
+    r_s, e_s, c_s = run("streaming")
+    assert {r.uid: (r.prediction, r.source) for r in r_f} \
+        == {r.uid: (r.prediction, r.source) for r in r_s}
+    for f in BILLING_FIELDS:
+        assert getattr(e_f.stats, f) == getattr(e_s.stats, f), f
+    assert e_f.stats.per_backend == e_s.stats.per_backend
+    assert c_f.stats.by_episode == c_s.stats.by_episode
+    assert e_f.stats.transport_failures > 0     # chaos actually fired
+
+
+# ------------------------------------------------------- bench smoke
+
+def test_loadgen_traces_are_deterministic():
+    from benchmarks.loadgen import generate_trace, make_features, segments
+
+    a = generate_trace(11, pattern="pareto_burst", rate=50.0,
+                       duration_s=4.0)
+    b = generate_trace(11, pattern="pareto_burst", rate=50.0,
+                       duration_s=4.0)
+    assert [(r.uid, r.t_arrival_s, r.hard, r.policy_name)
+            for r in a.requests] \
+        == [(r.uid, r.t_arrival_s, r.hard, r.policy_name)
+            for r in b.requests]
+    xa, la = make_features(a)
+    xb, lb = make_features(b)
+    assert np.array_equal(xa, xb) and np.array_equal(la, lb)
+    segs = list(segments(a, 1.0))
+    assert len(segs) == 4
+    assert sum(len(bucket) for _, bucket in segs) == len(a)
+    diurnal = generate_trace(11, pattern="diurnal", rate=10.0,
+                             peak_rate=80.0, duration_s=4.0)
+    assert len(diurnal) > 0
+    with pytest.raises(ValueError):
+        generate_trace(0, pattern="tidal", rate=1.0)
+
+
+def test_chaos_bench_smoke():
+    """The CI scenario must pass every acceptance check (the virtual
+    clock keeps the full 60s scenario to ~2s of wall time; shorter
+    durations rescale the episodes and void the causal script)."""
+    from benchmarks import chaos_bench
+
+    report = chaos_bench.run(verbose=False, duration_s=60.0, seed=7,
+                             json_path=None, events_jsonl=None)
+    assert report["passed"], report["checks"]
+    assert report["admission"]["shed"] > 0
+    assert report["chaos"]["injected"] > 0

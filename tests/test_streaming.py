@@ -437,13 +437,16 @@ def test_unrouted_window_replays_after_half_open():
 
 def test_replay_redeem_failure_keeps_rejected_fallback():
     """Breaker still open at drain time: the parked window degrades to
-    REJECTED/fallback exactly as before, attributed to (unrouted)."""
+    REJECTED/fallback exactly as before, attributed to (unrouted).
+    depth=1 so window 1's failure commits at its blocking drain before
+    window 2's pick — the ordering is structural, not a race against
+    the transport pool."""
     t = {"now": 0.0}
     down = {"on": True}
     router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
     rng = np.random.default_rng(11)
     xs, _ = make_stream(rng, 16, hard_frac=1.0)
-    sched, engine = build(router=router, batch=8)
+    sched, engine = build(router=router, batch=8, depth=1)
     responses = serve_all(sched, xs)
     assert sorted(r.uid for r in responses) == list(range(16))
     assert {r.source for r in responses} <= {"local", "fallback"}
@@ -489,7 +492,10 @@ def test_replay_queue_is_bounded():
 
 def test_replay_fifo_and_streaming_account_identically():
     """The replay decision happens at the window's drain in both modes;
-    with deterministic clocks the billing must match bit for bit."""
+    with deterministic clocks the billing must match bit for bit.
+    depth=1 keeps the breaker-open point structural (window 1's failure
+    commits at its drain, before window 2's pick) so both modes see the
+    same route/unrouted split instead of racing the transport pool."""
     rng = np.random.default_rng(12)
     xs, _ = make_stream(rng, 48, hard_frac=1.0)
 
@@ -497,7 +503,7 @@ def test_replay_fifo_and_streaming_account_identically():
         t = {"now": 0.0}
         down = {"on": True}
         router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
-        sched, engine = build(router=router, batch=8, depth=2, mode=mode)
+        sched, engine = build(router=router, batch=8, depth=1, mode=mode)
         resp = serve_all(sched, xs)
         engine.close()
         return resp, engine
@@ -534,7 +540,7 @@ def test_check_regression_gate_tolerances(tmp_path):
         fp = tmp_path / "BENCH_serving.json"
         fp.write_text(json.dumps(fresh))
         return cr.main(["--serving", str(fp), "--routing", "",
-                        "--baseline-dir", str(bdir)])
+                        "--chaos", "", "--baseline-dir", str(bdir)])
 
     # identical fresh run passes
     assert run_gate(base) == 0
@@ -578,8 +584,8 @@ def test_check_regression_update_baselines(tmp_path):
     fp.write_text(json.dumps(fresh))
     bdir = tmp_path / "baselines"
     assert cr.main(["--serving", str(fp), "--routing", "",
-                    "--baseline-dir", str(bdir),
+                    "--chaos", "", "--baseline-dir", str(bdir),
                     "--update-baselines"]) == 0
     assert json.loads((bdir / "BENCH_serving.json").read_text()) == fresh
     assert cr.main(["--serving", str(fp), "--routing", "",
-                    "--baseline-dir", str(bdir)]) == 0
+                    "--chaos", "", "--baseline-dir", str(bdir)]) == 0
