@@ -2,7 +2,8 @@
 (ISSUE 4, ISSUE 7).
 
 Compares freshly produced ``BENCH_serving.json`` / ``BENCH_routing.json``
-/ ``BENCH_chaos.json`` against the committed baselines in
+/ ``BENCH_chaos.json`` / ``BENCH_kernels.json`` against the committed
+baselines in
 ``benchmarks/baselines/`` and FAILS (exit 1) when a tracked metric
 regresses past tolerance — the ``BENCH_*.json`` family stops being
 informational-only and starts gating merges.
@@ -28,7 +29,7 @@ JSONs (run locally after an intentional perf change, and commit).
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--serving BENCH_serving.json] [--routing BENCH_routing.json] \
-        [--chaos BENCH_chaos.json] \
+        [--chaos BENCH_chaos.json] [--kernels BENCH_kernels.json] \
         [--baseline-dir benchmarks/baselines] [--update-baselines]
 """
 
@@ -117,6 +118,7 @@ def check_serving(gate: Gate, fresh: dict, base: dict) -> None:
               "serving: serial/pipelined billing identical")
     _check_policy_section(gate, fresh, base)
     _check_observability_section(gate, fresh, base)
+    _check_continuous_section(gate, fresh, base)
     if ("streaming" in fresh) != ("streaming" in base):
         # a FIFO-mode re-baseline (or a FIFO-mode CI run) must not
         # silently disable every streaming invariant
@@ -177,6 +179,38 @@ def _check_policy_section(gate: Gate, fresh: dict, base: dict) -> None:
                     "serving: mixed-SLA throughput")
     gate.p95(fresh, base, "policy.tight.p95_latency_s",
              "serving: tight-deadline p95")
+
+
+def _check_continuous_section(gate: Gate, fresh: dict, base: dict) -> None:
+    """Continuous-batching gate (ISSUE 8, DESIGN.md §11): slot-map
+    scheduling must keep answers/billing bitwise identical to fixed-
+    window streaming, and the trusted-local SERVICE p95 (net of queue
+    wait) must stay at most half of window streaming's."""
+    if ("continuous" in fresh) != ("continuous" in base):
+        gate.failures.append(
+            "serving: 'continuous' section present in "
+            f"{'fresh' if 'continuous' in fresh else 'baseline'} only — "
+            "run both with --completion-mode streaming (and re-baseline "
+            "with --update-baselines if intentional)")
+        return
+    if "continuous" not in base:
+        return
+    gate.hard(fresh, "continuous.checks.predictions_identical",
+              "serving: continuous predictions identical to window")
+    gate.hard(fresh, "continuous.checks.billing_identical",
+              "serving: continuous billing identical to window")
+    gate.hard(fresh, "continuous.checks.zero_dropped",
+              "serving: continuous zero dropped requests")
+    gate.hard(fresh, "continuous.checks.trusted_local_service_halved",
+              "serving: continuous trusted-local service p95 <= 0.5x "
+              "window streaming")
+    gate.throughput(fresh, base, "continuous.throughput_rps",
+                    "serving: continuous throughput")
+    gate.p95(fresh, base,
+             "continuous.trusted_local.service_p95_latency_s",
+             "serving: continuous trusted-local service p95")
+    gate.p95(fresh, base, "continuous.escalated.p95_latency_s",
+             "serving: continuous escalated p95")
 
 
 def _check_observability_section(gate: Gate, fresh: dict,
@@ -244,6 +278,48 @@ def check_chaos(gate: Gate, fresh: dict, base: dict) -> None:
               "chaos: no breaker stuck open after the scenario")
 
 
+KERNEL_TOL_X = 3.0              # allowed us/call multiple vs baseline
+KERNEL_FLOOR_US = 200.0         # absolute slack (scheduler jitter)
+
+
+def check_kernels(gate: Gate, fresh: dict, base: dict) -> None:
+    """Kernel microbench gate (ISSUE 8): the functional checks (fused
+    head->gate parity, interpret-mode Pallas parity, early-emit firing)
+    are hard invariants of the fresh run; per-kernel us/call tracks the
+    baseline with a generous multiple — CPU ref-path timings are noisy
+    across runners, but an order-of-magnitude blowup (e.g. the fused
+    path silently falling back to a per-row loop) must not land."""
+    for path, label in (
+            ("checks.fused_matches_composed",
+             "kernels: fused head->gate matches composed head+gate"),
+            ("checks.fused_pallas_interpret_parity",
+             "kernels: fused Pallas body matches ref (interpret mode)"),
+            ("checks.early_emit_fired",
+             "kernels: early-emit callback fires from inside jit")):
+        gate.hard(fresh, path, label)
+
+    fresh_rows = {(r["kernel"], r["shape"]): r
+                  for r in fresh.get("rows", [])}
+    base_rows = {(r["kernel"], r["shape"]): r
+                 for r in base.get("rows", [])}
+    missing = sorted(set(base_rows) - set(fresh_rows))
+    if missing:
+        gate.failures.append(
+            f"kernels: baseline rows missing from fresh run: {missing} — "
+            "a benched kernel/shape silently disappeared")
+    for key in sorted(set(base_rows) & set(fresh_rows)):
+        f = fresh_rows[key]["us_per_call"]
+        b = base_rows[key]["us_per_call"]
+        ceil = b * KERNEL_TOL_X + KERNEL_FLOOR_US
+        label = f"kernels: {key[0]} {key[1]} us/call"
+        if f <= ceil:
+            gate.passes.append(f"{label} ({f:.0f} <= {ceil:.0f} us)")
+        else:
+            gate.failures.append(
+                f"{label}: {f:.0f} us exceeds {KERNEL_TOL_X:.0f}x "
+                f"baseline {b:.0f} us (+{KERNEL_FLOOR_US:.0f} us floor)")
+
+
 def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
     gate.hard(fresh, "checks.zero_dropped",
               "routing: zero dropped requests across outage")
@@ -286,6 +362,8 @@ def main(argv=None) -> int:
                     help="fresh routing bench JSON ('' skips)")
     ap.add_argument("--chaos", default="BENCH_chaos.json",
                     help="fresh chaos bench JSON ('' skips)")
+    ap.add_argument("--kernels", default="",
+                    help="fresh kernels bench JSON ('' skips)")
     ap.add_argument("--baseline-dir", default=BASELINE_DIR)
     ap.add_argument("--throughput-tol", type=float, default=THROUGHPUT_TOL)
     ap.add_argument("--p95-tol", type=float, default=P95_TOL)
@@ -309,9 +387,13 @@ def main(argv=None) -> int:
         pairs.append((args.chaos,
                       os.path.join(args.baseline_dir, "BENCH_chaos.json"),
                       check_chaos, "chaos"))
+    if args.kernels:
+        pairs.append((args.kernels,
+                      os.path.join(args.baseline_dir, "BENCH_kernels.json"),
+                      check_kernels, "kernels"))
     if not pairs:
-        _annotate("error", "nothing to check (--serving, --routing and "
-                  "--chaos all empty)")
+        _annotate("error", "nothing to check (--serving, --routing, "
+                  "--chaos and --kernels all empty)")
         return 2
 
     if args.update_baselines:

@@ -5,17 +5,41 @@ Pallas bodies are validated in interpret mode by tests/test_kernels.py);
 the numbers here time the REFERENCE path at serving-relevant shapes and
 derive the kernels' arithmetic intensity — the quantity the BlockSpec
 tiling was designed around (see kernels/*/kernel.py docstrings).
+
+The confidence-gate family (ISSUE 8) is benched in three forms at the
+same serving shapes: the plain gate over precomputed logits, the gate
+with the in-kernel early-emit host callback armed, and the fused local
+head -> gate path (``fused_head_gate``) that composes the final
+projection with gate scoring so full-vocab logits never round-trip
+through HBM. The ``checks`` dict verifies fused-vs-composed parity,
+interpret-mode Pallas parity and that the early-emit callback actually
+fires from inside jit — so the bench gate catches functional breakage,
+not just slowdowns.
+
+Machine-readable results go to ``BENCH_kernels.json``
+(``{"rows": [...], "checks": {...}}``) and are gated across PRs by
+``benchmarks/check_regression.py --kernels``.
+
+    PYTHONPATH=src python -m benchmarks.kernels_bench \
+        [--json BENCH_kernels.json]
 """
 
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.confidence_gate.ops import confidence_gate
+from repro.kernels.confidence_gate.ref import confidence_gate_ref
 from repro.kernels.decode_attention.ops import decode_attn
 from repro.kernels.flash_attention.ops import attention
+from repro.kernels.fused_head_gate.ops import fused_head_gate
+from repro.kernels.fused_head_gate.ref import fused_head_gate_ref
 from repro.kernels.maxconf.ops import maxconf
 from repro.kernels.mdsa.ops import mdsa_distance
 from repro.kernels.rwkv6_scan.ops import rwkv6_time_mix_scan
@@ -29,7 +53,94 @@ def _time(fn, *args, iters=3, **kw):
     return (time.perf_counter() - t0) / iters
 
 
-def run(verbose: bool = True) -> list[dict]:
+def _gate_rows(key) -> list[dict]:
+    """Confidence-gate family at serving shapes (ISSUE 8).
+
+    The fused rows time hidden@W + gate in ONE call; the `AI` column is
+    the fused path's arithmetic intensity (the matmul flops over the
+    hidden + weight traffic — the logits [b,v] never hit HBM), which is
+    the quantity the fusion exists to raise: gate-only AI is O(1)."""
+    rows = []
+    for b, v in ((32, 8_192), (64, 102_400)):
+        lg = jax.random.normal(key, (b, v), jnp.float32)
+        us = _time(confidence_gate, lg, 0.5, supervisor="max_softmax",
+                   k=b) * 1e6
+        # softmax + max + threshold select ~ 6 passes over the logits
+        rows.append({"kernel": "confidence_gate", "shape": f"[{b},{v}]",
+                     "us_per_call": us,
+                     "arith_intensity": 6 * b * v / (4 * b * v)})
+
+        # same gate with the early-emit host callback armed: the row
+        # prices the io_callback tax paid per dispatch in continuous
+        # batching (engine hands trusted rows back at gate time)
+        fired = []
+        us = _time(confidence_gate, lg, 0.5, supervisor="max_softmax",
+                   k=b, emit=lambda *a: fired.append(a)) * 1e6
+        rows.append({"kernel": "confidence_gate_emit",
+                     "shape": f"[{b},{v}]", "us_per_call": us,
+                     "arith_intensity": 6 * b * v / (4 * b * v)})
+
+    for b, d, v in ((32, 1_024, 8_192), (32, 1_024, 102_400)):
+        h = jax.random.normal(key, (b, d), jnp.float32)
+        w = jax.random.normal(key, (d, v), jnp.float32) / np.sqrt(d)
+        us = _time(fused_head_gate, h, w, None, 0.5,
+                   supervisor="max_softmax", k=b) * 1e6
+        flops = 2 * b * d * v
+        rows.append({"kernel": "fused_head_gate",
+                     "shape": f"[{b},{d}]x[{d},{v}]", "us_per_call": us,
+                     "arith_intensity": flops / (4 * (b * d + d * v))})
+    return rows
+
+
+def _gate_checks(key) -> dict:
+    """Functional gates for the fused/early-emit path (ISSUE 8):
+    fused == composed (head then gate), Pallas body == ref in interpret
+    mode, and the early-emit callback fires from inside jit with the
+    same pred the gate returns."""
+    b, d, v = 24, 96, 640           # non-aligned batch, vb|v for pallas
+    h = jax.random.normal(key, (b, d), jnp.float32)
+    w = jax.random.normal(key, (d, v), jnp.float32) / np.sqrt(d)
+    bias = jax.random.normal(key, (v,), jnp.float32) * 0.1
+
+    fused = fused_head_gate_ref(h, w, bias, 0.5, supervisor="max_softmax",
+                                k=b)
+    logits = h.astype(jnp.float32) @ w.astype(jnp.float32) + bias
+    composed = confidence_gate_ref(logits, 0.5, supervisor="max_softmax",
+                                   k=b)
+    fused_matches_composed = (
+        bool(jnp.array_equal(fused["pred"], composed["pred"]))
+        and bool(jnp.array_equal(fused["idx"], composed["idx"]))
+        and bool(jnp.allclose(fused["conf"], composed["conf"],
+                              rtol=2e-4, atol=1e-5)))
+
+    pal = fused_head_gate(h, w, bias, 0.5, supervisor="max_softmax",
+                          k=b, force_pallas=True, interpret=True)
+    pallas_parity = (
+        bool(jnp.array_equal(pal["pred"], fused["pred"]))
+        and bool(jnp.array_equal(pal["idx"], fused["idx"]))
+        and bool(jnp.allclose(pal["conf"], fused["conf"],
+                              rtol=2e-4, atol=1e-5)))
+
+    fired = []
+    out = jax.jit(lambda x: confidence_gate(
+        x, 0.5, supervisor="max_softmax", k=b,
+        emit=lambda tag, conf, pred, idx: fired.append(
+            (int(tag), np.asarray(pred))),
+        emit_tag=7))(logits)
+    jax.block_until_ready(out["pred"])
+    early_emit_fired = (
+        len(fired) == 1 and fired[0][0] == 7
+        and bool(np.array_equal(fired[0][1], np.asarray(out["pred"]))))
+
+    return {
+        "fused_matches_composed": fused_matches_composed,
+        "fused_pallas_interpret_parity": pallas_parity,
+        "early_emit_fired": early_emit_fired,
+    }
+
+
+def run(verbose: bool = True,
+        json_path: str | None = None) -> dict:
     key = jax.random.PRNGKey(0)
     rows = []
 
@@ -41,6 +152,9 @@ def run(verbose: bool = True) -> list[dict]:
         rows.append({"kernel": "maxconf", "shape": f"[{b},{v}]",
                      "us_per_call": us,
                      "arith_intensity": flops / (4 * b * v)})
+
+    # confidence gate + early emit + fused head->gate (ISSUE 8)
+    rows.extend(_gate_rows(key))
 
     # mdsa: Mahalanobis distance, penultimate width 4096
     x = jax.random.normal(key, (256, 4096))
@@ -80,15 +194,34 @@ def run(verbose: bool = True) -> list[dict]:
     rows.append({"kernel": "rwkv6_scan", "shape": f"[{b},{t},{h},{m}]",
                  "us_per_call": us, "arith_intensity": m / 4})
 
+    checks = _gate_checks(key)
+    report = {"rows": rows, "checks": checks,
+              "passed": all(checks.values())}
+
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
     if verbose:
         print("\n--- Kernel microbench (CPU ref path; Pallas bodies are "
               "interpret-validated in tests) ---")
-        print(f"{'kernel':>18} {'shape':>24} {'us/call':>10} {'AI':>7}")
+        print(f"{'kernel':>20} {'shape':>24} {'us/call':>10} {'AI':>7}")
         for r_ in rows:
-            print(f"{r_['kernel']:>18} {r_['shape']:>24} "
+            print(f"{r_['kernel']:>20} {r_['shape']:>24} "
                   f"{r_['us_per_call']:10.0f} {r_['arith_intensity']:7.1f}")
-    return rows
+        print(f"checks {checks}")
+        if json_path:
+            print(f"JSON -> {json_path}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", default="BENCH_kernels.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args(argv)
+    report = run(json_path=args.json or None)
+    return 0 if report["passed"] else 1
 
 
 if __name__ == "__main__":
-    run()
+    raise SystemExit(main())

@@ -32,6 +32,14 @@ escalations to ``DEADLINE_LOCAL``, so tight-deadline requests meet their
 SLA instead of inheriting the remote round trip. The section reports the
 deadline-hit-rate, packed-window purity and per-disposition counts.
 
+A continuous-batching section (DESIGN.md §11) re-serves the streaming
+stream with ``batching="continuous"``: a slot map over the persistent
+padded batch admits requests as slots free up and the in-kernel early
+emit hands trusted-local rows back at gate time. Gated: predictions
+and billing bitwise identical to fixed-window streaming, and the
+trusted-local SERVICE p95 (net of queue wait) at most half of
+window streaming's.
+
 A fifth, observability section (DESIGN.md §9) re-runs the headline
 stream with the full tracing/metrics/event stack enabled and gates:
 traced throughput within 3% of untraced, answers and billing unchanged,
@@ -69,6 +77,8 @@ BATCH = 32
 NCLS = 8
 TARGET = 0.20           # escalation fraction (capacity-k, no controller)
 STREAMING_P95_RATIO = 0.5       # trusted-local p95 <= ratio * FIFO p95
+CONTINUOUS_SERVICE_RATIO = 0.5  # continuous trusted-local service p95
+                                # <= ratio * window-streaming's (ISSUE 8)
 OVERHEAD_BAR = 0.97             # traced throughput >= 97% untraced (§9)
 DEADLINE_HIT_BAR = 0.95         # tight rows meeting their SLA (§8)
 PURITY_BAR = 0.95               # packed windows from one class only
@@ -98,12 +108,14 @@ def make_load(rng, n, hard_frac=0.3):
 
 
 def _mk_config(depth: int, latency_s: float, completion_mode="fifo",
-               packing="none", t_local=None) -> ServeConfig:
+               packing="none", t_local=None,
+               batching="window") -> ServeConfig:
     """The one ServeConfig every bench engine is built from (§8)."""
     return ServeConfig(
         batch_size=BATCH, remote_fraction_budget=TARGET, t_remote=0.0,
         t_local=t_local, pipeline_depth=depth,
         completion_mode=completion_mode, packing=packing, cache_size=0,
+        batching=batching,
         transport=TransportConfig(max_in_flight=BATCH, retry_backoff_s=0.0,
                                   timeout_s=max(2.0, 10 * latency_s),
                                   max_concurrent=max(depth, 1)),
@@ -112,8 +124,9 @@ def _mk_config(depth: int, latency_s: float, completion_mode="fifo",
 
 def _serve(xs, depth: int, latency_s: float, completion_mode="fifo",
            policies=None, packing="none", prior=None, t_local=None,
-           observability=False):
-    cfg = _mk_config(depth, latency_s, completion_mode, packing, t_local)
+           observability=False, batching="window"):
+    cfg = _mk_config(depth, latency_s, completion_mode, packing, t_local,
+                     batching)
     engine, sched = cfg.build(local_apply, make_remote(latency_s),
                               fallback=lambda r: -1, prior=prior)
     # warm the jit cache with one out-of-band batch, then reset accounting
@@ -424,6 +437,50 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
             "passed": all(checks.values()),
         }
         report["passed"] = report["passed_2x"] and all(checks.values())
+
+        # --- continuous batching vs fixed-window streaming (ISSUE 8) ---
+        # Same stream, same depth, batching="continuous": slot-map
+        # admission + in-kernel early emit + host half at gate time.
+        # Cohorts are drawn identically to the fixed-window packer, so
+        # predictions AND billing must stay bitwise identical; the win
+        # is emission timing — trusted-local SERVICE latency (net of
+        # queue wait) must at least halve vs window streaming.
+        r_cont, eng_cont, w_cont, s_cont = _serve(
+            xs, depth=depth, latency_s=remote_latency_s,
+            completion_mode="streaming", batching="continuous")
+        split_cont = _latency_split(r_cont)
+        win_local_p95 = split["trusted_local"]["service_p95_latency_s"]
+        cont_local_p95 = split_cont["trusted_local"]["service_p95_latency_s"]
+        slots = s_cont._slots
+        cont_checks = {
+            # slot-map scheduling must never change answers or billing
+            "predictions_identical": _by_uid(r_cont) == _by_uid(r_str),
+            "billing_identical": _billing_identical(eng_cont, eng_str),
+            "zero_dropped": len(r_cont) == n,
+            # the point of continuous batching: trusted-local rows hand
+            # back at gate time, not at window-drain time
+            "trusted_local_service_halved":
+                cont_local_p95 <= CONTINUOUS_SERVICE_RATIO * win_local_p95,
+        }
+        report["continuous"] = {
+            "wall_s": w_cont,
+            "throughput_rps": n / w_cont,
+            "first_response_s": s_cont.first_response_s,
+            "window_trusted_local_service_p95_s": win_local_p95,
+            "trusted_local_service_ratio_vs_window":
+                cont_local_p95 / max(win_local_p95, 1e-12),
+            "slot_stats": {
+                "capacity": slots.capacity,
+                "peak_occupied": slots.peak,
+                "joins": slots.joins,
+                "leaves": slots.leaves,
+                "occupancy_ema": slots.occupancy_ema,
+            },
+            **split_cont,
+            "checks": cont_checks,
+            "passed": all(cont_checks.values()),
+        }
+        report["passed"] = report["passed"] and all(cont_checks.values())
     else:
         report["passed"] = report["passed_2x"]
 
@@ -466,6 +523,16 @@ def run(verbose: bool = True, requests: int = 1024, depth: int = 8,
                   f"{s['escalated']['p95_latency_s']*1e3:7.1f} ms "
                   f"({s['escalated']['count']} requests); first response "
                   f"{s['first_response_s']*1e3:.1f} ms; checks {s['checks']}")
+        if "continuous" in report:
+            c = report["continuous"]
+            print("--- Continuous batching (slot map + early emit) ---")
+            print(f"trusted-local service p95 "
+                  f"{c['trusted_local']['service_p95_latency_s']*1e3:7.2f} "
+                  f"ms vs window-streaming "
+                  f"{c['window_trusted_local_service_p95_s']*1e3:.2f} ms "
+                  f"-> ratio {c['trusted_local_service_ratio_vs_window']:.3f}"
+                  f" (bar {CONTINUOUS_SERVICE_RATIO})")
+            print(f"slots {c['slot_stats']}; checks {c['checks']}")
         pol = report["policy"]
         print("--- Mixed-SLA policy section (DESIGN.md §8) ---")
         print(f"tight deadline {pol['tight_deadline_s']*1e3:.0f} ms: "

@@ -8,9 +8,11 @@ Validated in interpret mode on CPU; TPU v5e is the compile target.
 from repro.kernels.confidence_gate.ops import confidence_gate
 from repro.kernels.decode_attention.ops import decode_attn
 from repro.kernels.flash_attention.ops import attention
+from repro.kernels.fused_head_gate.ops import FusedLocalHead, fused_head_gate
 from repro.kernels.maxconf.ops import maxconf
 from repro.kernels.mdsa.ops import mdsa_distance
 from repro.kernels.rwkv6_scan.ops import rwkv6_time_mix_scan
 
-__all__ = ["confidence_gate", "maxconf", "mdsa_distance", "attention",
-           "decode_attn", "rwkv6_time_mix_scan"]
+__all__ = ["confidence_gate", "fused_head_gate", "FusedLocalHead",
+           "maxconf", "mdsa_distance", "attention", "decode_attn",
+           "rwkv6_time_mix_scan"]

@@ -49,24 +49,26 @@ NEG = -1e30
 SUPERVISORS = ("max_softmax", "pcs", "neg_entropy", "gini")
 
 
-def _score_kernel(x_ref, conf_ref, pred_ref, m1, m2, s, t, s2, a1, *,
-                  nv: int, vb: int, supervisor: str):
-    j = pl.program_id(1)
+def _init_stats(m1, m2, s, t, s2, a1) -> None:
+    """Reset the per-row online-softmax scratch at class block 0."""
+    m1[...] = jnp.full_like(m1, NEG)
+    m2[...] = jnp.full_like(m2, NEG)
+    s[...] = jnp.zeros_like(s)
+    t[...] = jnp.zeros_like(t)
+    s2[...] = jnp.zeros_like(s2)
+    a1[...] = jnp.zeros_like(a1)
 
-    @pl.when(j == 0)
-    def _init():
-        m1[...] = jnp.full_like(m1, NEG)
-        m2[...] = jnp.full_like(m2, NEG)
-        s[...] = jnp.zeros_like(s)
-        t[...] = jnp.zeros_like(t)
-        s2[...] = jnp.zeros_like(s2)
-        a1[...] = jnp.zeros_like(a1)
 
-    x = x_ref[...].astype(jnp.float32)                     # [BB, VB]
-    col = j * vb + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+def _fold_stats(x, col0, m1, m2, s, t, s2, a1) -> None:
+    """Fold one ``[BB, VB]`` logits block (global column offset ``col0``)
+    into the running statistics, rescaling on every new running max
+    (flash-attention algebra). Shared by the logits-input score kernel
+    and the fused head->gate kernel, which materialises ``x`` from the
+    projection inside the same VMEM tile."""
+    col = col0 + jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
 
     bm1 = jnp.max(x, axis=1)                               # block max
-    ba1 = jnp.argmax(x, axis=1).astype(jnp.int32) + j * vb
+    ba1 = jnp.argmax(x, axis=1).astype(jnp.int32) + col0
     xm = jnp.where(col == ba1[:, None], NEG, x)
     bm2 = jnp.max(xm, axis=1)                              # block 2nd max
     e = jnp.exp(x - bm1[:, None])
@@ -88,20 +90,40 @@ def _score_kernel(x_ref, conf_ref, pred_ref, m1, m2, s, t, s2, a1, *,
     s2[...] = os2 * c_old * c_old + bs2 * c_new * c_new
     a1[...] = jnp.where(bm1 > om1, ba1, oa1)
 
+
+def _stats_epilogue(conf_ref, pred_ref, m1, m2, s, t, s2, a1, *,
+                    supervisor: str) -> None:
+    """Emit the one supervisor's confidence + prediction from the final
+    running statistics (static supervisor: a swap is a recompile)."""
+    zf = s[...]
+    pred_ref[...] = a1[...]
+    if supervisor == "max_softmax":
+        conf_ref[...] = 1.0 / zf                           # exp(m1-m1)/s
+    elif supervisor == "pcs":
+        conf_ref[...] = (1.0 - jnp.exp(m2[...] - m1[...])) / zf
+    elif supervisor == "neg_entropy":
+        conf_ref[...] = t[...] / zf - (m1[...] + jnp.log(zf))
+    elif supervisor == "gini":
+        conf_ref[...] = s2[...] / (zf * zf)
+    else:  # pragma: no cover - guarded in ops.py
+        raise ValueError(f"unknown supervisor {supervisor!r}")
+
+
+def _score_kernel(x_ref, conf_ref, pred_ref, m1, m2, s, t, s2, a1, *,
+                  nv: int, vb: int, supervisor: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_stats(m1, m2, s, t, s2, a1)
+
+    x = x_ref[...].astype(jnp.float32)                     # [BB, VB]
+    _fold_stats(x, j * vb, m1, m2, s, t, s2, a1)
+
     @pl.when(j == nv - 1)
     def _finish():
-        zf = s[...]
-        pred_ref[...] = a1[...]
-        if supervisor == "max_softmax":
-            conf_ref[...] = 1.0 / zf                       # exp(m1-m1)/s
-        elif supervisor == "pcs":
-            conf_ref[...] = (1.0 - jnp.exp(m2[...] - m1[...])) / zf
-        elif supervisor == "neg_entropy":
-            conf_ref[...] = t[...] / zf - (m1[...] + jnp.log(zf))
-        elif supervisor == "gini":
-            conf_ref[...] = s2[...] / (zf * zf)
-        else:  # pragma: no cover - guarded in ops.py
-            raise ValueError(f"unknown supervisor {supervisor!r}")
+        _stats_epilogue(conf_ref, pred_ref, m1, m2, s, t, s2, a1,
+                        supervisor=supervisor)
 
 
 def _select_kernel(t_ref, n_ref, conf_ref, idx_ref, *, k: int, bp: int):

@@ -9,12 +9,24 @@ batch padding is excluded from selection via ``n_valid``).
 Callable supervisors (e.g. a bound MDSA, paper §4.2) always take the
 jnp path — the Pallas scoring kernel is specialised to the softmax
 family it can compute from online statistics.
+
+In-kernel early emit (DESIGN.md §11): pass ``emit`` (a host callback
+``emit(tag, conf, pred, idx) -> None``) and the gate surfaces its output
+triple to the host the moment the scoring/selection pass lands — via
+``jax.experimental.io_callback`` from inside the enclosing jit — so a
+streaming consumer can hand locally-trusted rows back at *gate* time
+instead of waiting for the window's host half to fetch the device
+buffer. ``emit_tag`` (an i32 scalar, typically the window sequence
+number) rides along so the callback can route the triple. The callback
+is effectful, not a value dependency: the op's return value is the same
+device triple with or without it.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import io_callback
 
 from repro.kernels.confidence_gate.kernel import (SUPERVISORS,
                                                   confidence_gate_pallas)
@@ -25,23 +37,36 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def _emit_gate(emit, emit_tag, out) -> None:
+    """Surface the gate triple through the host callback (early emit)."""
+    tag = (jnp.int32(0) if emit_tag is None
+           else jnp.asarray(emit_tag, jnp.int32))
+    io_callback(emit, None, tag, out["conf"], out["pred"], out["idx"],
+                ordered=False)
+
+
 def confidence_gate(logits: jnp.ndarray, t_local=None, n_valid=None, *,
                     supervisor="max_softmax", k: int | None = None,
                     bb: int = 8, vb: int = 128, force_pallas: bool = False,
-                    interpret: bool = False) -> dict[str, jnp.ndarray]:
+                    interpret: bool = False, emit=None,
+                    emit_tag=None) -> dict[str, jnp.ndarray]:
     """logits [B, C] -> {conf [B], pred [B], idx [k]}.
 
     ``idx`` holds up to ``k`` escalation candidates: row indices ascending
     by confidence, only rows ``< n_valid`` with ``conf < t_local``
     (``t_local=None`` disables the threshold); unused slots are -1.
     ``t_local``/``n_valid`` may be traced values — retuning never
-    recompiles.
+    recompiles. ``emit``/``emit_tag`` opt into the in-kernel early-emit
+    host callback (module docstring).
     """
     b, v = logits.shape
     k = b if k is None else min(int(k), b)
     if callable(supervisor) or not (force_pallas or _on_tpu()):
-        return confidence_gate_ref(logits, t_local, n_valid,
-                                   supervisor=supervisor, k=k)
+        out = confidence_gate_ref(logits, t_local, n_valid,
+                                  supervisor=supervisor, k=k)
+        if emit is not None:
+            _emit_gate(emit, emit_tag, out)
+        return out
     if supervisor not in SUPERVISORS:
         raise ValueError(f"unknown supervisor {supervisor!r}; "
                          f"expected one of {SUPERVISORS}")
@@ -61,4 +86,6 @@ def confidence_gate(logits: jnp.ndarray, t_local=None, n_valid=None, *,
     if pad_b:
         out = {"conf": out["conf"][:b], "pred": out["pred"][:b],
                "idx": out["idx"]}
+    if emit is not None:
+        _emit_gate(emit, emit_tag, out)
     return out

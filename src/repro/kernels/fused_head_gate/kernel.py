@@ -1,0 +1,110 @@
+"""Fused local-head -> confidence-gate Pallas TPU kernel.
+
+The local tier's final projection produces ``[B, C]`` logits whose only
+consumer is the confidence gate (``kernels/confidence_gate``): one
+supervisor score, one argmax, one thresholded bottom-k. Materialising
+those logits in HBM just to stream them back into the gate's scoring
+pass doubles the hot path's HBM traffic for a tensor nothing else ever
+reads. This kernel fuses the two: each grid step loads one ``[BB, D]``
+hidden block and one ``[D, VB]`` slice of the head weight, computes the
+``[BB, VB]`` logits tile on the MXU *in VMEM*, and folds it straight
+into the same online-softmax running statistics the standalone gate
+keeps (``_fold_stats`` — exact rescaling on every new running max). The
+full-vocab logits never exist outside a VMEM tile; only the compact
+``(conf [B], pred [B], idx [k])`` triple leaves the device.
+
+Grid: (batch blocks, vocab blocks) with the vocab dimension innermost
+("arbitrary") so the per-row scratch carries across vocab steps —
+identical to the score kernel's schedule, plus one ``[BB, D] x [D, VB]``
+dot per step (``preferred_element_type=f32`` keeps the MXU accumulator
+in full precision). Selection reuses the gate's ``_select_kernel``
+unchanged: thresholded ascending bottom-k over the [B] confidences with
+SMEM-scalar ``t_local``/``n_valid``, so runtime retuning (paper §4.5)
+never recompiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.compat import CompilerParams
+from repro.kernels.confidence_gate.kernel import (_fold_stats, _init_stats,
+                                                  _select_kernel,
+                                                  _stats_epilogue)
+
+
+def _head_gate_kernel(h_ref, w_ref, b_ref, conf_ref, pred_ref,
+                      m1, m2, s, t, s2, a1, *, nv: int, vb: int,
+                      supervisor: str):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_stats(m1, m2, s, t, s2, a1)
+
+    h = h_ref[...].astype(jnp.float32)                     # [BB, D]
+    w = w_ref[...].astype(jnp.float32)                     # [D, VB]
+    x = jnp.dot(h, w, preferred_element_type=jnp.float32)  # logits tile
+    x = x + b_ref[...][None, :]
+    _fold_stats(x, j * vb, m1, m2, s, t, s2, a1)
+
+    @pl.when(j == nv - 1)
+    def _finish():
+        _stats_epilogue(conf_ref, pred_ref, m1, m2, s, t, s2, a1,
+                        supervisor=supervisor)
+
+
+@functools.partial(jax.jit, static_argnames=("supervisor", "k", "bb", "vb",
+                                             "interpret"))
+def fused_head_gate_pallas(hidden: jnp.ndarray, w: jnp.ndarray,
+                           bias: jnp.ndarray, t_local: jnp.ndarray,
+                           n_valid: jnp.ndarray, *, supervisor: str,
+                           k: int, bb: int = 8, vb: int = 128,
+                           interpret: bool = False
+                           ) -> dict[str, jnp.ndarray]:
+    """hidden [B, D] (B % bb == 0), w [D, C] (C % vb == 0), bias [C],
+    t_local f32 scalar (+inf = no threshold), n_valid i32 scalar ->
+    {conf, pred, idx}."""
+    b, d = hidden.shape
+    dw, v = w.shape
+    assert d == dw and bias.shape == (v,), (hidden.shape, w.shape,
+                                            bias.shape)
+    assert b % bb == 0 and v % vb == 0, (b, v, bb, vb)
+    nb, nv = b // bb, v // vb
+
+    row_spec = pl.BlockSpec((bb,), lambda i, j: (i,))
+    conf, pred = pl.pallas_call(
+        functools.partial(_head_gate_kernel, nv=nv, vb=vb,
+                          supervisor=supervisor),
+        grid=(nb, nv),
+        in_specs=[pl.BlockSpec((bb, d), lambda i, j: (i, 0)),
+                  pl.BlockSpec((d, vb), lambda i, j: (0, j)),
+                  pl.BlockSpec((vb,), lambda i, j: (j,))],
+        out_specs=(row_spec, row_spec),
+        out_shape=(jax.ShapeDtypeStruct((b,), jnp.float32),
+                   jax.ShapeDtypeStruct((b,), jnp.int32)),
+        scratch_shapes=[pltpu.VMEM((bb,), jnp.float32)] * 5
+                       + [pltpu.VMEM((bb,), jnp.int32)],
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(hidden, w, bias)
+
+    bp = b + (-b) % 128                                    # lane-align rows
+    conf_row = jnp.full((1, bp), jnp.inf, jnp.float32).at[0, :b].set(conf)
+    idx = pl.pallas_call(
+        functools.partial(_select_kernel, k=k, bp=bp),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.SMEM),
+                  pl.BlockSpec(memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((k,), jnp.int32),
+        interpret=interpret,
+    )(jnp.asarray(t_local, jnp.float32).reshape(1),
+      jnp.asarray(n_valid, jnp.int32).reshape(1), conf_row)
+    return {"conf": conf, "pred": pred, "idx": idx}

@@ -34,8 +34,10 @@ Workload-level knobs keep first-class flags:
 
 Observability (DESIGN.md §9): ``--metrics-dump`` / ``--metrics-interval``
 snapshot the metrics registry (JSON or Prometheus text by extension),
-``--trace`` writes per-request span timelines as JSONL and
-``--trace-chrome`` exports Chrome ``trace_event`` JSON for perfetto.
+``--metrics-port`` serves the LIVE registry over HTTP while the loop
+runs (``GET /metrics`` Prometheus text, ``/metrics.json`` snapshot,
+``/healthz``), ``--trace`` writes per-request span timelines as JSONL
+and ``--trace-chrome`` exports Chrome ``trace_event`` JSON for perfetto.
 Any of these implies ``observability=True`` on the ``ServeConfig``.
 
 On this CPU container use ``--smoke`` (reduced remote config).
@@ -131,6 +133,11 @@ def main(argv=None) -> int:
     ap.add_argument("--metrics-interval", type=float, metavar="S",
                     help="re-dump/print metrics every S seconds while "
                          "serving (implies observability)")
+    ap.add_argument("--metrics-port", type=int, metavar="PORT",
+                    help="serve the live metrics registry over HTTP on "
+                         "this port (GET /metrics = Prometheus text, "
+                         "/metrics.json = JSON snapshot, /healthz; 0 = "
+                         "ephemeral; implies observability)")
     ap.add_argument("--trace", metavar="PATH",
                     help="write per-request span timelines as JSONL "
                          "(implies observability)")
@@ -139,6 +146,7 @@ def main(argv=None) -> int:
                          "chrome://tracing (implies observability)")
     args = ap.parse_args(argv)
     want_obs = (args.metrics_dump or args.metrics_interval
+                or args.metrics_port is not None
                 or args.trace or args.trace_chrome)
     try:
         cfg = build_serve_config(args)
@@ -292,6 +300,14 @@ def main(argv=None) -> int:
         pump_thread = threading.Thread(target=pump, daemon=True)
         pump_thread.start()
 
+    # live HTTP scrape endpoint (DESIGN.md §9): Prometheus polls the
+    # registry while the serve loop runs, no file dumps required
+    metrics_server = None
+    if obs is not None and args.metrics_port is not None:
+        from repro.runtime.observability import MetricsServer
+        metrics_server = MetricsServer(obs.metrics, port=args.metrics_port)
+        print(f"[serve] metrics endpoint: {metrics_server.url}")
+
     t0 = time.perf_counter()
     try:
         for i in range(args.requests):
@@ -305,6 +321,8 @@ def main(argv=None) -> int:
         if pump_thread is not None:
             stop_pump.set()
             pump_thread.join(timeout=5.0)
+        if metrics_server is not None:
+            metrics_server.close()
     wall = time.perf_counter() - t0
 
     correct = sum(r.prediction == labels[r.uid] for r in responses

@@ -73,6 +73,7 @@ __all__ = [
     "Gauge",
     "Histogram",
     "MetricsRegistry",
+    "MetricsServer",
     "Observability",
     "TraceSink",
 ]
@@ -102,9 +103,13 @@ EV_ADMISSION_SHED = "admission_shed"
 EV_ADMISSION_DEGRADE = "admission_degrade"
 
 # canonical span stage order (a span contains the subset that applies to
-# its disposition; timestamps are nondecreasing in this order)
-SPAN_STAGES = ("enqueue", "pack", "dispatch", "gate", "route",
-               "cache_hit", "remote", "commit", "handback")
+# its disposition; timestamps are nondecreasing in this order).
+# "pack" and "join" are alternatives: windowed rows are packed into a
+# microbatch, continuous-batching rows join a slot of the persistent
+# batch (DESIGN.md §11); "emit" marks a trusted-local row surfaced at
+# gate time by the in-kernel early emit, ahead of its window's commit
+SPAN_STAGES = ("enqueue", "pack", "join", "dispatch", "gate", "route",
+               "cache_hit", "remote", "commit", "emit", "handback")
 
 # fixed histogram buckets for latency-shaped observations (seconds);
 # +inf is implicit (the _count line covers it)
@@ -509,3 +514,76 @@ def _collect_engine(reg: MetricsRegistry, engine: Any) -> None:
         reg.gauge("cache_misses").set(cst.misses)
         reg.gauge("cache_evictions").set(cst.evictions)
         reg.gauge("cache_entries").set(len(engine.cache))
+
+
+class MetricsServer:
+    """Stdlib HTTP scrape endpoint for a ``MetricsRegistry``.
+
+    Serves the live registry over a daemon thread (DESIGN.md §9 follow-
+    on: metrics over a real scrape endpoint instead of file dumps):
+
+    * ``GET /metrics``      — Prometheus text exposition
+      (``render_prometheus``; content type ``text/plain; version=0.0.4``)
+    * ``GET /metrics.json`` — the JSON ``snapshot``
+    * ``GET /healthz``      — liveness probe (``ok``)
+
+    ``port=0`` binds an ephemeral port; the realised one is ``.port``.
+    Collectors registered on the registry run at scrape time under the
+    registry's own synchronisation, so scrapes ride alongside a live
+    serve loop without touching its hot path. ``close()`` (or the
+    context manager) shuts the listener down; request logging is
+    suppressed — a scrape every few seconds must not spam the serve
+    loop's stderr.
+    """
+
+    def __init__(self, metrics: MetricsRegistry, port: int = 0,
+                 host: str = "127.0.0.1"):
+        import http.server
+
+        registry = metrics
+
+        class Handler(http.server.BaseHTTPRequestHandler):
+            def do_GET(self) -> None:  # noqa: N802 - stdlib casing
+                path = self.path.split("?", 1)[0]
+                if path == "/metrics":
+                    body = registry.render_prometheus().encode()
+                    ctype = "text/plain; version=0.0.4; charset=utf-8"
+                elif path == "/metrics.json":
+                    body = json.dumps(registry.snapshot()).encode()
+                    ctype = "application/json"
+                elif path == "/healthz":
+                    body, ctype = b"ok\n", "text/plain; charset=utf-8"
+                else:
+                    self.send_error(404)
+                    return
+                self.send_response(200)
+                self.send_header("Content-Type", ctype)
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+
+            def log_message(self, fmt: str, *args: Any) -> None:
+                pass
+
+        self.metrics = metrics
+        self._server = http.server.ThreadingHTTPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.host, self.port = self._server.server_address[:2]
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        name="metrics-server", daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}/metrics"
+
+    def close(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+        self._thread.join(timeout=5.0)
+
+    def __enter__(self) -> "MetricsServer":
+        return self
+
+    def __exit__(self, exc_type: Any, exc: Any, tb: Any) -> None:
+        self.close()

@@ -85,7 +85,8 @@ import numpy as np
 from repro.core.cascade import (combine_escalated, escalation_capacity,
                                 gather_requests, select_escalations)
 from repro.core.supervisors import SOFTMAX_SUPERVISORS
-from repro.kernels.confidence_gate.ops import confidence_gate
+from repro.kernels.confidence_gate.ops import _on_tpu, confidence_gate
+from repro.kernels.fused_head_gate.ops import FusedLocalHead, fused_head_gate
 from repro.runtime.observability import (EV_DEADLINE_DOWNGRADE,
                                          EV_POLICY_DOWNGRADE)
 from repro.runtime.transport import (RemoteBackend, RemoteRouter,
@@ -281,7 +282,8 @@ def make_local_step(local_apply: Callable, supervisor="max_softmax"):
     return step
 
 
-def make_gated_local_step(local_apply: Callable, supervisor="max_softmax"):
+def make_gated_local_step(local_apply: Callable, supervisor="max_softmax",
+                          emit=None):
     """Jit-able local tier fused with the confidence gate: supervisor
     scoring + thresholded ascending escalation ranking happen on device,
     and only the compact ``(conf [B], pred [B], idx [B])`` triple crosses
@@ -290,12 +292,40 @@ def make_gated_local_step(local_apply: Callable, supervisor="max_softmax"):
     step(local_batch, t_local [f32 scalar, +inf = no threshold],
          n_valid [i32 scalar]) -> {conf, pred, idx}; the scalars are
     traced, so runtime retuning never recompiles.
-    """
 
-    def step(local_batch, t_local, n_valid):
+    When ``local_apply`` is a ``FusedLocalHead`` the final projection is
+    folded into the gate's scoring pass (kernels/fused_head_gate) so
+    full-vocab logits never round-trip through HBM.
+
+    ``emit`` opts into in-kernel early emit (DESIGN.md §11): the step
+    gains a trailing ``seq`` arg and the gate surfaces its triple to
+    ``emit(seq, conf, pred, idx)`` on the host the moment it lands.
+    """
+    fused = isinstance(local_apply, FusedLocalHead)
+
+    if emit is None:
+        def step(local_batch, t_local, n_valid):
+            if fused:
+                h = local_apply.trunk(local_batch)
+                return fused_head_gate(h, local_apply.w, local_apply.bias,
+                                       t_local, n_valid,
+                                       supervisor=supervisor)
+            logits = local_apply(local_batch)
+            return confidence_gate(logits, t_local, n_valid,
+                                   supervisor=supervisor)
+
+        return step
+
+    def step(local_batch, t_local, n_valid, seq):
+        if fused:
+            h = local_apply.trunk(local_batch)
+            return fused_head_gate(h, local_apply.w, local_apply.bias,
+                                   t_local, n_valid, supervisor=supervisor,
+                                   emit=emit, emit_tag=seq)
         logits = local_apply(local_batch)
         return confidence_gate(logits, t_local, n_valid,
-                               supervisor=supervisor)
+                               supervisor=supervisor, emit=emit,
+                               emit_tag=seq)
 
     return step
 
@@ -359,6 +389,7 @@ class _InFlight:
     # -- dispatch half (device) ----------------------------------------
     gate_dev: Any = None        # un-fetched device gate output
     remote_batch: Any = None    # batch["remote"], held until the host half
+    gate_done: bool = False     # gate half ran (conf/pred/idx pinned)
     host_done: bool = False
     # -- host half ------------------------------------------------------
     conf: np.ndarray | None = None   # [b] 1st-level confidences
@@ -437,7 +468,7 @@ class CascadeEngine:
                  supervisor="max_softmax", transport=None, controller=None,
                  cache=None, clock: Callable[[], float] = time.perf_counter,
                  default_policy: RequestPolicy | None = None,
-                 observability=None):
+                 observability=None, early_emit: bool | str = False):
         if remote_apply is None and transport is None:
             raise ValueError("need a remote tier: remote_apply or transport")
         self.batch_size = batch_size
@@ -482,12 +513,31 @@ class CascadeEngine:
         self.observability = None
         if observability is not None:
             observability.install(self)
+        # in-kernel early emit (DESIGN.md §11): the gate surfaces its
+        # triple through an io_callback keyed by window seq the moment
+        # the scoring pass lands, so the continuous batcher can hand
+        # locally-trusted rows back at *gate* time instead of waiting
+        # for the window's host half to fetch the device buffer.
+        # "auto" arms it only where dispatch is asynchronous enough for
+        # the callback to overlap device work (TPU): on CPU the host
+        # rendezvous costs ~350us per dispatch — more than the whole
+        # local step — and the host half reads the device buffer just
+        # as fast. The callback is an accelerator, never a correctness
+        # dependency: unarmed (or late), the host half falls back to
+        # the ordinary device fetch.
+        if early_emit == "auto":
+            early_emit = _on_tpu()
+        self.early_emit = bool(early_emit) and transport is not None
+        self._gate_emits = 0            # telemetry: callbacks landed
+        self._gate_lock = threading.Lock()
+        self._gate_results: dict[int, tuple] = {}
         if transport is None:
             self._step = jax.jit(make_cascade_step(
                 local_apply, remote_apply, self.capacity, supervisor))
         else:
-            self._local_step = jax.jit(make_gated_local_step(local_apply,
-                                                             supervisor))
+            self._local_step = jax.jit(make_gated_local_step(
+                local_apply, supervisor,
+                emit=self._on_gate if self.early_emit else None))
 
     # -- ServeConfig construction (DESIGN.md §8) -----------------------
     _UNSET = object()
@@ -528,7 +578,10 @@ class CascadeEngine:
                       cache=(config.build_cache() if cache is cls._UNSET
                              else cache),
                       clock=clock, default_policy=config.default_policy,
-                      observability=config.build_observability())
+                      observability=config.build_observability(),
+                      early_emit=("auto"
+                                  if config.batching == "continuous"
+                                  else False))
         if config.t_local is not None:
             eng.set_local_threshold(config.t_local)
         return eng
@@ -540,6 +593,27 @@ class CascadeEngine:
     def set_local_threshold(self, t: float | None) -> None:
         """Runtime escalation gate (runtime path; None = capacity-k)."""
         self.t_local = t
+
+    # -- in-kernel early emit (DESIGN.md §11) ---------------------------
+    def _on_gate(self, seq, conf, pred, idx) -> None:
+        """io_callback target: the gate's (conf, pred, idx) triple for
+        window ``seq`` just landed on the host. Runs whenever the device
+        forces the computation — possibly on a transport thread — so it
+        only stores and signals; consumers poll ``gate_result``."""
+        with self._gate_lock:
+            self._gate_results[int(seq)] = (np.asarray(conf).copy(),
+                                            np.asarray(pred).copy(),
+                                            np.asarray(idx).copy())
+            self._gate_emits += 1
+        self._ready.set()
+
+    def gate_result(self, seq: int):
+        """The early-emitted gate triple for window ``seq`` (``(conf,
+        pred, idx)`` numpy arrays), or None if the gate hasn't cleared
+        yet. Entries are consumed by the window's host half and swept at
+        commit; callers must treat the arrays as read-only."""
+        with self._gate_lock:
+            return self._gate_results.get(seq)
 
     # ------------------------------------------------------------------
     def serve(self, batch: dict[str, Any], real_rows: int | None = None,
@@ -585,6 +659,16 @@ class CascadeEngine:
         if prev is not None and not prev.host_done:
             self._host_begin(prev)
         return fl
+
+    def flush_gate(self) -> None:
+        """Run only the GATE half of the NEWEST window's deferred host
+        work: triple fetch + escalation-set pinning + policy pass, no
+        cache/routing/transport. The continuous scheduler calls this
+        right after ``begin_serve`` so trusted-local rows hand back
+        before the escalations are even routed; ``flush_dispatch`` (or
+        the drain) later completes the submit half (DESIGN.md §11)."""
+        if self._inflight and not self._inflight[-1].gate_done:
+            self._host_gate(self._inflight[-1])
 
     def flush_dispatch(self) -> None:
         """Run the deferred host half of the NEWEST window (the double
@@ -753,8 +837,13 @@ class CascadeEngine:
             t_local = self.controller.t_local
         t = np.float32(np.inf) if t_local is None else np.float32(t_local)
 
-        gate_dev = self._local_step(batch["local"], t, np.int32(real))
-        self._seq += 1
+        seq = self._seq + 1
+        if self.early_emit:
+            gate_dev = self._local_step(batch["local"], t, np.int32(real),
+                                        np.int32(seq))
+        else:
+            gate_dev = self._local_step(batch["local"], t, np.int32(real))
+        self._seq = seq
         fl = _InFlight(seq=self._seq, t0=t0, b=b, real=real,
                        asynchronous=asynchronous, capacity=capacity,
                        gate_dev=gate_dev, remote_batch=batch["remote"],
@@ -769,16 +858,29 @@ class CascadeEngine:
         return fl
 
     # -- runtime path: host half ---------------------------------------
-    def _host_begin(self, fl: _InFlight) -> None:
-        """Fetch the gate triple off the device and run the host
-        escalation path: batched gather, cache lookups, submit-time
-        routing and the remote submission for the misses."""
-        gate = jax.device_get(fl.gate_dev)
+    def _host_gate(self, fl: _InFlight) -> None:
+        """The CHEAP half of the host work: land the gate triple on the
+        host (early-emit reuse or device fetch), pin the escalation set
+        and run the per-request policy pass. After this every locally-
+        trusted row is fully decidable — the continuous scheduler calls
+        it via ``flush_gate`` so those rows hand back BEFORE the
+        escalations' cache/routing/transport submission (DESIGN.md
+        §11)."""
+        emitted = self.gate_result(fl.seq) if self.early_emit else None
+        if emitted is not None:
+            # the in-kernel emit already landed this window's triple on
+            # the host — reuse it instead of a second device fetch
+            conf, pred, cand = emitted
+            fl.conf = np.asarray(conf)
+            fl.local_pred = np.asarray(pred)
+        else:
+            gate = jax.device_get(fl.gate_dev)
+            fl.conf = np.asarray(gate["conf"])
+            fl.local_pred = np.asarray(gate["pred"])
+            cand = gate["idx"]
         fl.gate_dev = None
-        fl.conf = np.asarray(gate["conf"])
-        fl.local_pred = np.asarray(gate["pred"])
         fl.pred = fl.local_pred.copy()
-        cand = np.asarray(gate["idx"])
+        cand = np.asarray(cand)
         cand = cand[cand >= 0]          # eligible rows, ascending by conf
         fl.k = int(min(cand.size, fl.capacity, fl.real))
         fl.idx = cand[:fl.k]
@@ -790,7 +892,14 @@ class CascadeEngine:
             # overrides, cost-cap and deadline-vs-EMA feasibility — may
             # shrink/extend fl.idx and record downgrades/forced rejects
             self._apply_policies(fl)
+        fl.gate_done = True
 
+    def _host_begin(self, fl: _InFlight) -> None:
+        """Run the host escalation path: the gate half (if it hasn't run
+        yet), then batched gather, cache lookups, submit-time routing and
+        the remote submission for the misses."""
+        if not fl.gate_done:
+            self._host_gate(fl)
         if fl.k > 0:
             host = jax.tree.map(np.asarray, fl.remote_batch)
             sub = jax.tree.map(lambda a: a[fl.idx], host)  # batched gather
@@ -1158,6 +1267,11 @@ class CascadeEngine:
                                     fl.remote_conf[:fl.real],
                                     cost=window_cost,
                                     policy_blocked=fl.blocked)
+        if self.early_emit:
+            # sweep the early-emit triple (the host half may have left it
+            # behind when it raced the device fetch)
+            with self._gate_lock:
+                self._gate_results.pop(fl.seq, None)
         return fl.result
 
     def _publish_commit(self, fl: _InFlight, window_cost: float,

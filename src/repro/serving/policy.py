@@ -68,6 +68,12 @@ DISPOSITIONS = (LOCAL, REMOTE, CACHED, REJECTED, DEADLINE_LOCAL,
 
 PACKING_MODES = ("none", "policy")
 
+# microbatch formation (DESIGN.md §11): "window" accumulates fixed
+# `_next_chunk()` windows (the PR-3..7 behaviour); "continuous" admits
+# rows into free slots of a persistent padded batch (slot-map) and hands
+# locally-trusted rows back at gate time via in-kernel early emit
+BATCHING_MODES = ("window", "continuous")
+
 
 @dataclass(frozen=True)
 class RequestPolicy:
@@ -171,9 +177,10 @@ class ServeConfig:
     supervisor: str = "max_softmax"
     cost: Any = None                    # CostModel | None = engine default
     fused: bool = False                 # seed-style fully-jitted cascade
-    # -- pipeline / completion (DESIGN.md §5, §7) -----------------------
+    # -- pipeline / completion (DESIGN.md §5, §7, §11) ------------------
     pipeline_depth: int = 1
     completion_mode: str = "fifo"
+    batching: str = "window"            # window | continuous (slot-map)
     # -- remote tier(s) (DESIGN.md §3, §6) ------------------------------
     transport: TransportConfig = field(default_factory=TransportConfig)
     remotes: tuple[RemoteSpec, ...] = ()
@@ -212,6 +219,15 @@ class ServeConfig:
         if self.packing not in PACKING_MODES:
             raise ValueError(f"unknown packing {self.packing!r}; "
                              f"choose from {PACKING_MODES}")
+        if self.batching not in BATCHING_MODES:
+            raise ValueError(f"unknown batching {self.batching!r}; "
+                             f"choose from {BATCHING_MODES}")
+        if self.batching == "continuous" and self.completion_mode != \
+                "streaming":
+            raise ValueError("batching='continuous' requires "
+                             "completion_mode='streaming' (rows hand back "
+                             "as they clear; a FIFO drain would re-impose "
+                             "window quantization)")
         if self.admission_limit < 0:
             raise ValueError("admission_limit must be >= 0")
         if not 0.0 <= self.admission_soft_ratio <= 1.0:
@@ -223,11 +239,12 @@ class ServeConfig:
                            or self.packing != "none"
                            or self.remotes
                            or self.observability
-                           or self.admission_limit):
+                           or self.admission_limit
+                           or self.batching != "window"):
             raise ValueError("fused bypasses the transport path: drop "
                              "adaptive/pipeline_depth/streaming/"
                              "cost_budget/default_policy/packing/remotes/"
-                             "observability/admission_limit")
+                             "observability/admission_limit/batching")
 
     # -- component builders --------------------------------------------
     def build_router(self, remote_apply: Callable, **kw) -> RemoteRouter:

@@ -74,8 +74,8 @@ import numpy as np
 
 from repro.runtime.observability import (EV_ADMISSION_DEGRADE,
                                          EV_ADMISSION_SHED)
-from repro.serving.policy import (CACHED, LOCAL, REJECTED, REMOTE, SHED,
-                                  RequestPolicy, ServeConfig)
+from repro.serving.policy import (BATCHING_MODES, CACHED, LOCAL, REJECTED,
+                                  REMOTE, SHED, RequestPolicy, ServeConfig)
 
 COMPLETION_MODES = ("fifo", "streaming")
 
@@ -131,7 +131,8 @@ class AdmissionStats:
 class _Window:
     """Scheduler-side bookkeeping for one in-flight microbatch."""
 
-    __slots__ = ("chunk", "fl", "t_disp", "emitted", "host_emitted")
+    __slots__ = ("chunk", "fl", "t_disp", "emitted", "host_emitted",
+                 "early_emitted", "left")
 
     def __init__(self, chunk, fl, t_disp):
         self.chunk = chunk
@@ -139,6 +140,54 @@ class _Window:
         self.t_disp = t_disp            # window dispatch stamp (queue_s)
         self.emitted: set[int] = set()  # rows already handed back
         self.host_emitted = False       # host-half emission pass done
+        self.early_emitted = False      # pre-decided cache hits handed back
+        self.left = 0                   # rows already freed in the slot map
+
+
+class _SlotMap:
+    """Slot-occupancy ledger for the continuous batcher (DESIGN.md §11).
+
+    The continuous serve loop admits dispatch cohorts against FREE SLOTS
+    of a persistent padded batch (``batch_size × pipeline_depth`` rows)
+    instead of counting whole in-flight windows: a row occupies its slot
+    from dispatch until its response is handed back, so a cohort of
+    trusted-local rows returns its slots at *gate* time and admission
+    reopens while the window's escalations are still on the wire. The
+    occupancy-fraction EMA is the admission/deadline-feasibility signal
+    (`_queue_wait_estimate`) — the continuous analogue of queue depth in
+    windows."""
+
+    __slots__ = ("capacity", "occupied", "peak", "joins", "leaves",
+                 "occupancy_ema", "_alpha")
+
+    def __init__(self, capacity: int, alpha: float = 0.2):
+        self.capacity = max(1, capacity)
+        self.occupied = 0
+        self.peak = 0
+        self.joins = 0
+        self.leaves = 0
+        self.occupancy_ema = 0.0
+        self._alpha = alpha
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.occupied
+
+    def join(self, n: int) -> None:
+        self.occupied += n
+        self.joins += n
+        if self.occupied > self.peak:
+            self.peak = self.occupied
+        self._observe()
+
+    def leave(self, n: int) -> None:
+        self.occupied -= n
+        self.leaves += n
+        self._observe()
+
+    def _observe(self) -> None:
+        frac = self.occupied / self.capacity
+        self.occupancy_ema += self._alpha * (frac - self.occupancy_ema)
 
 
 class MicrobatchScheduler:
@@ -147,7 +196,8 @@ class MicrobatchScheduler:
                  packing: str = "none",
                  prior: Callable[[Request], float] | None = None,
                  admission_limit: int = 0,
-                 admission_soft_ratio: float = 0.5):
+                 admission_soft_ratio: float = 0.5,
+                 batching: str = "window"):
         if completion_mode not in COMPLETION_MODES:
             raise ValueError(f"unknown completion_mode {completion_mode!r};"
                              f" choose from {COMPLETION_MODES}")
@@ -157,10 +207,28 @@ class MicrobatchScheduler:
             raise ValueError("window packing needs the runtime path")
         if admission_limit and engine.transport is None:
             raise ValueError("admission control needs the runtime path")
+        if batching not in BATCHING_MODES:
+            raise ValueError(f"unknown batching {batching!r}; "
+                             f"choose from {BATCHING_MODES}")
+        if batching == "continuous":
+            if engine.transport is None:
+                raise ValueError("continuous batching needs the runtime "
+                                 "path")
+            if completion_mode != "streaming":
+                raise ValueError("batching='continuous' requires "
+                                 "completion_mode='streaming'")
         self.engine = engine
         self.fallback = fallback
         self.pipeline_depth = max(1, pipeline_depth)
         self.completion_mode = completion_mode
+        self.batching = batching
+        # slot-occupancy ledger (continuous only; DESIGN.md §11) — also
+        # the admission/deadline-feasibility signal between flushes
+        self._slots = (_SlotMap(engine.batch_size * self.pipeline_depth)
+                       if batching == "continuous" else None)
+        # span-stage vocabulary: continuous rows JOIN the slot map (and
+        # may carry an early EMIT stage); window rows are packed
+        self._pack_stage = "join" if batching == "continuous" else "pack"
         if completion_mode == "streaming":
             # we consume fl.early (cache hits handed back at gate-clear);
             # FIFO consumers leave it off and skip the extra host pass
@@ -208,7 +276,8 @@ class MicrobatchScheduler:
                    completion_mode=config.completion_mode,
                    packing=config.packing, prior=prior,
                    admission_limit=config.admission_limit,
-                   admission_soft_ratio=config.admission_soft_ratio)
+                   admission_soft_ratio=config.admission_soft_ratio,
+                   batching=config.batching)
 
     # -- admission ------------------------------------------------------
     def submit(self, req: Request) -> Response | None:
@@ -278,11 +347,22 @@ class MicrobatchScheduler:
         rows to clear its own window: full windows ahead of it plus its
         own, priced at the engine's measured window-service EMA. None
         until a window has committed (no estimate beats a fabricated
-        one)."""
+        one).
+
+        Continuous batching (DESIGN.md §11) prices against SLOT occupancy
+        instead: rows already holding slots are ahead of the queue, but
+        up to ``pipeline_depth`` cohorts drain concurrently, so the
+        window count amortizes over the pipeline width — an idle slot map
+        collapses the estimate to one window's EMA, a saturated one
+        degrades toward the windowed bound."""
         ema = self.engine.stats.window_service_ema_s
         if ema is None:
             return None
-        return (depth // self.engine.batch_size + 1) * ema
+        b = self.engine.batch_size
+        if self._slots is not None:
+            rows_ahead = depth + self._slots.occupied
+            return ema * (1.0 + (rows_ahead // b) / self.pipeline_depth)
+        return (depth // b + 1) * ema
 
     def _shed(self, req: Request, reason: str) -> Response:
         """Refuse ``req`` at admission: answer immediately from the
@@ -423,16 +503,20 @@ class MicrobatchScheduler:
     # -- per-request trace spans (DESIGN.md §9) ------------------------
     def _emit_span(self, resp: Response, req: Request, t_disp: float,
                    tr: dict, window: int, handback: float, *,
-                   remote: bool, hit: bool) -> None:
+                   remote: bool, hit: bool,
+                   emit_ts: float | None = None) -> None:
         """Assemble one request's span timeline from its window's stage
         stamps. Stages are appended in canonical ``SPAN_STAGES`` order —
-        enqueue → pack → dispatch → gate → route → cache_hit/remote →
-        commit → hand-back — and each stamp was taken later than the one
-        before it, so timestamps are nondecreasing by construction.
-        ``commit`` is present whenever the window committed before the
-        row was handed back (always true for sync/FIFO drains; absent
-        for streaming rows emitted ahead of their window's commit)."""
-        stages = [["enqueue", req.t_enq], ["pack", t_disp],
+        enqueue → pack/join → dispatch → gate → route → cache_hit/remote
+        → commit → emit → hand-back — and each stamp was taken later than
+        the one before it, so timestamps are nondecreasing by
+        construction. ``commit`` is present whenever the window committed
+        before the row was handed back (always true for sync/FIFO drains;
+        absent for streaming rows emitted ahead of their window's
+        commit). Continuous-batching rows join a slot instead of packing
+        a window (``join`` stage) and trusted-local rows surfaced at gate
+        time carry an ``emit`` stage (DESIGN.md §11)."""
+        stages = [["enqueue", req.t_enq], [self._pack_stage, t_disp],
                   ["dispatch", tr["dispatch"]]]
         if "gate" in tr:
             stages.append(["gate", tr["gate"]])
@@ -446,6 +530,8 @@ class MicrobatchScheduler:
             stages.append(["remote", tr["remote"]])
         if "commit" in tr:
             stages.append(["commit", tr["commit"]])
+        if emit_ts is not None:
+            stages.append(["emit", emit_ts])
         stages.append(["handback", handback])
         self.engine.observability.trace.emit({
             "uid": resp.uid, "window": window,
@@ -515,6 +601,8 @@ class MicrobatchScheduler:
         # returns every submission exactly once" true for every caller)
         shed = self._drain_shed()
         if self.engine.transport is not None:
+            if self.batching == "continuous":
+                return shed + self._flush_continuous(depth)
             if self.completion_mode == "streaming":
                 return shed + self._flush_streaming(depth)
             if depth > 1:
@@ -613,6 +701,108 @@ class MicrobatchScheduler:
                     emit_window(seq, res)
         return out
 
+    # -- continuous batching (DESIGN.md §11) ---------------------------
+    def _flush_continuous(self, depth: int) -> list[Response]:
+        """Slot-map serve loop: dispatch cohorts join free slots of a
+        persistent ``batch_size × depth`` padded batch and every row
+        leaves its slot the moment its response is handed back. Two
+        deltas against the streaming window drain, neither of which
+        touches what is served:
+
+        * each cohort's host half runs IMMEDIATELY after its dispatch
+          (``flush_dispatch`` after every ``begin_serve`` instead of only
+          before blocking), so a trusted-local row's service time is the
+          gate time — the in-kernel early emit lands the gate triple on
+          the host as the scoring pass clears, and the hand-back happens
+          before the next cohort is even formed;
+        * without a live controller, admission is keyed on FREE SLOTS
+          rather than in-flight window count: a cohort of trusted locals
+          returns its slots at gate time and the loop admits the next
+          cohort while earlier escalations are still on the wire (the
+          row-level backpressure bound is the slot capacity, not
+          ``depth`` windows).
+
+        Cohorts are still drawn cold-first exactly like ``_next_chunk``
+        (hot/cold are slot-priority classes; the never-mixed invariant is
+        per dispatch cohort), and the engine still commits accounting in
+        submission order — so predictions, billing and controller
+        observations are bitwise-identical to ``batching="window"``. With
+        a live controller the admission bound stays ``depth`` in-flight
+        windows so the begin/commit interleaving (hence every threshold
+        snapshot) reproduces the windowed streaming drain exactly. One
+        caveat matches the documented streaming-vs-FIFO one: because host
+        halves run one begin EARLIER than the windowed drain, a response
+        cache can resolve lookups against a younger cache state — billing
+        identity is exact for cacheless runs (DESIGN.md §11)."""
+        self._check_exclusive_engine()
+        out: list[Response] = []
+        windows: dict[int, _Window] = {}        # seq -> bookkeeping
+        fifo_drain = self.engine.controller is not None
+        slots = self._slots
+        slots.capacity = max(1, self.engine.batch_size * depth)
+
+        def sync_slots(w: _Window) -> None:
+            freed = len(w.emitted) - w.left
+            if freed > 0:
+                slots.leave(freed)
+                w.left = len(w.emitted)
+
+        def emit_ready_locals():
+            for w in windows.values():
+                if not w.host_emitted and w.fl.gate_done:
+                    self._emit_locals(w, out)
+                    sync_slots(w)
+                elif (w.host_emitted and not w.early_emitted
+                        and w.fl.host_done and w.fl.early):
+                    # pre-decided cache hits surface at the submit half,
+                    # AFTER the gate-time local emission pass
+                    self._emit_early_hits(w, out)
+                    sync_slots(w)
+
+        def emit_window(seq, res):
+            w = windows.pop(seq)
+            if not w.host_emitted:      # host half ran at the finalize
+                self._emit_locals(w, out)
+            self._emit_escalated(w, res, out)
+            sync_slots(w)
+
+        def admissible() -> bool:
+            if fifo_drain:
+                return self.engine.inflight < depth
+            return slots.free >= self.engine.batch_size
+
+        while self._qsize() or windows:
+            while self._qsize() and admissible():
+                chunk, batch = self._next_chunk()
+                t_disp = self._clock()
+                fl = self.engine.begin_serve(batch, real_rows=len(chunk),
+                                             **self._serve_args(chunk))
+                windows[fl.seq] = _Window(chunk, fl, t_disp)
+                slots.join(len(chunk))
+                # run this cohort's GATE half NOW (triple fetch + policy
+                # pass only — the early-emitted triple is already on the
+                # host) and hand its trusted locals back before the
+                # escalations' cache/routing/remote submission even runs;
+                # flush_dispatch then completes the submit half
+                self.engine.flush_gate()
+                emit_ready_locals()
+                self.engine.flush_dispatch()
+                emit_ready_locals()
+                if not fifo_drain:
+                    for seq, res in self.engine.complete_ready():
+                        emit_window(seq, res)
+            self.engine.flush_dispatch()
+            emit_ready_locals()
+            if not windows:
+                break
+            if fifo_drain:
+                res = self.engine.complete_next()
+                emit_window(min(windows), res)      # FIFO = lowest seq
+            else:
+                for seq, res in self.engine.complete_ready(block=True):
+                    emit_window(seq, res)
+        return out
+
     def _emit_locals(self, w: _Window, out: list[Response]) -> None:
         """Hand back every row decidable at the window's host half: the
         locally-trusted rows (gate cleared), policy/deadline downgrades
@@ -635,8 +825,24 @@ class MicrobatchScheduler:
             self._record(resp, out)
             if tr is not None:
                 self._emit_span(resp, req, w.t_disp, tr, fl.seq, now,
-                                remote=False, hit=False)
+                                remote=False, hit=False,
+                                emit_ts=(now if self._slots is not None
+                                         else None))
             w.emitted.add(i)
+        w.host_emitted = True
+        if fl.host_done:
+            # window/streaming drains run the whole host half at once, so
+            # pre-decided cache hits are known here; the continuous loop
+            # emits at GATE time (before the submit half) and offers the
+            # hits in a later ``emit_ready_locals`` pass instead
+            self._emit_early_hits(w, out)
+
+    def _emit_early_hits(self, w: _Window, out: list[Response]) -> None:
+        """Hand back the window's pre-decided cache hits (``fl.early`` —
+        no remote round trip to wait for; the §8 latency fix)."""
+        fl = w.fl
+        now = self._clock()
+        tr = fl.tr if self._tracing() else None
         for e in fl.early:
             i = e["row"]
             if i in w.emitted or i >= len(w.chunk):
@@ -663,7 +869,7 @@ class MicrobatchScheduler:
                 self._emit_span(resp, req, w.t_disp, tr, fl.seq, now,
                                 remote=False, hit=True)
             w.emitted.add(i)
-        w.host_emitted = True
+        w.early_emitted = True
 
     def _emit_escalated(self, w: _Window, res: dict,
                         out: list[Response]) -> None:

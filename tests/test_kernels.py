@@ -124,6 +124,107 @@ def test_confidence_gate_callable_supervisor_falls_back():
                                   np.asarray(want["idx"]))
 
 
+def test_confidence_gate_early_emit_fires_inside_jit():
+    """The early-emit host callback (ISSUE 8) must fire exactly once per
+    gate call from INSIDE a jitted computation, tagged with the dispatch
+    seq and carrying the same conf/pred/idx the gate returns."""
+    logits = rnd(jax.random.fold_in(KEY, 7), (8, 64), scale=4.0)
+    fired = []
+
+    def emit(tag, conf, pred, idx):
+        fired.append((int(tag), np.asarray(pred).copy(),
+                      np.asarray(idx).copy()))
+
+    out = jax.jit(lambda x: confidence_gate(
+        x, 0.5, supervisor="max_softmax", k=4, emit=emit,
+        emit_tag=11))(logits)
+    jax.block_until_ready(out["pred"])
+    assert len(fired) == 1
+    tag, pred, idx = fired[0]
+    assert tag == 11
+    np.testing.assert_array_equal(pred, np.asarray(out["pred"]))
+    np.testing.assert_array_equal(idx, np.asarray(out["idx"]))
+
+
+# --------------------------------------------------------- fused head->gate
+
+def _fused_mats(seed, b, d, v):
+    k1 = jax.random.fold_in(KEY, seed)
+    h = rnd(k1, (b, d), scale=1.0)
+    w = rnd(jax.random.fold_in(k1, 1), (d, v), scale=1.0 / np.sqrt(d))
+    bias = rnd(jax.random.fold_in(k1, 2), (v,), scale=0.1)
+    return h, w, bias
+
+
+@pytest.mark.parametrize("supervisor", sorted(SOFTMAX_SUPERVISORS))
+@pytest.mark.parametrize("b,d,v", [(8, 128, 512), (3, 64, 100),
+                                   (12, 96, 640)])
+def test_fused_head_gate_matches_ref(supervisor, b, d, v):
+    """Pallas body (interpret mode) vs the jnp oracle. pred/idx must be
+    bitwise identical; conf tolerates summation-order noise from folding
+    the vocab in 128-wide blocks (neg_entropy amplifies it through the
+    cancellation in its epilogue, hence the 2e-4 rtol)."""
+    from repro.kernels.fused_head_gate.ops import fused_head_gate
+    from repro.kernels.fused_head_gate.ref import fused_head_gate_ref
+    h, w, bias = _fused_mats(b * d * v, b, d, v)
+    got = fused_head_gate(h, w, bias, supervisor=supervisor,
+                          force_pallas=True, interpret=True)
+    want = fused_head_gate_ref(h, w, bias, supervisor=supervisor)
+    np.testing.assert_allclose(np.asarray(got["conf"]),
+                               np.asarray(want["conf"]),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got["pred"]),
+                                  np.asarray(want["pred"]))
+    np.testing.assert_array_equal(np.asarray(got["idx"]),
+                                  np.asarray(want["idx"]))
+
+
+def test_fused_head_gate_matches_composed_gate():
+    """Fusing the projection must not change the gate's contract: the
+    ref oracle equals confidence_gate_ref over the composed logits, and
+    threshold/validity/k semantics carry over unchanged."""
+    from repro.kernels.fused_head_gate.ops import fused_head_gate
+    from repro.kernels.fused_head_gate.ref import fused_head_gate_ref
+    b, d, v = 12, 64, 256
+    h, w, bias = _fused_mats(5, b, d, v)
+    logits = h @ w + bias
+    for sup in sorted(SOFTMAX_SUPERVISORS):
+        conf = np.asarray(SOFTMAX_SUPERVISORS[sup](logits))
+        srt = np.sort(conf[:9])
+        t = float(0.5 * (srt[3] + srt[4]))
+        fused = fused_head_gate_ref(h, w, bias, t, 9, supervisor=sup, k=6)
+        composed = confidence_gate_ref(logits, t, 9, supervisor=sup, k=6)
+        np.testing.assert_array_equal(np.asarray(fused["idx"]),
+                                      np.asarray(composed["idx"]), sup)
+        np.testing.assert_array_equal(np.asarray(fused["pred"]),
+                                      np.asarray(composed["pred"]), sup)
+        # pallas body honours the same threshold/validity contract
+        pal = fused_head_gate(h, w, bias, t, 9, supervisor=sup, k=6,
+                              force_pallas=True, interpret=True)
+        np.testing.assert_array_equal(np.asarray(pal["idx"]),
+                                      np.asarray(composed["idx"]), sup)
+
+
+def test_fused_local_head_is_drop_in_local_apply():
+    """FusedLocalHead composes trunk -> projection when called like a
+    plain local_apply (the engine's non-fused paths and billing-parity
+    A/B rely on this)."""
+    from repro.kernels.fused_head_gate.ops import FusedLocalHead
+    b, d, v = 4, 32, 64
+    h, w, bias = _fused_mats(6, b, d, v)
+    head = FusedLocalHead(trunk=lambda x: 2.0 * x, w=w, bias=bias)
+    np.testing.assert_allclose(np.asarray(head(h)),
+                               np.asarray((2.0 * h) @ w + bias),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_head_gate_dim_mismatch_raises():
+    from repro.kernels.fused_head_gate.ops import fused_head_gate
+    h, w, _ = _fused_mats(8, 4, 32, 64)
+    with pytest.raises(ValueError):
+        fused_head_gate(h, w[:16], None)
+
+
 # -------------------------------------------------------------------- mdsa
 
 @pytest.mark.parametrize("b,d", [(8, 64), (128, 128), (100, 200), (1, 32)])

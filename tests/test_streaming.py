@@ -435,26 +435,37 @@ def test_unrouted_window_replays_after_half_open():
     engine.close()
 
 
-def test_replay_redeem_failure_keeps_rejected_fallback():
+@pytest.mark.parametrize("depth", [1, 4])
+def test_replay_redeem_failure_keeps_rejected_fallback(depth):
     """Breaker still open at drain time: the parked window degrades to
-    REJECTED/fallback exactly as before, attributed to (unrouted).
-    depth=1 so window 1's failure commits at its blocking drain before
-    window 2's pick — the ordering is structural, not a race against
-    the transport pool."""
+    REJECTED/fallback exactly as before.
+
+    At depth=1 window 1's failure commits at its blocking drain before
+    window 2's pick, so the route/park split is structural: window 1
+    fails ON the backend, window 2 parks at (unrouted).  At depth>1
+    window 2's submit races window 1's breaker-opening failure on the
+    transport pool, so WHERE each window's 4 failures land ("only" vs
+    (unrouted)) is timing-dependent — but the OUTCOME is not: every
+    escalated row fails exactly once somewhere, nothing is served or
+    billed, and the replay slot is never redeemed (reset_s=1e9)."""
     t = {"now": 0.0}
     down = {"on": True}
     router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
     rng = np.random.default_rng(11)
     xs, _ = make_stream(rng, 16, hard_frac=1.0)
-    sched, engine = build(router=router, batch=8, depth=1)
+    sched, engine = build(router=router, batch=8, depth=depth)
     responses = serve_all(sched, xs)
     assert sorted(r.uid for r in responses) == list(range(16))
     assert {r.source for r in responses} <= {"local", "fallback"}
     st = engine.stats
-    assert st.per_backend["only"].transport_failures == 4
-    assert st.per_backend[UNROUTED].transport_failures == 4
+    if depth == 1:
+        # structural split: window 1 on-backend, window 2 parked
+        assert st.per_backend["only"].transport_failures == 4
+        assert st.per_backend[UNROUTED].transport_failures == 4
+        assert router.stats.replay_enqueued >= 1
+    assert st.transport_failures == 8       # 4 per window, wherever landed
+    assert sum(u.transport_failures for u in st.per_backend.values()) == 8
     assert st.total_cost == 0.0 and st.remote_calls == 0
-    assert router.stats.replay_enqueued >= 1
     assert router.stats.replay_served == 0
     engine.close()
 
@@ -490,12 +501,20 @@ def test_replay_queue_is_bounded():
     assert router.acquire_replay_slot()             # slot released
 
 
-def test_replay_fifo_and_streaming_account_identically():
-    """The replay decision happens at the window's drain in both modes;
-    with deterministic clocks the billing must match bit for bit.
-    depth=1 keeps the breaker-open point structural (window 1's failure
-    commits at its drain, before window 2's pick) so both modes see the
-    same route/unrouted split instead of racing the transport pool."""
+@pytest.mark.parametrize("depth", [1, 4])
+def test_replay_fifo_and_streaming_account_identically(depth):
+    """The replay decision happens at the window's drain in both modes.
+
+    At depth=1 the breaker-open point is structural (window 1's failure
+    commits at its drain, before window 2's pick), so both modes see
+    the same route/unrouted split and the accounting matches bit for
+    bit INCLUDING per-backend attribution.  At depth>1 each mode races
+    the transport pool independently, so the "only"-vs-(unrouted) split
+    may differ between modes — the guarantee weakens to: identical
+    responses per uid (a row fails to the same REJECTED/fallback
+    whether it failed on the wire or was parked) and identical totals
+    for every BILLING_FIELDS entry (each escalated row fails exactly
+    once somewhere, nothing served, nothing billed)."""
     rng = np.random.default_rng(12)
     xs, _ = make_stream(rng, 48, hard_frac=1.0)
 
@@ -503,15 +522,22 @@ def test_replay_fifo_and_streaming_account_identically():
         t = {"now": 0.0}
         down = {"on": True}
         router = RemoteRouter([mk_flaky_backend(t, down, reset_s=1e9)])
-        sched, engine = build(router=router, batch=8, depth=1, mode=mode)
+        sched, engine = build(router=router, batch=8, depth=depth,
+                              mode=mode)
         resp = serve_all(sched, xs)
         engine.close()
-        return resp, engine
+        return resp, engine, router
 
-    r_f, e_f = run("fifo")
-    r_s, e_s = run("streaming")
+    r_f, e_f, rt_f = run("fifo")
+    r_s, e_s, rt_s = run("streaming")
     assert by_uid(r_f) == by_uid(r_s)
-    assert_same_accounting(e_f, e_s)
+    if depth == 1:
+        assert_same_accounting(e_f, e_s)    # incl. per-backend split
+    else:
+        for f in BILLING_FIELDS:
+            assert getattr(e_f.stats, f) == getattr(e_s.stats, f), f
+        assert e_f.stats.remote_calls == 0 and e_f.stats.total_cost == 0.0
+    assert rt_f.stats.replay_served == rt_s.stats.replay_served == 0
 
 
 # ------------------------------------------------ bench regression gate
@@ -570,6 +596,93 @@ def test_check_regression_gate_tolerances(tmp_path):
     # a FIFO-mode fresh run must not silently skip streaming checks
     bad = json.loads(json.dumps(base))
     del bad["streaming"]
+    assert run_gate(bad) == 1
+
+
+def test_check_regression_continuous_section(tmp_path):
+    """The continuous-batching section (ISSUE 8) gates like streaming:
+    hard identity/service-latency checks, presence-mismatch failure."""
+    from benchmarks import check_regression as cr
+
+    base = {
+        "predictions_identical": True, "billing_identical": True,
+        "serial": {"throughput_rps": 100.0, "p95_wall_latency_s": 0.100},
+        "pipelined": {"throughput_rps": 800.0, "p95_wall_latency_s": 0.110},
+        "continuous": {
+            "throughput_rps": 700.0,
+            "trusted_local": {"service_p95_latency_s": 0.001},
+            "escalated": {"p95_latency_s": 0.140},
+            "checks": {"zero_dropped": True, "predictions_identical": True,
+                       "billing_identical": True,
+                       "trusted_local_service_halved": True},
+        },
+    }
+    bdir = tmp_path / "baselines"
+    bdir.mkdir()
+    (bdir / "BENCH_serving.json").write_text(json.dumps(base))
+
+    def run_gate(fresh):
+        fp = tmp_path / "BENCH_serving.json"
+        fp.write_text(json.dumps(fresh))
+        return cr.main(["--serving", str(fp), "--routing", "",
+                        "--chaos", "", "--baseline-dir", str(bdir)])
+
+    assert run_gate(base) == 0
+    # losing bitwise identity to the window drain is a hard failure
+    bad = json.loads(json.dumps(base))
+    bad["continuous"]["checks"]["predictions_identical"] = False
+    assert run_gate(bad) == 1
+    # a fresh run silently dropping the section is a failure
+    bad = json.loads(json.dumps(base))
+    del bad["continuous"]
+    assert run_gate(bad) == 1
+    # service p95 is floor-absorbed (ms scale) but hard checks are not
+    ok = json.loads(json.dumps(base))
+    ok["continuous"]["trusted_local"]["service_p95_latency_s"] = 0.010
+    assert run_gate(ok) == 0
+
+
+def test_check_regression_kernels_gate(tmp_path):
+    """--kernels gates the microbench: functional checks are hard; a
+    vanished row or an order-of-magnitude us/call blowup fails."""
+    from benchmarks import check_regression as cr
+
+    base = {
+        "rows": [{"kernel": "fused_head_gate", "shape": "[32,1k]x[1k,8k]",
+                  "us_per_call": 1000.0, "arith_intensity": 16.0},
+                 {"kernel": "confidence_gate", "shape": "[32,8192]",
+                  "us_per_call": 500.0, "arith_intensity": 1.5}],
+        "checks": {"fused_matches_composed": True,
+                   "fused_pallas_interpret_parity": True,
+                   "early_emit_fired": True},
+    }
+    bdir = tmp_path / "baselines"
+    bdir.mkdir()
+    (bdir / "BENCH_kernels.json").write_text(json.dumps(base))
+
+    def run_gate(fresh):
+        fp = tmp_path / "BENCH_kernels.json"
+        fp.write_text(json.dumps(fresh))
+        return cr.main(["--serving", "", "--routing", "", "--chaos", "",
+                        "--kernels", str(fp),
+                        "--baseline-dir", str(bdir)])
+
+    assert run_gate(base) == 0
+    # within the generous multiple passes
+    ok = json.loads(json.dumps(base))
+    ok["rows"][0]["us_per_call"] = 1000.0 * 2.5
+    assert run_gate(ok) == 0
+    # beyond it fails
+    bad = json.loads(json.dumps(base))
+    bad["rows"][0]["us_per_call"] = 1000.0 * 3.5 + 500.0
+    assert run_gate(bad) == 1
+    # a benched kernel/shape silently disappearing fails
+    bad = json.loads(json.dumps(base))
+    bad["rows"] = bad["rows"][1:]
+    assert run_gate(bad) == 1
+    # functional parity checks are hard failures
+    bad = json.loads(json.dumps(base))
+    bad["checks"]["early_emit_fired"] = False
     assert run_gate(bad) == 1
 
 
