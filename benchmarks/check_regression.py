@@ -1,9 +1,9 @@
-"""Perf regression gate for the serving/routing/chaos benchmarks
-(ISSUE 4, ISSUE 7).
+"""Perf regression gate for the serving/routing/chaos/kernels/cluster
+benchmarks (ISSUE 4, ISSUE 7, ISSUE 9).
 
 Compares freshly produced ``BENCH_serving.json`` / ``BENCH_routing.json``
-/ ``BENCH_chaos.json`` / ``BENCH_kernels.json`` against the committed
-baselines in
+/ ``BENCH_chaos.json`` / ``BENCH_kernels.json`` / ``BENCH_cluster.json``
+against the committed baselines in
 ``benchmarks/baselines/`` and FAILS (exit 1) when a tracked metric
 regresses past tolerance — the ``BENCH_*.json`` family stops being
 informational-only and starts gating merges.
@@ -23,13 +23,16 @@ Two kinds of checks:
     exactly to the total. These fail regardless of tolerances.
 
 In GitHub Actions the script emits ``::error`` / ``::notice`` workflow
-annotations (visible on the PR) instead of silently uploading artifacts.
+annotations (visible on the PR) instead of silently uploading artifacts,
+and appends a markdown verdict to the job's step summary
+(``GITHUB_STEP_SUMMARY``). ``--all`` checks every bench tag at once
+(filling the default ``BENCH_*.json`` path for any not given);
+``--verdict-json`` additionally writes a machine-readable verdict.
 ``--update-baselines`` rewrites the committed baselines from the fresh
 JSONs (run locally after an intentional perf change, and commit).
 
-    PYTHONPATH=src python -m benchmarks.check_regression \
-        [--serving BENCH_serving.json] [--routing BENCH_routing.json] \
-        [--chaos BENCH_chaos.json] [--kernels BENCH_kernels.json] \
+    PYTHONPATH=src python -m benchmarks.check_regression --all \
+        [--verdict-json BENCH_verdict.json] \
         [--baseline-dir benchmarks/baselines] [--update-baselines]
 """
 
@@ -320,6 +323,51 @@ def check_kernels(gate: Gate, fresh: dict, base: dict) -> None:
                 f"baseline {b:.0f} us (+{KERNEL_FLOOR_US:.0f} us floor)")
 
 
+def check_cluster(gate: Gate, fresh: dict, base: dict) -> None:
+    """Cluster gate (DESIGN.md §12, ISSUE 9): N replicas behind one
+    logical cascade, on a virtual clock — every check is a hard
+    correctness invariant of the fresh run. The baseline additionally
+    pins the fleet geometry so the scenario cannot silently shrink."""
+    for key in ("replicas", "target_remote_fraction"):
+        f, b = fresh.get(key), base.get(key)
+        if f == b:
+            gate.passes.append(f"cluster: {key} matches baseline ({f})")
+        else:
+            gate.failures.append(
+                f"cluster: {key} changed from baseline {b!r} to {f!r} — "
+                "re-baseline with --update-baselines if intentional")
+    gate.hard(fresh, "checks.deterministic_replay",
+              "cluster: double run replays bit-identically")
+    gate.hard(fresh, "checks.zero_silent_drop",
+              "cluster: every uid answered exactly once across the fleet")
+    gate.hard(fresh, "checks.single_fill",
+              "cluster: no content key fetched remotely twice")
+    gate.hard(fresh, "checks.cross_replica_sharing",
+              "cluster: peers serve hits from other replicas' fills")
+    gate.hard(fresh, "checks.global_budget_holds",
+              "cluster: fleet remote fraction within global tolerance")
+    gate.hard(fresh, "checks.replica_skew_far_outside",
+              "cluster: worst single replica far outside the tolerance")
+    gate.hard(fresh, "checks.targets_reweighted",
+              "cluster: reconcile spread per-replica targets under skew")
+    gate.hard(fresh, "checks.admission_reconciles",
+              "cluster: per-replica submitted = admitted + shed")
+    gate.hard(fresh, "checks.billing_reconciles",
+              "cluster: per-replica billing sums bitwise to fleet total")
+    gate.hard(fresh, "checks.sheds_exercised",
+              "cluster: overload produced sheds")
+    gate.hard(fresh, "checks.faults_injected",
+              "cluster: scripted chaos episode actually fired")
+    gate.hard(fresh, "checks.breakers_recovered",
+              "cluster: no breaker stuck open after the scenario")
+    gate.hard(fresh, "checks.majority_served",
+              "cluster: >=50% of offered load served")
+    gate.hard(fresh, "checks.no_events_dropped",
+              "cluster: shared event log dropped nothing")
+    gate.hard(fresh, "checks.reconcile_events_logged",
+              "cluster: one event per budget reconcile, none missing")
+
+
 def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
     gate.hard(fresh, "checks.zero_dropped",
               "routing: zero dropped requests across outage")
@@ -354,6 +402,46 @@ def _load(path: str, what: str) -> dict | None:
         return json.load(f)
 
 
+def _write_verdict(path: str, gate: Gate, tags: list[str],
+                   passed: bool) -> None:
+    """Machine-readable gate verdict (consumed by CI dashboards)."""
+    verdict = {
+        "passed": passed,
+        "checked": tags,
+        "counts": {"passed": len(gate.passes),
+                   "failed": len(gate.failures)},
+        "passes": gate.passes,
+        "failures": gate.failures,
+    }
+    with open(path, "w") as f:
+        json.dump(verdict, f, indent=1)
+    print(f"[check_regression] verdict -> {path}")
+
+
+def _step_summary(gate: Gate, tags: list[str], passed: bool) -> None:
+    """Append a markdown verdict to the GitHub Actions step summary."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        f"## Bench regression gate: {'PASS' if passed else 'FAIL'}",
+        "",
+        f"{len(gate.passes)} passed, {len(gate.failures)} failed "
+        f"({', '.join(tags)})",
+        "",
+    ]
+    if gate.failures:
+        lines += ["### Failures", ""]
+        lines += [f"- :x: {m}" for m in gate.failures]
+        lines += [""]
+    lines += ["<details><summary>Passed checks "
+              f"({len(gate.passes)})</summary>", ""]
+    lines += [f"- {m}" for m in gate.passes]
+    lines += ["", "</details>", ""]
+    with open(path, "a") as f:
+        f.write("\n".join(lines))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--serving", default="BENCH_serving.json",
@@ -364,6 +452,13 @@ def main(argv=None) -> int:
                     help="fresh chaos bench JSON ('' skips)")
     ap.add_argument("--kernels", default="",
                     help="fresh kernels bench JSON ('' skips)")
+    ap.add_argument("--cluster", default="",
+                    help="fresh cluster bench JSON ('' skips)")
+    ap.add_argument("--all", action="store_true",
+                    help="check every bench tag, filling the default "
+                         "BENCH_<tag>.json path for any not given")
+    ap.add_argument("--verdict-json", default="", metavar="PATH",
+                    help="also write a machine-readable verdict here")
     ap.add_argument("--baseline-dir", default=BASELINE_DIR)
     ap.add_argument("--throughput-tol", type=float, default=THROUGHPUT_TOL)
     ap.add_argument("--p95-tol", type=float, default=P95_TOL)
@@ -373,6 +468,10 @@ def main(argv=None) -> int:
                     help="copy the fresh JSONs over the committed "
                          "baselines instead of checking")
     args = ap.parse_args(argv)
+    if args.all:
+        for tag in ("serving", "routing", "chaos", "kernels", "cluster"):
+            if not getattr(args, tag):
+                setattr(args, tag, f"BENCH_{tag}.json")
 
     pairs = []          # (fresh path, baseline path, checker, tag)
     if args.serving:
@@ -391,9 +490,13 @@ def main(argv=None) -> int:
         pairs.append((args.kernels,
                       os.path.join(args.baseline_dir, "BENCH_kernels.json"),
                       check_kernels, "kernels"))
+    if args.cluster:
+        pairs.append((args.cluster,
+                      os.path.join(args.baseline_dir, "BENCH_cluster.json"),
+                      check_cluster, "cluster"))
     if not pairs:
         _annotate("error", "nothing to check (--serving, --routing, "
-                  "--chaos and --kernels all empty)")
+                  "--chaos, --kernels and --cluster all empty)")
         return 2
 
     if args.update_baselines:
@@ -418,7 +521,12 @@ def main(argv=None) -> int:
 
     for msg in gate.passes:
         print(f"[check_regression] ok: {msg}")
-    if gate.failures:
+    passed = not gate.failures
+    tags = [tag for _, _, _, tag in pairs]
+    if args.verdict_json:
+        _write_verdict(args.verdict_json, gate, tags, passed)
+    _step_summary(gate, tags, passed)
+    if not passed:
         for msg in gate.failures:
             _annotate("error", msg)
         _annotate("error", f"{len(gate.failures)} regression check(s) "

@@ -1,0 +1,413 @@
+"""Multi-replica cluster bench (ISSUE 9 acceptance; DESIGN.md §12).
+
+Four ``CascadeEngine`` replicas run behind ONE logical cascade — a
+shared two-backend router, a shared single-fill response store and one
+cluster budget reconciler — against a skewed diurnal trace (valley 32
+rps, peak 128 rps). Traffic is deliberately unbalanced: hard requests
+land mostly on r0/r1 and easy ones on r2/r3 (weighted seeded draw), so
+no per-replica budget could hold the fleet target alone. Request
+features come from shared prototype pools, so the same content key
+recurs on different replicas and exercises cross-replica cache sharing.
+A scripted chaos episode browns out the primary backend mid-run and
+ramps its latency (seeded, on the virtual clock).
+
+Everything is virtual-time and seed-driven; the whole scenario runs
+TWICE and the bench gates on the ISSUE 9 acceptance criteria:
+
+  * deterministic replay — every response, per-replica billing field,
+    reconcile target, fill-feed record and event count matches bit for
+    bit across the two runs;
+  * single fill — no content key is ever fetched remotely twice
+    (``duplicate_fills == 0`` and the fill feed holds unique keys;
+    same-window duplicate rows ride the fill's own remote call);
+  * global budget holds under skew — the traffic-weighted fleet remote
+    fraction lands within ``GLOBAL_TOL`` of the target while the worst
+    single replica is far outside it (the reconciler's re-weighted
+    targets, not luck);
+  * zero silent drops + billing reconciliation — every uid is answered
+    exactly once across the fleet, and per-replica admission/billing
+    counters reconcile bitwise with the cluster-summed billing.
+
+Machine-readable results go to ``BENCH_cluster.json`` (gated in CI by
+``check_regression.py --cluster``); the shared event log of run A goes
+to ``BENCH_cluster_events.jsonl`` (uploaded as a CI artifact).
+
+    PYTHONPATH=src python -m benchmarks.cluster_bench \
+        [--duration 60] [--seed 7] [--json BENCH_cluster.json] \
+        [--events-jsonl BENCH_cluster_events.jsonl]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.loadgen import generate_trace, segments
+from repro.runtime import (ChaosEpisode, ChaosSchedule, ClusterHarness,
+                           RemoteBackend, RemoteRouter, TransportConfig,
+                           VirtualClock)
+from repro.runtime.observability import EV_CLUSTER_RECONCILE
+from repro.runtime.transport import CLOSED
+from repro.serving import ServeConfig
+from repro.serving.engine import BILLING_FIELDS
+from repro.serving.policy import REJECTED, SHED
+from repro.serving.scheduler import Request
+
+REPLICAS = 4
+BATCH = 16
+NCLS = 8
+TARGET = 0.25                   # global remote-fraction budget
+SEGMENT_S = 1.0                 # drive-loop granularity (virtual)
+BASE_RATE, PEAK_RATE = 32.0, 128.0
+HARD_FRAC = 0.4
+ADMISSION_LIMIT = 32            # per replica; soft watermark 16
+RECONCILE_S = 2.0               # cluster budget cadence (virtual)
+PROTOS = 48                     # shared content pool size per difficulty
+# fraction of requests carrying FRESH (never-repeated) content: keeps
+# billed remote demand alive after the shared cache warms — without it
+# the 2*PROTOS-key space fills within ~20 virtual s and the remote tier
+# (and the chaos episodes scripted on it) would go completely idle
+FRESH_HARD, FRESH_EASY = 0.5, 0.3
+# replica assignment weights: hard traffic piles onto r0/r1, easy onto
+# r2/r3 — the skew the pooled reconcile has to absorb
+HARD_W = (8.0, 4.0, 1.0, 1.0)
+EASY_W = (1.0, 2.0, 4.0, 7.0)
+PRIMARY_COST, PRIMARY_LAT = 0.002, 0.08
+SECONDARY_COST, SECONDARY_LAT = 0.008, 0.02
+GLOBAL_TOL = 0.08               # fleet |ema - target| bound
+SKEW_MIN = 0.12                 # worst replica must exceed this
+
+
+def local_apply(x):
+    return x + 0.3 * jnp.sin(17.0 * x)
+
+
+def make_episodes(duration_s: float) -> tuple[ChaosEpisode, ...]:
+    s = duration_s / 60.0
+    return (
+        ChaosEpisode("brownout", 20.0 * s, 8.0 * s,
+                     backends=("primary",), rate=0.8,
+                     name="brownout-primary"),
+        ChaosEpisode("latency_ramp", 36.0 * s, 8.0 * s,
+                     backends=("primary",), extra_latency_s=0.030,
+                     name="ramp-primary"),
+    )
+
+
+def make_workload(trace, seed: int):
+    """Skewed replica assignment + shared prototype features.
+
+    Most requests map to a prototype row from a difficulty-matched pool
+    (cycled in arrival order), so identical content keys recur across
+    the fleet; a seeded slice carries fresh one-off rows so billed
+    remote demand never dries up. The replica draw is weighted by
+    difficulty, so replicas see very different score distributions over
+    the SAME shared key space."""
+    rng = np.random.default_rng(seed + 13)
+    margins = {"hard": (0.05, 0.4),         # narrow margin: escalates
+               "easy": (2.5, 3.5)}          # wide margin: trusted
+
+    def rows(n, lo, hi):
+        labels = rng.integers(0, NCLS, n)
+        x = rng.normal(0, 0.05, (n, NCLS))
+        x[np.arange(n), labels] += rng.uniform(lo, hi, n)
+        return np.float32(x)
+
+    pools = {k: rows(PROTOS, *m) for k, m in margins.items()}
+    fresh = {"hard": FRESH_HARD, "easy": FRESH_EASY}
+    hw = np.asarray(HARD_W) / sum(HARD_W)
+    ew = np.asarray(EASY_W) / sum(EASY_W)
+    xs = np.empty((len(trace), NCLS), np.float32)
+    assign = []
+    seen = {"hard": 0, "easy": 0}
+    for tr in trace.requests:
+        kind = "hard" if tr.hard else "easy"
+        if rng.random() < fresh[kind]:
+            xs[tr.uid] = rows(1, *margins[kind])[0]
+        else:
+            xs[tr.uid] = pools[kind][seen[kind] % PROTOS]
+            seen[kind] += 1
+        assign.append(
+            f"r{rng.choice(REPLICAS, p=hw if tr.hard else ew)}")
+    return xs, assign
+
+
+def build_stack(clock: VirtualClock, seed: int, duration_s: float):
+    """Fresh harness + chaos-wrapped shared router on ``clock``."""
+    def remote_fn(x):
+        return 5.0 * np.asarray(x)
+
+    tconf = TransportConfig(max_in_flight=BATCH, max_retries=0,
+                            retry_backoff_s=0.0, timeout_s=10.0,
+                            breaker_failures=2, breaker_reset_s=1.0)
+    router = RemoteRouter(
+        [RemoteBackend("primary", remote_fn, tconf,
+                       cost_per_request=PRIMARY_COST,
+                       latency_s=PRIMARY_LAT, clock=clock,
+                       sleep=clock.sleep),
+         RemoteBackend("secondary", remote_fn, tconf,
+                       cost_per_request=SECONDARY_COST,
+                       latency_s=SECONDARY_LAT, clock=clock,
+                       sleep=clock.sleep)],
+        policy="cheapest-available")
+    schedule = ChaosSchedule(make_episodes(duration_s), seed=seed)
+    schedule.wrap_router(router)
+    cfg = ServeConfig(batch_size=BATCH, remote_fraction_budget=TARGET,
+                      t_remote=0.0, pipeline_depth=1, cache_size=4096,
+                      adaptive=True, control_window=48,
+                      replicas=REPLICAS, admission_limit=ADMISSION_LIMIT,
+                      admission_soft_ratio=0.5, observability=True,
+                      event_capacity=65536)
+    harness = ClusterHarness(cfg, local_apply, transport=router,
+                             fallback=lambda r: -1, clock=clock,
+                             seed=seed, reconcile_interval_s=RECONCILE_S)
+    return harness, router, schedule
+
+
+def drive(trace, xs, assign, seed: int):
+    """One full scenario run: returns everything the checks compare."""
+    clock = VirtualClock()
+    harness, router, schedule = build_stack(clock, seed,
+                                            trace.duration_s)
+    responses = []
+    t0 = time.perf_counter()
+    for t_end, bucket in segments(trace, SEGMENT_S):
+        for tr in bucket:
+            clock.advance_to(tr.t_arrival_s)
+            harness.submit(assign[tr.uid],
+                           Request(uid=tr.uid, local_input=xs[tr.uid],
+                                   remote_input=xs[tr.uid],
+                                   policy=tr.policy))
+        clock.advance_to(t_end)
+        for batch in harness.flush().values():
+            responses.extend(batch)
+    wall = time.perf_counter() - t0
+    schedule.finalize(harness.events, now=clock())
+    breaker_states = {b.name: b.transport.breaker.state
+                      for b in router.backends}
+    harness.close()
+    return {"harness": harness, "router": router, "schedule": schedule,
+            "events": harness.events, "wall": wall,
+            "responses": responses, "breaker_states": breaker_states}
+
+
+def _digest(run) -> dict:
+    """Everything that must replay bit-identically across runs."""
+    h = run["harness"]
+    ch = run["schedule"].stats
+    per_replica = {}
+    for name in h.names:
+        rep = h.replica(name)
+        st, ad = rep.engine.stats, rep.scheduler.admission
+        per_replica[name] = {
+            "billing": {f: getattr(st, f) for f in BILLING_FIELDS},
+            "ema_fraction": rep.controller.state.ema_fraction,
+            "target": h.cluster.target(name),
+            "windows": rep.controller.state.windows,
+            "admission": (ad.submitted, ad.admitted, ad.degraded,
+                          ad.shed),
+            "cache": (rep.cache.stats.hits, rep.cache.stats.misses,
+                      rep.cache.stats.cross_hits),
+        }
+    return {
+        "responses": [(r.uid, int(r.prediction), r.source,
+                       r.disposition, r.backend, round(r.cost, 12),
+                       round(r.latency_s, 9))
+                      for r in sorted(run["responses"],
+                                      key=lambda r: r.uid)],
+        "per_replica": per_replica,
+        "cluster_billing": h.global_billing(),
+        "feed": [(u.key.hex(), u.source, u.replica)
+                 for u in h.shared_cache.feed],
+        "reconciles": [(e["window"], e["mode"], e["tau"],
+                        tuple(sorted(e["targets"].items())),
+                        tuple(e["stale"]))
+                       for e in run["events"].events(
+                           EV_CLUSTER_RECONCILE)],
+        "chaos": {"calls": ch.calls, "injected": ch.injected,
+                  "delayed": ch.delayed,
+                  "by_episode": dict(sorted(ch.by_episode.items())),
+                  "by_kind": dict(sorted(ch.by_kind.items()))},
+        "event_counts": dict(sorted(run["events"].counts().items())),
+    }
+
+
+def run(verbose: bool = True, duration_s: float = 60.0, seed: int = 7,
+        json_path: str | None = "BENCH_cluster.json",
+        events_jsonl: str | None = "BENCH_cluster_events.jsonl") -> dict:
+    trace = generate_trace(seed, pattern="diurnal", rate=BASE_RATE,
+                           peak_rate=PEAK_RATE, duration_s=duration_s,
+                           hard_frac=HARD_FRAC)
+    xs, assign = make_workload(trace, seed)
+
+    run_a = drive(trace, xs, assign, seed)
+    run_b = drive(trace, xs, assign, seed)
+    dig_a, dig_b = _digest(run_a), _digest(run_b)
+
+    h = run_a["harness"]
+    scs = h.shared_cache.stats
+    ch = run_a["schedule"].stats
+    ev = run_a["events"]
+    cst = h.cluster.state
+    per = dig_a["per_replica"]
+    cb = dig_a["cluster_billing"]["billing"]
+    per_backend = dig_a["cluster_billing"]["per_backend"]
+
+    uids = sorted(r.uid for r in run_a["responses"])
+    dispositions: dict[str, int] = {}
+    for r in run_a["responses"]:
+        dispositions[r.disposition] = dispositions.get(r.disposition,
+                                                       0) + 1
+    served = len(run_a["responses"]) - dispositions.get(SHED, 0) \
+        - dispositions.get(REJECTED, 0)
+    feed_keys = [k for k, _, _ in dig_a["feed"]]
+    total_shed = sum(p["admission"][3] for p in per.values())
+    cross_hits = sum(p["cache"][2] for p in per.values())
+    # realised fleet remote fraction, weighted by eligible traffic (the
+    # reconciler computes the same number at cadence — use its final)
+    global_ema = cst.global_ema_fraction
+    skews = {n: abs(per[n]["ema_fraction"] - TARGET) for n in per}
+    pooled_rounds = sum(1 for r in dig_a["reconciles"]
+                       if r[1] == "pooled")
+    final_targets = {n: per[n]["target"] for n in per}
+
+    checks = {
+        # -- ISSUE 9 acceptance: double run is bit-identical -----------
+        "deterministic_replay": dig_a == dig_b,
+        # -- one logical cascade: every uid answered exactly once ------
+        "zero_silent_drop": uids == list(range(len(trace))),
+        # -- single fill: no content key fetched remotely twice --------
+        "single_fill": (scs.duplicate_fills == 0
+                        and len(feed_keys) == len(set(feed_keys))
+                        and scs.evictions == 0),
+        "cross_replica_sharing": (cross_hits > 0
+                                  and cb["cache_hits"] > 0),
+        # -- global budget holds while the worst replica is far out ----
+        "global_budget_holds": (global_ema is not None
+                                and abs(global_ema - TARGET)
+                                <= GLOBAL_TOL),
+        "replica_skew_far_outside": max(skews.values()) >= SKEW_MIN,
+        "targets_reweighted": (pooled_rounds > 0
+                               and max(final_targets.values())
+                               - min(final_targets.values()) >= 0.1),
+        # -- shed/billing reconciliation, per replica and summed -------
+        "admission_reconciles": all(
+            p["admission"][0] == p["billing"]["requests"]
+            + p["admission"][3]
+            and p["admission"][1] == p["billing"]["requests"]
+            for p in per.values()),
+        "billing_reconciles": (
+            all(p["billing"]["escalations"]
+                == p["billing"]["remote_calls"]
+                + p["billing"]["cache_hits"]
+                + p["billing"]["transport_failures"]
+                for p in per.values())
+            and all(cb[f] == sum(p["billing"][f] for p in per.values())
+                    for f in BILLING_FIELDS)
+            and abs(cb["total_cost"]
+                    - sum(u["cost"] for u in per_backend.values()))
+            < 1e-9),
+        # -- overload + chaos actually exercised, system recovered -----
+        "sheds_exercised": total_shed > 0,
+        "faults_injected": ch.injected > 0 and ch.delayed > 0,
+        "breakers_recovered": all(
+            s == CLOSED for s in run_a["breaker_states"].values()),
+        "majority_served": served / max(1, len(trace)) >= 0.5,
+        "no_events_dropped": ev.dropped == 0,
+        "reconcile_events_logged": (
+            len(dig_a["reconciles"]) == cst.reconciles > 0),
+    }
+
+    report = {
+        "replicas": REPLICAS,
+        "batch_size": BATCH,
+        "virtual_duration_s": trace.duration_s,
+        "seed": seed,
+        "requests": len(trace),
+        "target_remote_fraction": TARGET,
+        "global_tolerance": GLOBAL_TOL,
+        "wall_s": run_a["wall"],
+        "throughput_rps": len(trace) / run_a["wall"],
+        "global_ema_fraction": global_ema,
+        "replica_ema_fractions": {n: per[n]["ema_fraction"]
+                                  for n in sorted(per)},
+        "replica_targets": dict(sorted(final_targets.items())),
+        "replica_skews": dict(sorted(skews.items())),
+        "reconciles": {"count": cst.reconciles,
+                       "pooled_rounds": pooled_rounds,
+                       "final_mode": cst.mode, "final_tau": cst.tau,
+                       "stale": list(cst.stale)},
+        "per_replica": per,
+        "cluster_billing": dig_a["cluster_billing"],
+        "shared_cache": {"fills": scs.fills,
+                         "duplicate_fills": scs.duplicate_fills,
+                         "redundant_puts": scs.redundant_puts,
+                         "cross_hits": cross_hits,
+                         "waits": scs.waits, "steals": scs.steals,
+                         "releases": scs.releases,
+                         "evictions": scs.evictions},
+        "dispositions": dict(sorted(dispositions.items())),
+        "served_fraction": served / max(1, len(trace)),
+        "chaos": dig_a["chaos"],
+        "observability": {"events": dig_a["event_counts"],
+                          "events_dropped": ev.dropped},
+        "checks": checks,
+        "passed": all(checks.values()),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1)
+    if events_jsonl:
+        with open(events_jsonl, "w") as f:
+            for e in ev.events():
+                f.write(json.dumps(e) + "\n")
+    if verbose:
+        print(f"\n--- Cluster: {REPLICAS} replicas, {len(trace)} "
+              f"requests over {trace.duration_s:g} virtual s (diurnal "
+              f"{BASE_RATE:g}->{PEAK_RATE:g} rps, seed {seed}, wall "
+              f"{run_a['wall']:.2f}s x2 runs) ---")
+        print(f"budget: global ema "
+              f"{'n/a' if global_ema is None else f'{global_ema:.3f}'} "
+              f"vs target {TARGET} (tol {GLOBAL_TOL}); per-replica ema "
+              f"{ {n: round(per[n]['ema_fraction'], 3) for n in sorted(per)} }")
+        tgt = {n: round(v, 3) for n, v in sorted(final_targets.items())}
+        print(f"targets: {tgt} "
+              f"({cst.reconciles} reconciles, {pooled_rounds} pooled)")
+        print(f"cache: {scs.fills} fills, {cross_hits} cross-replica "
+              f"hits, {cb['cache_hits']} billed hits, "
+              f"{scs.duplicate_fills} duplicate fills, "
+              f"{scs.redundant_puts} redundant puts")
+        print(f"admission: {total_shed} shed across fleet; "
+              f"dispositions {report['dispositions']}")
+        print(f"chaos: {ch.injected} faults "
+              f"{dict(sorted(ch.by_kind.items()))}, "
+              f"{ch.delayed} delayed")
+        print(f"events: {report['observability']['events']}")
+        print(f"checks: {checks}"
+              + (f"; JSON -> {json_path}" if json_path else ""))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--duration", type=float, default=60.0,
+                    help="virtual scenario length in seconds")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", default="BENCH_cluster.json",
+                    help="machine-readable output path ('' disables)")
+    ap.add_argument("--events-jsonl",
+                    default="BENCH_cluster_events.jsonl",
+                    help="event-log artifact path ('' disables)")
+    args = ap.parse_args(argv)
+    report = run(duration_s=args.duration, seed=args.seed,
+                 json_path=args.json or None,
+                 events_jsonl=args.events_jsonl or None)
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

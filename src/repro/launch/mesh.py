@@ -42,3 +42,17 @@ def batch_axes(mesh) -> tuple[str, ...]:
 def make_host_mesh():
     """Single-device mesh with the same axis names (CPU tests/examples)."""
     return jax.make_mesh((1, 1), ("data", "model"), **axis_type_kwargs(2))
+
+
+def make_serving_mesh():
+    """Data-parallel mesh over every local device (DESIGN.md §12).
+
+    The serving engine shards the *batch* axis of the local forward over
+    all addressable devices and keeps parameters replicated — the right
+    first shape for cascade replicas, where throughput scales with rows
+    and the local model is small by construction. On a single-device
+    host this degenerates to ``make_host_mesh`` and the sharded forward
+    is numerically identical to the unsharded one.
+    """
+    n = jax.local_device_count()
+    return jax.make_mesh((n, 1), ("data", "model"), **axis_type_kwargs(2))

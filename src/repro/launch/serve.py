@@ -103,6 +103,100 @@ def build_serve_config(args) -> ServeConfig:
     return cfg.with_overrides(args.set or [])
 
 
+def _serve_cluster(args, cfg, router, local_apply, toks, local_toks,
+                   labels, rcfg) -> int:
+    """Replicated serving (DESIGN.md §12): ``cfg.replicas`` engines
+    behind one logical cascade — one shared router, a single-fill
+    shared response cache and a cluster budget reconciler re-weighting
+    per-replica targets. Requests round-robin across replicas."""
+    from repro.runtime.cluster import ClusterHarness
+
+    harness = ClusterHarness(
+        cfg, local_apply, transport=router, fallback=lambda r: -1,
+        clock=time.perf_counter, reconcile_interval_s=1.0,
+        cache_key_fn=lambda row: content_key(row["tokens"]),
+        cache_key_batch_fn=lambda b, n: content_keys(b["tokens"], n))
+    names = harness.names
+    print(f"[serve] cluster: {cfg.replicas} replicas {names}, shared "
+          f"cache {'on' if harness.shared_cache is not None else 'off'}, "
+          f"reconcile every {harness.reconcile_interval_s:.1f}s")
+    t0 = time.perf_counter()
+    responses = []
+    flush_every = max(cfg.batch_size, 1) * len(names)
+    try:
+        for i in range(args.requests):
+            shed = harness.submit(names[i % len(names)], Request(
+                uid=i, local_input=local_toks[i],
+                remote_input={"tokens": toks[i] % rcfg.vocab_size,
+                              "idx": np.int32(i)}))
+            if shed is not None:
+                responses.append(shed)
+            if (i + 1) % flush_every == 0:
+                for batch in harness.flush().values():
+                    responses.extend(batch)
+        for batch in harness.flush().values():
+            responses.extend(batch)
+        # short runs can finish inside one cadence interval: force a
+        # final reconcile so the budget summary below is always live
+        harness.cluster.reconcile(time.perf_counter())
+    finally:
+        harness.close()
+    wall = time.perf_counter() - t0
+
+    correct = sum(r.prediction == labels[r.uid] for r in responses
+                  if r.source != "fallback")
+    nfall = sum(r.source == "fallback" for r in responses)
+    print(f"[serve] cluster: {len(responses)} responses in "
+          f"{wall:.1f}s wall "
+          f"({len(responses) / max(wall, 1e-9):.0f} req/s)")
+    print(f"[serve] accepted accuracy: "
+          f"{correct / max(len(responses) - nfall, 1):.3f}")
+    for name in names:
+        rep = harness.replica(name)
+        st, ad = rep.engine.stats, rep.scheduler.admission
+        line = (f"[serve]   {name}: {st.requests} requests, remote "
+                f"fraction {st.remote_fraction:.2f} "
+                f"(target {harness.cluster.target(name):.2f}), "
+                f"shed {ad.shed}, degraded {ad.degraded}")
+        if rep.cache is not None:
+            line += (f", cache {rep.cache.stats.hits} hits "
+                     f"({rep.cache.stats.cross_hits} cross-replica)")
+        print(line)
+    b = harness.global_billing()["billing"]
+    print(f"[serve] cluster billing: {b['requests']} requests, "
+          f"{b['escalations']} escalations, {b['remote_calls']} remote "
+          f"calls, {b['cache_hits']} cache hits, "
+          f"${b['total_cost']:.4f} total")
+    cst = harness.cluster.state
+    gt = cst.global_target
+    gf = cst.global_ema_fraction
+    print(f"[serve] cluster budget: {cst.reconciles} reconciles "
+          f"(mode {cst.mode}), global target "
+          f"{'n/a' if gt is None else f'{gt:.3f}'}, realised fleet "
+          f"fraction {'n/a' if gf is None else f'{gf:.3f}'}, "
+          f"stale {list(cst.stale)}")
+    if harness.shared_cache is not None:
+        scs = harness.shared_cache.stats
+        print(f"[serve] shared cache: {scs.fills} fills, "
+              f"{scs.duplicate_fills} duplicate fills, "
+              f"{scs.waits} waits, {scs.steals} steals "
+              f"({len(harness.shared_cache)} entries)")
+    if harness.events is not None:
+        evc = harness.events.counts()
+        if evc:
+            print(f"[serve] events: {dict(sorted(evc.items()))}")
+    if harness.metrics is not None and args.metrics_dump:
+        if args.metrics_dump.endswith(".json"):
+            text = json.dumps(harness.metrics.snapshot(), indent=2,
+                              sort_keys=True) + "\n"
+        else:
+            text = harness.metrics.render_prometheus()
+        with open(args.metrics_dump, "w") as f:
+            f.write(text)
+        print(f"[serve] wrote metrics snapshot -> {args.metrics_dump}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--remote-arch", default="yi-6b")
@@ -161,6 +255,11 @@ def main(argv=None) -> int:
             and not args.calibrate):
         ap.error("cost_budget is only enforced by the controller or the "
                  "offline sweep; add --adaptive and/or --calibrate")
+    if cfg.replicas > 1 and (args.trace or args.trace_chrome
+                             or args.metrics_interval
+                             or args.metrics_port is not None):
+        ap.error("replicas>1 supports --metrics-dump only; per-replica "
+                 "tracing / live scrape is a follow-on (DESIGN.md §12)")
 
     # ---- task + local surrogate (paper §4.1: input-domain-reduced) ----
     vocab, seq, ncls = 512, 48, 8
@@ -260,6 +359,11 @@ def main(argv=None) -> int:
               f"${point.cost_per_request:.5f}/req, "
               f"accepted acc {point.accuracy:.3f}; "
               f"frontier has {len(front)} points)")
+
+    # ---- replicated serving: N engines, one logical cascade ----
+    if cfg.replicas > 1:
+        return _serve_cluster(args, cfg, router, local_apply, toks,
+                              local_toks, labels, rcfg)
 
     # ---- the whole serving stack from the one ServeConfig ----
     if cfg.fused:

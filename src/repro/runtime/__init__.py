@@ -27,6 +27,12 @@ from repro.runtime.calibration import (EscalationPrior, OperatingPoint,
 from repro.runtime.controller import (AdaptiveController, ControllerConfig,
                                       ControllerState,
                                       population_stability_index)
+from repro.runtime.cluster import (CacheUpdate, ClusterBudgetConfig,
+                                   ClusterBudgetController,
+                                   ClusterBudgetState, ClusterHarness,
+                                   ClusterReplica, ReplicaCacheView,
+                                   SharedCacheStats, SharedResponseCache,
+                                   cluster_billing)
 from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
                                      CircuitOpenError, RemoteBackend,
                                      RemoteCallError, RemoteRouter,
@@ -37,14 +43,18 @@ from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
 
 __all__ = [
     "CHAOS_KINDS", "ROUTE_POLICIES", "AdaptiveController", "CacheStats",
-    "ChaosEpisode", "ChaosFault", "ChaosRemote", "ChaosSchedule",
-    "ChaosStats", "ChaosTimeout", "CircuitBreaker", "CircuitOpenError",
+    "CacheUpdate", "ChaosEpisode", "ChaosFault", "ChaosRemote",
+    "ChaosSchedule", "ChaosStats", "ChaosTimeout", "CircuitBreaker",
+    "CircuitOpenError", "ClusterBudgetConfig", "ClusterBudgetController",
+    "ClusterBudgetState", "ClusterHarness", "ClusterReplica",
     "ControllerConfig", "ControllerState", "EscalationPrior", "EventLog",
     "MetricsRegistry", "Observability", "OperatingPoint", "RemoteBackend",
     "RemoteCallError", "RemoteResponseCache", "RemoteRouter",
-    "RemoteTimeout", "RemoteTransport", "RouteConstraint", "RouterStats",
-    "TraceSink", "TransportConfig", "TransportFuture", "TransportStats",
-    "VirtualClock", "calibrate", "content_key", "content_keys",
+    "RemoteTimeout", "RemoteTransport", "ReplicaCacheView",
+    "RouteConstraint", "RouterStats", "SharedCacheStats",
+    "SharedResponseCache", "TraceSink", "TransportConfig",
+    "TransportFuture", "TransportStats", "VirtualClock", "calibrate",
+    "cluster_billing", "content_key", "content_keys",
     "fit_escalation_prior", "pareto_frontier",
     "population_stability_index", "select_operating_point",
     "sweep_operating_points",

@@ -103,6 +103,10 @@ class CacheStats:
     hits: int = 0
     misses: int = 0
     evictions: int = 0
+    # hits served from an entry that a *different* replica filled
+    # (cluster shared cache, DESIGN.md §12); always 0 for a
+    # single-process cache
+    cross_hits: int = 0
 
     @property
     def hit_rate(self) -> float | None:

@@ -42,8 +42,9 @@ from __future__ import annotations
 import random
 import threading
 import zlib
+from collections.abc import Callable
 from dataclasses import dataclass, field
-from typing import Any, Callable
+from typing import Any
 
 import numpy as np
 

@@ -39,7 +39,7 @@ holds a **dollar** budget across failovers and price mixes.
 from __future__ import annotations
 
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 
 import numpy as np
 
@@ -106,6 +106,11 @@ class AdaptiveController:
         self._win_cost = 0.0
         self._ref_hist: np.ndarray | None = None
         self._bin_edges: np.ndarray | None = None
+        # lifetime count of budget-eligible requests observed (policy-
+        # blocked rows excluded, matching the window denominator). The
+        # cluster reconciler uses deltas of this as per-replica traffic
+        # weights (DESIGN.md §12).
+        self.lifetime_requests = 0
         # observability (DESIGN.md §9): shared EventLog installed by the
         # Observability facade (None = disabled). ``event_window`` is the
         # engine window being committed when ``observe`` runs, so control
@@ -131,6 +136,20 @@ class AdaptiveController:
         rho_cap = min(1.0, slack * self.state.rho)
         return escalation_capacity(batch_size, max(rho_cap, 1e-6))
 
+    # -- cluster hooks (DESIGN.md §12) -------------------------------------
+    def recent_scores(self) -> np.ndarray:
+        """Rolling 1st-level score buffer as an array (newest last). The
+        cluster reconciler pools these across replicas to place one
+        global escalation threshold."""
+        return np.asarray(self._scores, np.float64)
+
+    def retarget(self, target_remote_fraction: float) -> None:
+        """Push a new budget target (cluster reconcile). The PI loop
+        keeps its integral — the clip bounds any stale correction — and
+        converges on the new target from the next window on."""
+        t = float(np.clip(target_remote_fraction, 0.0, 1.0))
+        self.config = replace(self.config, target_remote_fraction=t)
+
     # -- observations the engine feeds back --------------------------------
     def observe(self, local_conf: np.ndarray, escalated: int,
                 requests: int, remote_conf: np.ndarray | None = None,
@@ -149,7 +168,9 @@ class AdaptiveController:
         self._scores.extend(conf.tolist())
         self._win_scores.extend(conf.tolist())
         self._win_escalated += int(escalated)
-        self._win_requests += max(int(requests) - int(policy_blocked), 0)
+        eligible = max(int(requests) - int(policy_blocked), 0)
+        self._win_requests += eligible
+        self.lifetime_requests += eligible
         self._win_cost += float(cost)
         if remote_conf is not None:
             rc = np.asarray(remote_conf, np.float64).ravel()

@@ -57,6 +57,7 @@ __all__ = [
     "EV_BREAKER_OPEN",
     "EV_CHAOS_BEGIN",
     "EV_CHAOS_END",
+    "EV_CLUSTER_RECONCILE",
     "EV_CONTROLLER_DRIFT",
     "EV_CONTROLLER_UPDATE",
     "EV_DEADLINE_DOWNGRADE",
@@ -101,6 +102,10 @@ EV_CHAOS_END = "chaos_episode_end"
 # disposition) or degraded to local-only under overload
 EV_ADMISSION_SHED = "admission_shed"
 EV_ADMISSION_DEGRADE = "admission_degrade"
+# cluster scale-out (DESIGN.md §12): one event per ClusterBudgetController
+# reconcile — carries the pooled threshold, per-replica targets and any
+# replicas excluded as stale (blackout) this round
+EV_CLUSTER_RECONCILE = "cluster_reconcile"
 
 # canonical span stage order (a span contains the subset that applies to
 # its disposition; timestamps are nondecreasing in this order).
@@ -452,10 +457,7 @@ class Observability:
         # span stage stamps (ordering across threads still uses seq)
         self.events._clock = engine._clock
         if engine.router is not None:
-            engine.router.events = self.events
-            for b in engine.router.backends:
-                b.transport.events = self.events
-                b.transport.event_source = b.name
+            engine.router.attach_events(self.events)
         if engine.controller is not None:
             engine.controller.events = self.events
         self.metrics.register_collector(
@@ -513,6 +515,7 @@ def _collect_engine(reg: MetricsRegistry, engine: Any) -> None:
         reg.gauge("cache_hits").set(cst.hits)
         reg.gauge("cache_misses").set(cst.misses)
         reg.gauge("cache_evictions").set(cst.evictions)
+        reg.gauge("cache_cross_replica_hits").set(cst.cross_hits)
         reg.gauge("cache_entries").set(len(engine.cache))
 
 

@@ -704,6 +704,16 @@ class RemoteRouter:
     def __iter__(self):
         return iter(self.backends)
 
+    def attach_events(self, events: Any) -> None:
+        """Wire this router and every backend transport into one event
+        log. Idempotent; the Observability facade calls it at install
+        time, and the cluster harness re-points a shared router at the
+        raw fleet-level log after per-replica installs (DESIGN.md §12)."""
+        self.events = events
+        for b in self.backends:
+            b.transport.events = events
+            b.transport.event_source = b.name
+
     def backend(self, name: str) -> RemoteBackend:
         for b in self.backends:
             if b.name == name:

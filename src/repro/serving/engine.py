@@ -468,7 +468,8 @@ class CascadeEngine:
                  supervisor="max_softmax", transport=None, controller=None,
                  cache=None, clock: Callable[[], float] = time.perf_counter,
                  default_policy: RequestPolicy | None = None,
-                 observability=None, early_emit: bool | str = False):
+                 observability=None, early_emit: bool | str = False,
+                 mesh=None):
         if remote_apply is None and transport is None:
             raise ValueError("need a remote tier: remote_apply or transport")
         self.batch_size = batch_size
@@ -531,13 +532,23 @@ class CascadeEngine:
         self._gate_emits = 0            # telemetry: callbacks landed
         self._gate_lock = threading.Lock()
         self._gate_results: dict[int, tuple] = {}
+        # data-parallel local forward (DESIGN.md §12): when a mesh is
+        # supplied the gated local step constrains its input batch to
+        # batch-dim sharding before jit — parameters stay replicated.
+        # On a 1-device mesh the constraint is a no-op, so enabling it
+        # never changes predictions.
+        self.mesh = mesh
         if transport is None:
             self._step = jax.jit(make_cascade_step(
                 local_apply, remote_apply, self.capacity, supervisor))
         else:
-            self._local_step = jax.jit(make_gated_local_step(
+            step = make_gated_local_step(
                 local_apply, supervisor,
-                emit=self._on_gate if self.early_emit else None))
+                emit=self._on_gate if self.early_emit else None)
+            if mesh is not None:
+                from repro.launch.sharding import shard_local_step
+                step = shard_local_step(step, mesh)
+            self._local_step = jax.jit(step)
 
     # -- ServeConfig construction (DESIGN.md §8) -----------------------
     _UNSET = object()
@@ -546,14 +557,18 @@ class CascadeEngine:
     def from_config(cls, config: ServeConfig, local_apply,
                     remote_apply=None, *, transport=None,
                     controller=_UNSET, cache=_UNSET,
+                    observability=_UNSET, mesh=_UNSET,
                     clock: Callable[[], float] = time.perf_counter
                     ) -> "CascadeEngine":
         """Build the engine from one ``ServeConfig`` (the supported
         construction path). On the runtime path the remote registry is
         built from ``remote_apply`` per ``config.remotes`` unless a
-        ``transport``/router is passed explicitly; the controller and
-        response cache come from the config unless overridden (pass
-        ``controller=None``/``cache=None`` to force them off)."""
+        ``transport``/router is passed explicitly; the controller,
+        response cache, observability facade and data-parallel mesh come
+        from the config unless overridden (pass ``controller=None``/
+        ``cache=None``/``observability=None``/``mesh=None`` to force
+        them off — the cluster harness overrides all four per replica,
+        DESIGN.md §12)."""
         if config.fused:
             eng = cls(local_apply, remote_apply,
                       batch_size=config.batch_size,
@@ -567,6 +582,12 @@ class CascadeEngine:
                     raise ValueError("runtime path needs remote_apply or "
                                      "an explicit transport/router")
                 transport = config.build_router(remote_apply)
+            if mesh is cls._UNSET:
+                if config.data_parallel:
+                    from repro.launch.mesh import make_serving_mesh
+                    mesh = make_serving_mesh()
+                else:
+                    mesh = None
             eng = cls(local_apply, batch_size=config.batch_size,
                       remote_fraction_budget=config.remote_fraction_budget,
                       t_remote=config.t_remote,
@@ -578,10 +599,13 @@ class CascadeEngine:
                       cache=(config.build_cache() if cache is cls._UNSET
                              else cache),
                       clock=clock, default_policy=config.default_policy,
-                      observability=config.build_observability(),
+                      observability=(config.build_observability()
+                                     if observability is cls._UNSET
+                                     else observability),
                       early_emit=("auto"
                                   if config.batching == "continuous"
-                                  else False))
+                                  else False),
+                      mesh=mesh)
         if config.t_local is not None:
             eng.set_local_threshold(config.t_local)
         return eng

@@ -208,6 +208,13 @@ class ServeConfig:
     observability: bool = False         # metrics + traces + event log
     trace_capacity: int = 65536         # bounded TraceSink (spans kept)
     event_capacity: int = 8192          # bounded EventLog (events kept)
+    # -- cluster scale-out (DESIGN.md §12) ------------------------------
+    # replicas > 1 runs N engines behind one logical cascade (shared
+    # response cache, shared router, cluster budget reconcile) via
+    # ``repro.runtime.cluster.ClusterHarness``; data_parallel shards the
+    # forward's batch dim over all local devices (launch/mesh.py).
+    replicas: int = 1
+    data_parallel: bool = False
 
     def __post_init__(self):
         if self.completion_mode not in ("fifo", "streaming"):
@@ -232,6 +239,15 @@ class ServeConfig:
             raise ValueError("admission_limit must be >= 0")
         if not 0.0 <= self.admission_soft_ratio <= 1.0:
             raise ValueError("admission_soft_ratio must be in [0, 1]")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if self.replicas > 1 and not self.adaptive:
+            raise ValueError("replicas > 1 needs adaptive=True: the "
+                             "cluster budget reconcile re-targets each "
+                             "replica's controller (DESIGN.md §12)")
+        if self.fused and (self.replicas > 1 or self.data_parallel):
+            raise ValueError("fused bypasses the runtime path: drop "
+                             "replicas/data_parallel")
         if self.fused and (self.adaptive or self.pipeline_depth > 1
                            or self.completion_mode == "streaming"
                            or self.cost_budget is not None

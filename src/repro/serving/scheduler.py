@@ -197,7 +197,8 @@ class MicrobatchScheduler:
                  prior: Callable[[Request], float] | None = None,
                  admission_limit: int = 0,
                  admission_soft_ratio: float = 0.5,
-                 batching: str = "window"):
+                 batching: str = "window",
+                 admission_share: Callable[[], float] | None = None):
         if completion_mode not in COMPLETION_MODES:
             raise ValueError(f"unknown completion_mode {completion_mode!r};"
                              f" choose from {COMPLETION_MODES}")
@@ -249,6 +250,13 @@ class MicrobatchScheduler:
                                           * admission_soft_ratio))
                                if self.admission_limit else 0)
         self.admission = AdmissionStats()
+        # cluster-aware admission (DESIGN.md §12): a callable returning
+        # this replica's current budget share (1.0 = fair share). The
+        # soft watermark scales with it, so a replica the cluster
+        # reconciler has squeezed sheds/degrades earlier while one
+        # granted headroom rides closer to its hard bound. None (the
+        # single-replica default) leaves the watermark fixed.
+        self.admission_share = admission_share
         self._shed_out: list[Response] = []       # shed since last flush
         # window purity telemetry (packing="policy" only): windows are
         # pure by construction; `mixed` staying 0 is the invariant the
@@ -267,7 +275,8 @@ class MicrobatchScheduler:
     @classmethod
     def from_config(cls, engine, config: ServeConfig, *,
                     fallback: Callable[[Request], int] | None = None,
-                    prior: Callable[[Request], float] | None = None
+                    prior: Callable[[Request], float] | None = None,
+                    admission_share: Callable[[], float] | None = None
                     ) -> "MicrobatchScheduler":
         """Build the scheduler from the one ``ServeConfig`` facade
         (DESIGN.md §8) — the supported construction path."""
@@ -277,7 +286,8 @@ class MicrobatchScheduler:
                    packing=config.packing, prior=prior,
                    admission_limit=config.admission_limit,
                    admission_soft_ratio=config.admission_soft_ratio,
-                   batching=config.batching)
+                   batching=config.batching,
+                   admission_share=admission_share)
 
     # -- admission ------------------------------------------------------
     def submit(self, req: Request) -> Response | None:
@@ -323,7 +333,7 @@ class MicrobatchScheduler:
                else self.engine.default_policy)
         on_miss = pol.on_miss if pol is not None else "fallback"
         miss = "shed" if on_miss == "reject" else "degrade"
-        if depth >= self.admission_soft:
+        if depth >= self._soft_watermark():
             return miss, "overload"
         if pol is not None and pol.deadline_s is not None:
             wait = self._queue_wait_estimate(depth)
@@ -341,6 +351,20 @@ class MicrobatchScheduler:
                         return "admit", None
                     return miss, "deadline"
         return "admit", None
+
+    def _soft_watermark(self) -> int:
+        """Soft admission watermark, scaled by the replica's cluster
+        budget share when one is wired (DESIGN.md §12). The scale is
+        clamped to [0.25, 4.0] so a pathological share can neither
+        disable soft admission nor override the hard bound, and the
+        result stays >= 1 and <= admission_limit - 1 (the hard bound
+        must remain reachable only through genuine queue growth)."""
+        soft = self.admission_soft
+        if self.admission_share is None or not soft:
+            return soft
+        scale = min(max(float(self.admission_share()), 0.25), 4.0)
+        soft = max(1, int(round(soft * scale)))
+        return min(soft, max(self.admission_limit - 1, 1))
 
     def _queue_wait_estimate(self, depth: int) -> float | None:
         """Expected time for a request joining behind ``depth`` queued
