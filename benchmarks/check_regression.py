@@ -1,9 +1,9 @@
-"""Perf regression gate for the serving/routing/chaos/kernels/cluster
-benchmarks (ISSUE 4, ISSUE 7, ISSUE 9).
+"""Perf regression gate for the serving/routing/chaos/kernels/cluster/
+hierarchy benchmarks (ISSUE 4, ISSUE 7, ISSUE 9, ISSUE 10).
 
 Compares freshly produced ``BENCH_serving.json`` / ``BENCH_routing.json``
 / ``BENCH_chaos.json`` / ``BENCH_kernels.json`` / ``BENCH_cluster.json``
-against the committed baselines in
+/ ``BENCH_hierarchy.json`` against the committed baselines in
 ``benchmarks/baselines/`` and FAILS (exit 1) when a tracked metric
 regresses past tolerance — the ``BENCH_*.json`` family stops being
 informational-only and starts gating merges.
@@ -368,6 +368,46 @@ def check_cluster(gate: Gate, fresh: dict, base: dict) -> None:
               "cluster: one event per budget reconcile, none missing")
 
 
+def check_hierarchy(gate: Gate, fresh: dict, base: dict) -> None:
+    """Hierarchy gate (DESIGN.md §13, ISSUE 10): the N-tier bench runs a
+    planted synthetic workload with a pinned seed, so every check is a
+    hard correctness invariant of the fresh run. The baseline pins the
+    scenario shape (rows/grid/seed/stage costs) so the 3-tier dominance
+    claim cannot silently weaken by shrinking the sweep."""
+    for key in ("rows", "grid", "seed", "stage_costs"):
+        f, b = fresh.get(key), base.get(key)
+        if f == b:
+            gate.passes.append(f"hierarchy: {key} matches baseline ({f})")
+        else:
+            gate.failures.append(
+                f"hierarchy: {key} changed from baseline {b!r} to {f!r} — "
+                "re-baseline with --update-baselines if intentional")
+    gate.hard(fresh, "checks.three_tier_dominates",
+              "hierarchy: best 3-tier point strictly cheaper than best "
+              "2-tier at equal-or-better accuracy")
+    gate.hard(fresh, "checks.deterministic_replay",
+              "hierarchy: calibration + runtime double run replays "
+              "bit-identically")
+    gate.hard(fresh, "checks.two_tier_engine_identity",
+              "hierarchy: terminal CascadeStage bitwise-identical to "
+              "plain RemoteBackend through the engine")
+    gate.hard(fresh, "checks.frontier_monotone",
+              "hierarchy: joint Pareto frontier monotone in cost and "
+              "accuracy")
+    gate.hard(fresh, "checks.calibration_generalizes",
+              "hierarchy: held-out accuracy within tolerance of the "
+              "calibrated operating point")
+    gate.hard(fresh, "checks.mid_tier_carries_load",
+              "hierarchy: edge tier answers a real share of escalations")
+    gate.hard(fresh, "checks.billing_reconciles",
+              "hierarchy: per-stage costs sum to the cascade total")
+    gate.hard(fresh, "checks.per_stage_attribution",
+              "hierarchy: chained engine splits billing per stage")
+    gate.hard(fresh, "checks.tier_budget_tracks",
+              "hierarchy: per-tier budget controller reconciles to the "
+              "global escalation budget")
+
+
 def check_routing(gate: Gate, fresh: dict, base: dict) -> None:
     gate.hard(fresh, "checks.zero_dropped",
               "routing: zero dropped requests across outage")
@@ -454,6 +494,8 @@ def main(argv=None) -> int:
                     help="fresh kernels bench JSON ('' skips)")
     ap.add_argument("--cluster", default="",
                     help="fresh cluster bench JSON ('' skips)")
+    ap.add_argument("--hierarchy", default="",
+                    help="fresh hierarchy bench JSON ('' skips)")
     ap.add_argument("--all", action="store_true",
                     help="check every bench tag, filling the default "
                          "BENCH_<tag>.json path for any not given")
@@ -469,7 +511,8 @@ def main(argv=None) -> int:
                          "baselines instead of checking")
     args = ap.parse_args(argv)
     if args.all:
-        for tag in ("serving", "routing", "chaos", "kernels", "cluster"):
+        for tag in ("serving", "routing", "chaos", "kernels", "cluster",
+                    "hierarchy"):
             if not getattr(args, tag):
                 setattr(args, tag, f"BENCH_{tag}.json")
 
@@ -494,9 +537,15 @@ def main(argv=None) -> int:
         pairs.append((args.cluster,
                       os.path.join(args.baseline_dir, "BENCH_cluster.json"),
                       check_cluster, "cluster"))
+    if args.hierarchy:
+        pairs.append((args.hierarchy,
+                      os.path.join(args.baseline_dir,
+                                   "BENCH_hierarchy.json"),
+                      check_hierarchy, "hierarchy"))
     if not pairs:
         _annotate("error", "nothing to check (--serving, --routing, "
-                  "--chaos, --kernels and --cluster all empty)")
+                  "--chaos, --kernels, --cluster and --hierarchy all "
+                  "empty)")
         return 2
 
     if args.update_baselines:

@@ -1,0 +1,464 @@
+"""N-tier cascade hierarchy bench (ISSUE 10 acceptance; DESIGN.md §13).
+
+A genuine 3-tier device → edge → cloud ladder on a synthetic workload
+with planted difficulty structure: *easy* rows every tier answers
+correctly and confidently, *medium* rows the device tier gets wrong (or
+unsure) but the edge tier nails, *hard* rows only the cloud tier
+answers correctly. The mid tier therefore has real work only a
+hierarchy can monetise — it serves the medium band at a fraction of the
+cloud price — which makes 3-tier dominance *structural*, not a tuning
+accident.
+
+The bench gates on the ISSUE 10 acceptance criteria:
+
+  * three-tier dominance — the joint (t1, t2, t3) sweep contains an
+    operating point with equal-or-better system accuracy than the best
+    2-tier point (device→cloud and device→edge sweeps, the paper's
+    shape) at STRICTLY lower $/request;
+  * deterministic replay — the calibration sweep, the tiered runtime
+    eval and the per-tier budget-controller phase all replay
+    bit-identically across two runs;
+  * degenerate 2-stage identity — an engine routed at a terminal
+    ``CascadeStage`` reproduces the plain-``RemoteBackend`` engine path
+    bitwise: responses, billing fields, per-backend attribution and
+    controller state;
+  * billing reconciliation — on the chained engine path the
+    escalation identity holds per stage name and the per-stage cost
+    split sums exactly to ``CascadeStats.total_cost``.
+
+Machine-readable results go to ``BENCH_hierarchy.json`` (gated in CI by
+``check_regression.py --hierarchy``).
+
+    PYTHONPATH=src python -m benchmarks.hierarchy_bench \
+        [--rows 2048] [--grid 9] [--seed 7] [--json BENCH_hierarchy.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.supervisors import SOFTMAX_SUPERVISORS
+from repro.runtime import (AdaptiveController, CascadeStage,
+                           ControllerConfig, RemoteBackend, RemoteRouter,
+                           TieredBudgetController, TieredCascade,
+                           TransportConfig, build_stage_chain,
+                           joint_pareto_frontier,
+                           select_joint_operating_point,
+                           sweep_joint_operating_points,
+                           sweep_operating_points)
+from repro.serving.engine import BILLING_FIELDS, CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+NCLS = 8
+BATCH = 16
+EDGE_COST, CLOUD_COST = 0.001, 0.005
+EASY_FRAC, MEDIUM_FRAC = 0.55, 0.30     # remainder is hard
+CONF_HI = (4.0, 6.0)                    # planted confident margin
+CONF_LO = (0.2, 0.8)                    # planted unsure margin
+REJ_MAX = 0.05                          # rejection ceiling for selection
+TIER_TOL = 0.2                          # per-hop budget tracking bound
+GEN_TOL = 0.05                          # calibration->eval accuracy drift
+
+_score = SOFTMAX_SUPERVISORS["max_softmax"]
+
+
+# ------------------------------------------------------------ workload
+
+def make_workload(rows: int, seed: int) -> dict:
+    """Per-tier logit LUTs with planted difficulty bands.
+
+    Returns row-aligned arrays: ``labels``, ``band`` (0 easy / 1 medium
+    / 2 hard) and one ``(rows, NCLS)`` logits table per tier. Tiers are
+    cumulative in skill: device solves easy, edge solves easy+medium,
+    cloud solves everything — each confidently on the rows it solves
+    and unsure (and usually wrong) elsewhere."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NCLS, rows)
+    band = rng.choice(3, rows, p=[EASY_FRAC, MEDIUM_FRAC,
+                                  1.0 - EASY_FRAC - MEDIUM_FRAC])
+
+    def tier(solves_band: int) -> np.ndarray:
+        solved = band <= solves_band
+        wrong = (labels + rng.integers(1, NCLS, rows)) % NCLS
+        target = np.where(solved, labels, wrong)
+        margin = np.where(solved, rng.uniform(*CONF_HI, rows),
+                          rng.uniform(*CONF_LO, rows))
+        logits = rng.normal(0, 0.05, (rows, NCLS))
+        logits[np.arange(rows), target] += margin
+        return np.float32(logits)
+
+    return {"labels": labels, "band": band,
+            "device": tier(0), "edge": tier(1), "cloud": tier(2)}
+
+
+def conf_correct(logits: np.ndarray, labels: np.ndarray):
+    conf = np.asarray(_score(jnp.asarray(logits)), np.float64)
+    return conf, logits.argmax(-1) == labels
+
+
+# ----------------------------------------------- joint calibration phase
+
+def calibration_phase(wl: dict, half: slice, grid: int) -> dict:
+    labels = wl["labels"][half]
+    confs, oks = [], []
+    for tier in ("device", "edge", "cloud"):
+        c, ok = conf_correct(wl[tier][half], labels)
+        confs.append(c)
+        oks.append(ok)
+    t0 = time.perf_counter()
+    pts3 = sweep_joint_operating_points(
+        confs, oks, grid=grid, stage_costs=[0.0, EDGE_COST, CLOUD_COST])
+    front3 = joint_pareto_frontier(pts3)
+    # the paper's 2-tier shape, swept both ways the ladder could be
+    # flattened: device->cloud and device->edge
+    pts2 = (sweep_operating_points(confs[0], oks[0], confs[2], oks[2],
+                                   grid=grid,
+                                   remote_cost_per_request=CLOUD_COST)
+            + sweep_operating_points(confs[0], oks[0], confs[1], oks[1],
+                                     grid=grid,
+                                     remote_cost_per_request=EDGE_COST))
+    sweep_s = time.perf_counter() - t0
+
+    best2 = max((p for p in pts2 if p.rejection_rate <= REJ_MAX),
+                key=lambda p: (p.system_accuracy, -p.cost_per_request))
+    elig3 = [p for p in pts3
+             if p.system_accuracy >= best2.system_accuracy
+             and p.rejection_rate <= REJ_MAX]
+    best3 = (min(elig3, key=lambda p: p.cost_per_request)
+             if elig3 else None)
+    budget_pt = select_joint_operating_point(
+        front3, cost_budget=CLOUD_COST / 2, max_rejection_rate=REJ_MAX)
+    monotone = all(
+        front3[i].cost_per_request > front3[i - 1].cost_per_request
+        and front3[i].system_accuracy > front3[i - 1].system_accuracy
+        for i in range(1, len(front3)))
+    return {
+        "points_swept": len(pts3), "frontier": len(front3),
+        "sweep_s": sweep_s, "frontier_monotone": monotone,
+        "best_2tier": {"thresholds": (best2.t_local, best2.t_remote),
+                       "system_accuracy": best2.system_accuracy,
+                       "cost_per_request": best2.cost_per_request},
+        "best_3tier": None if best3 is None else {
+            "thresholds": list(best3.thresholds),
+            "stage_fractions": list(best3.stage_fractions),
+            "system_accuracy": best3.system_accuracy,
+            "cost_per_request": best3.cost_per_request},
+        "budget_point": {"thresholds": list(budget_pt.thresholds),
+                         "system_accuracy": budget_pt.system_accuracy,
+                         "cost_per_request": budget_pt.cost_per_request},
+        "dominates": (best3 is not None
+                      and best3.cost_per_request
+                      < best2.cost_per_request - 1e-12),
+    }
+
+
+# ------------------------------------------------- tiered runtime phase
+
+def quiet_tconf() -> TransportConfig:
+    return TransportConfig(retry_backoff_s=0.0, max_retries=0,
+                           breaker_failures=10 ** 6, timeout_s=60.0)
+
+
+def lut_apply(table: np.ndarray):
+    return lambda batch: table[np.asarray(batch["idx"])]
+
+
+def build_ladder(wl: dict, thresholds, tiered: TieredBudgetController
+                 | None = None):
+    """Device→edge→cloud chain over the workload LUTs; per-hop budget
+    loops attach to the non-final hops when ``tiered`` is given."""
+    loop = (lambda n: tiered.loop(n)) if tiered is not None else \
+        (lambda n: None)
+    return build_stage_chain([
+        dict(name="device", apply=lut_apply(wl["device"]),
+             config=quiet_tconf(), cost_per_request=0.0,
+             threshold=float(thresholds[0]), controller=loop("device")),
+        dict(name="edge", apply=lut_apply(wl["edge"]),
+             config=quiet_tconf(), cost_per_request=EDGE_COST,
+             threshold=float(thresholds[1]), controller=loop("edge")),
+        dict(name="cloud", apply=lut_apply(wl["cloud"]),
+             config=quiet_tconf(), cost_per_request=CLOUD_COST,
+             threshold=float(thresholds[2])),
+    ])
+
+
+def runtime_phase(wl: dict, half: slice, thresholds,
+                  hop_targets: dict | None = None) -> dict:
+    """Drive the selected operating point through ``TieredCascade`` in
+    windows of BATCH; optionally with per-hop budget loops reconciled
+    by a ``TieredBudgetController``."""
+    idx = np.arange(half.start, half.stop)
+    labels = wl["labels"][half]
+    tiered = None
+    if hop_targets is not None:
+        tiered = TieredBudgetController(
+            hop_targets,
+            base=ControllerConfig(window=2 * BATCH),
+            reconcile_every=2)
+    cascade = TieredCascade(build_ladder(wl, thresholds, tiered))
+    preds, stages, accepted, costs = [], [], [], []
+    for lo in range(0, len(idx), BATCH):
+        out = cascade.serve({"idx": idx[lo:lo + BATCH]})
+        preds.append(out.prediction)
+        stages.append(out.stage_index)
+        accepted.append(out.accepted)
+        costs.append(out.cost)
+        if tiered is not None:
+            tiered.tick()       # hops observe via their own loop refs
+    cascade.shutdown()
+    pred = np.concatenate(preds)
+    stage = np.concatenate(stages)
+    acc = np.concatenate(accepted)
+    cost = np.concatenate(costs)
+    mix = {name: int((stage == i).sum())
+           for i, name in enumerate(("device", "edge", "cloud"))}
+    out = {
+        "rows": len(idx),
+        "system_accuracy": float((pred[acc] == labels[acc]).sum()
+                                 / len(idx)),
+        "rejection_rate": float(1.0 - acc.mean()),
+        "cost_per_request": float(cost.mean()),
+        "stage_mix": mix,
+        "stage_stats": {n: vars(s).copy()
+                        for n, s in cascade.stats().items()},
+        "digest": [tuple(map(int, pred)), tuple(map(int, stage)),
+                   tuple(map(bool, acc)),
+                   tuple(round(float(c), 12) for c in cost)],
+    }
+    if tiered is not None:
+        rec = tiered.reconcile()
+        out["tier_budget"] = {
+            "hop_targets": dict(hop_targets),
+            "hop_fractions": tiered.hop_fractions(),
+            "end_to_end_fraction": tiered.end_to_end_fraction(),
+            "global_target": tiered.global_target,
+            "reconciles": tiered.reconciles,
+            "windows": {n: tiered.loop(n).state.windows
+                        for n in tiered.loops},
+            "final": rec,
+        }
+    return out
+
+
+# ------------------------------------- degenerate 2-stage engine identity
+
+def engine_run(terminal_stage: bool, rows: int, seed: int) -> dict:
+    """One adaptive engine+scheduler run against a plain backend or a
+    terminal ``CascadeStage`` — everything the identity check compares."""
+    def local_apply(x):
+        return x + 0.3 * jnp.sin(17.0 * x)
+
+    def remote_apply(x):
+        return 5.0 * np.asarray(x)
+
+    cls = CascadeStage if terminal_stage else RemoteBackend
+    router = RemoteRouter([cls("cloud", remote_apply, quiet_tconf(),
+                               cost_per_request=CLOUD_COST)])
+    engine = CascadeEngine(
+        local_apply, batch_size=BATCH, remote_fraction_budget=0.5,
+        t_remote=0.0, transport=router,
+        controller=AdaptiveController(ControllerConfig(
+            target_remote_fraction=0.4, window=2 * BATCH)))
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, rows)
+    xs = np.float32(rng.normal(0, 0.05, (rows, 4)))
+    margin = np.where(rng.random(rows) < 0.5, 0.1, 3.0)
+    xs[np.arange(rows), labels] += margin
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    responses = sched.flush()
+    engine.close()
+    st, cs = engine.stats, engine.controller.state
+    return {
+        "responses": [(r.uid, int(r.prediction), r.source, r.disposition,
+                       r.backend, round(float(r.cost), 12))
+                      for r in responses],
+        "billing": {f: getattr(st, f) for f in BILLING_FIELDS},
+        "per_backend": {str(k): vars(v).copy()
+                        for k, v in st.per_backend.items()},
+        "controller": (cs.windows, cs.ema_fraction, cs.t_local,
+                       cs.t_remote, cs.drift_events),
+    }
+
+
+def chained_engine_run(wl: dict, half: slice, thresholds, seed: int
+                       ) -> dict:
+    """Chained-ladder engine run for the billing-reconciliation check:
+    the routed backend hides edge→cloud, the engine's local model is the
+    device tier."""
+    idx = np.arange(half.start, half.stop)
+    dev_tbl = jnp.asarray(wl["device"])
+
+    def local_apply(i):                 # runs under the engine's jit
+        return jnp.take(dev_tbl, i, axis=0)
+
+    chain = build_stage_chain([
+        dict(name="edge", apply=lut_apply(wl["edge"]),
+             config=quiet_tconf(), cost_per_request=EDGE_COST,
+             threshold=float(thresholds[1])),
+        dict(name="cloud", apply=lut_apply(wl["cloud"]),
+             config=quiet_tconf(), cost_per_request=CLOUD_COST),
+    ])
+    engine = CascadeEngine(local_apply, batch_size=BATCH,
+                           remote_fraction_budget=1.0,
+                           t_remote=float(thresholds[2]),
+                           transport=RemoteRouter([chain]))
+    engine.t_local = float(thresholds[0])
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7)
+    for i in idx:
+        sched.submit(Request(uid=int(i), local_input=np.int64(i),
+                             remote_input={"idx": np.int64(i)}))
+    responses = sched.flush()
+    engine.close()
+    st = engine.stats
+    per = {str(k): vars(v).copy() for k, v in st.per_backend.items()}
+    return {
+        "billing": {f: getattr(st, f) for f in BILLING_FIELDS},
+        "per_backend": per,
+        "backends_seen": sorted(
+            {r.backend for r in responses if r.backend}),
+        "escalation_identity": st.escalations == sum(
+            u["remote_calls"] + u["cache_hits"] + u["transport_failures"]
+            for u in per.values()),
+        "cost_reconciles": abs(st.total_cost - sum(
+            u["cost"] for u in per.values())) < 1e-12,
+        "agreement_tracked": all(
+            u["agreement_ema"] is not None and u["agreement_rows"] > 0
+            for u in per.values()),
+    }
+
+
+# --------------------------------------------------------------- driver
+
+def run(verbose: bool = True, rows: int = 2048, grid: int = 9,
+        seed: int = 7,
+        json_path: str | None = "BENCH_hierarchy.json") -> dict:
+    wl = make_workload(rows, seed)
+    cal_half, eval_half = slice(0, rows // 2), slice(rows // 2, rows)
+
+    t0 = time.perf_counter()
+    cal_a = calibration_phase(wl, cal_half, grid)
+    cal_b = calibration_phase(wl, cal_half, grid)
+    thresholds = cal_a["best_3tier"]["thresholds"]
+
+    # hop targets = the selected point's own escalation fractions, so
+    # the per-tier loops track an achievable budget: hop i's target is
+    # the fraction of its arrivals it should escalate
+    sf = cal_a["best_3tier"]["stage_fractions"]
+    hop_targets = {"device": sf[1] / sf[0], "edge": sf[2] / max(sf[1],
+                                                                1e-9)}
+    rt_a = runtime_phase(wl, eval_half, thresholds, hop_targets)
+    rt_b = runtime_phase(wl, eval_half, thresholds, hop_targets)
+
+    eng_plain = engine_run(False, rows // 2, seed)
+    eng_stage = engine_run(True, rows // 2, seed)
+    eng_chain = chained_engine_run(wl, eval_half, thresholds, seed)
+    wall = time.perf_counter() - t0
+
+    tb = rt_a["tier_budget"]
+    hop_err = {n: abs(tb["hop_fractions"][n] - hop_targets[n])
+               for n in hop_targets}
+    checks = {
+        # -- ISSUE 10 acceptance -------------------------------------
+        "three_tier_dominates": cal_a["dominates"],
+        "deterministic_replay": (
+            {k: v for k, v in cal_a.items() if k != "sweep_s"}
+            == {k: v for k, v in cal_b.items() if k != "sweep_s"}
+            and rt_a["digest"] == rt_b["digest"]
+            and rt_a["stage_stats"] == rt_b["stage_stats"]
+            and {k: v for k, v in rt_a.items() if k != "digest"}
+            == {k: v for k, v in rt_b.items() if k != "digest"}),
+        "two_tier_engine_identity": eng_plain == eng_stage,
+        # -- joint sweep sanity --------------------------------------
+        "frontier_monotone": cal_a["frontier_monotone"],
+        "calibration_generalizes": (
+            abs(rt_a["system_accuracy"]
+                - cal_a["best_3tier"]["system_accuracy"]) <= GEN_TOL),
+        "mid_tier_carries_load": rt_a["stage_mix"]["edge"] > 0,
+        # -- chained engine billing ----------------------------------
+        "billing_reconciles": (eng_chain["escalation_identity"]
+                               and eng_chain["cost_reconciles"]),
+        "per_stage_attribution": (
+            "edge" in eng_chain["per_backend"]
+            and "cloud" in eng_chain["per_backend"]
+            and eng_chain["agreement_tracked"]),
+        # -- per-tier budget loops -----------------------------------
+        "tier_budget_tracks": (tb["reconciles"] > 0
+                               and all(v <= TIER_TOL
+                                       for v in hop_err.values())),
+    }
+
+    report = {
+        "rows": rows, "grid": grid, "seed": seed, "batch": BATCH,
+        "stage_costs": [0.0, EDGE_COST, CLOUD_COST],
+        "wall_s": wall,
+        "calibration": cal_a,
+        "runtime": {k: v for k, v in rt_a.items() if k != "digest"},
+        "hop_targets": hop_targets,
+        "hop_errors": hop_err,
+        "engine_identity": {"billing": eng_plain["billing"],
+                            "identical": eng_plain == eng_stage},
+        "engine_chained": eng_chain,
+        "checks": checks,
+        "passed": all(checks.values()),
+    }
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+    if verbose:
+        b2, b3 = cal_a["best_2tier"], cal_a["best_3tier"]
+        print(f"\n--- Hierarchy: 3-tier ladder over {rows} rows "
+              f"(grid {grid}, seed {seed}, wall {wall:.2f}s) ---")
+        print(f"joint sweep: {cal_a['points_swept']} points, frontier "
+              f"{cal_a['frontier']} (swept twice in "
+              f"{cal_a['sweep_s']:.2f}s each)")
+        print(f"best 2-tier: acc {b2['system_accuracy']:.4f} at "
+              f"${b2['cost_per_request']:.5f}/req")
+        if b3 is not None:
+            print(f"best 3-tier: acc {b3['system_accuracy']:.4f} at "
+                  f"${b3['cost_per_request']:.5f}/req "
+                  f"(thresholds {[round(t, 3) for t in b3['thresholds']]},"
+                  f" stage fractions "
+                  f"{[round(f, 3) for f in b3['stage_fractions']]})")
+        print(f"eval: acc {rt_a['system_accuracy']:.4f}, "
+              f"${rt_a['cost_per_request']:.5f}/req, stage mix "
+              f"{rt_a['stage_mix']}, rejection "
+              f"{rt_a['rejection_rate']:.3f}")
+        print(f"tier budget: targets "
+              f"{ {k: round(v, 3) for k, v in hop_targets.items()} }, "
+              f"realised "
+              f"{ {k: round(v, 3) for k, v in tb['hop_fractions'].items()} }"
+              f" ({tb['reconciles']} reconciles, e2e "
+              f"{tb['end_to_end_fraction']:.3f} vs global "
+              f"{tb['global_target']:.3f})")
+        print(f"chained engine: per-stage "
+              f"{ {k: u['remote_calls'] for k, u in eng_chain['per_backend'].items()} }"
+              f" calls, agreement "
+              f"{ {k: None if u['agreement_ema'] is None else round(u['agreement_ema'], 3) for k, u in eng_chain['per_backend'].items()} }")
+        print(f"checks: {checks}"
+              + (f"; JSON -> {json_path}" if json_path else ""))
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=2048)
+    ap.add_argument("--grid", type=int, default=9,
+                    help="per-stage quantile grid for the joint sweep")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument("--json", default="BENCH_hierarchy.json",
+                    help="machine-readable output path ('' disables)")
+    args = ap.parse_args(argv)
+    report = run(rows=args.rows, grid=args.grid, seed=args.seed,
+                 json_path=args.json or None)
+    return 0 if report["passed"] else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -17,6 +17,13 @@
   routing     multi-remote failover vs single remote under a primary
               outage (throughput, realised $ cost, per-backend p95 —
               DESIGN.md §6; also writes BENCH_routing.json)
+  chaos       trace-driven load + fault injection on a virtual clock
+              (DESIGN.md §10; also writes BENCH_chaos.json)
+  cluster     replicated engines behind one logical cascade
+              (DESIGN.md §12; also writes BENCH_cluster.json)
+  hierarchy   N-tier device→edge→cloud cascade with joint threshold
+              calibration and per-tier budgets (DESIGN.md §13; also
+              writes BENCH_hierarchy.json)
   roofline    dry-run roofline summary (reads results/dryrun_matrix.jsonl
               if present)
 """
@@ -29,12 +36,14 @@ import os
 import sys
 import time
 
-from benchmarks import (inventory, kernels_bench, latency, rac,
+from benchmarks import (chaos_bench, cluster_bench, hierarchy_bench,
+                        inventory, kernels_bench, latency, rac,
                         routing_bench, runtime_bench, serving_bench,
                         supervised, supervisor_comparison)
 
 ALL = ("inventory", "rac", "supervised", "supervisors", "latency",
-       "kernels", "runtime", "serving", "routing", "roofline")
+       "kernels", "runtime", "serving", "routing", "chaos", "cluster",
+       "hierarchy", "roofline")
 
 
 def roofline_summary(verbose: bool = True) -> list[dict]:
@@ -92,6 +101,12 @@ def main(argv=None) -> int:
             results[name] = serving_bench.run(requests=512)
         elif name == "routing":
             results[name] = routing_bench.run()
+        elif name == "chaos":
+            results[name] = chaos_bench.run(duration_s=60.0)
+        elif name == "cluster":
+            results[name] = cluster_bench.run(duration_s=60.0)
+        elif name == "hierarchy":
+            results[name] = hierarchy_bench.run()
         elif name == "roofline":
             results[name] = roofline_summary()
         else:

@@ -25,6 +25,12 @@ override (migration table in DESIGN.md §8), e.g.::
     --set remotes=cheap:0.002:0.4;fast:0.008:0.1 \
     --set default_policy.deadline_s=0.5 --set packing=policy
 
+An N-tier ladder (DESIGN.md §13) replaces the flat registry: the tier
+specs chain into one routed ``CascadeStage`` head — each hop answers
+what its supervisor trusts and escalates the residual, e.g.::
+
+    --set "tiers=edge:0.001:0.1:0.6;cloud:0.0048:0.8"
+
 Workload-level knobs keep first-class flags:
   --remote-budget   target remote fraction (capacity / controller target)
   --fpr             2nd-level supervisor nominal false-alarm rate
@@ -120,6 +126,33 @@ def _serve_cluster(args, cfg, router, local_apply, toks, local_toks,
     print(f"[serve] cluster: {cfg.replicas} replicas {names}, shared "
           f"cache {'on' if harness.shared_cache is not None else 'off'}, "
           f"reconcile every {harness.reconcile_interval_s:.1f}s")
+
+    # the fleet shares ONE MetricsRegistry (replica-labelled series), so
+    # the live scrape endpoint and the interval pump serve the merged
+    # snapshot directly — no per-replica aggregation pass needed
+    metrics_server = None
+    if harness.metrics is not None and args.metrics_port is not None:
+        from repro.runtime.observability import MetricsServer
+        metrics_server = MetricsServer(harness.metrics,
+                                       port=args.metrics_port)
+        print(f"[serve] metrics endpoint: {metrics_server.url} "
+              f"(merged fleet registry)")
+    stop_pump = threading.Event()
+
+    def pump():
+        while not stop_pump.wait(args.metrics_interval):
+            c = harness.metrics.snapshot()["counters"]
+            print(f"[serve] fleet metrics: "
+                  f"{c.get('cascade_requests_total', 0):.0f} requests, "
+                  f"{c.get('cascade_escalations_total', 0):.0f} "
+                  f"escalated, "
+                  f"${c.get('cascade_cost_dollars_total', 0.0):.4f}")
+
+    pump_thread = None
+    if harness.metrics is not None and args.metrics_interval:
+        pump_thread = threading.Thread(target=pump, daemon=True)
+        pump_thread.start()
+
     t0 = time.perf_counter()
     responses = []
     flush_every = max(cfg.batch_size, 1) * len(names)
@@ -141,6 +174,11 @@ def _serve_cluster(args, cfg, router, local_apply, toks, local_toks,
         harness.cluster.reconcile(time.perf_counter())
     finally:
         harness.close()
+        if pump_thread is not None:
+            stop_pump.set()
+            pump_thread.join(timeout=5.0)
+        if metrics_server is not None:
+            metrics_server.close()
     wall = time.perf_counter() - t0
 
     correct = sum(r.prediction == labels[r.uid] for r in responses
@@ -255,11 +293,11 @@ def main(argv=None) -> int:
             and not args.calibrate):
         ap.error("cost_budget is only enforced by the controller or the "
                  "offline sweep; add --adaptive and/or --calibrate")
-    if cfg.replicas > 1 and (args.trace or args.trace_chrome
-                             or args.metrics_interval
-                             or args.metrics_port is not None):
-        ap.error("replicas>1 supports --metrics-dump only; per-replica "
-                 "tracing / live scrape is a follow-on (DESIGN.md §12)")
+    if cfg.replicas > 1 and (args.trace or args.trace_chrome):
+        ap.error("replicas>1 supports the metrics surface "
+                 "(--metrics-dump / --metrics-interval / --metrics-port "
+                 "serve the merged fleet registry, replica-labelled); "
+                 "per-replica tracing is a follow-on (DESIGN.md §12)")
 
     # ---- task + local surrogate (paper §4.1: input-domain-reduced) ----
     vocab, seq, ncls = 512, 48, 8
@@ -321,6 +359,10 @@ def main(argv=None) -> int:
         print(f"[serve] remote registry: "
               f"{[b.name for b in router.candidates()]} "
               f"(policy {router.policy})")
+        if cfg.tiers:
+            head = router.candidates()[0]
+            print("[serve] tier ladder: " + " -> ".join(
+                f"{s.name}(t={s.threshold:g})" for s in head.chain()))
         # key on token content only: the per-request "idx" (oracle-head
         # plumbing) would make every key unique and the cache cold
         cache = cfg.build_cache(

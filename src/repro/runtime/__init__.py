@@ -19,14 +19,21 @@ from repro.runtime.chaos import (CHAOS_KINDS, ChaosEpisode, ChaosFault,
                                  ChaosTimeout, VirtualClock)
 from repro.runtime.observability import (EventLog, MetricsRegistry,
                                          Observability, TraceSink)
-from repro.runtime.calibration import (EscalationPrior, OperatingPoint,
-                                       calibrate, fit_escalation_prior,
+from repro.runtime.calibration import (EscalationPrior, JointOperatingPoint,
+                                       OperatingPoint, calibrate,
+                                       fit_escalation_prior,
+                                       joint_pareto_frontier,
                                        pareto_frontier,
+                                       select_joint_operating_point,
                                        select_operating_point,
+                                       sweep_joint_operating_points,
                                        sweep_operating_points)
 from repro.runtime.controller import (AdaptiveController, ControllerConfig,
                                       ControllerState,
+                                      TieredBudgetController,
                                       population_stability_index)
+from repro.runtime.hierarchy import (CascadeStage, StageStats, TieredCascade,
+                                     build_stage_chain)
 from repro.runtime.cluster import (CacheUpdate, ClusterBudgetConfig,
                                    ClusterBudgetController,
                                    ClusterBudgetState, ClusterHarness,
@@ -43,19 +50,22 @@ from repro.runtime.transport import (ROUTE_POLICIES, CircuitBreaker,
 
 __all__ = [
     "CHAOS_KINDS", "ROUTE_POLICIES", "AdaptiveController", "CacheStats",
-    "CacheUpdate", "ChaosEpisode", "ChaosFault", "ChaosRemote",
-    "ChaosSchedule", "ChaosStats", "ChaosTimeout", "CircuitBreaker",
-    "CircuitOpenError", "ClusterBudgetConfig", "ClusterBudgetController",
-    "ClusterBudgetState", "ClusterHarness", "ClusterReplica",
-    "ControllerConfig", "ControllerState", "EscalationPrior", "EventLog",
+    "CacheUpdate", "CascadeStage", "ChaosEpisode", "ChaosFault",
+    "ChaosRemote", "ChaosSchedule", "ChaosStats", "ChaosTimeout",
+    "CircuitBreaker", "CircuitOpenError", "ClusterBudgetConfig",
+    "ClusterBudgetController", "ClusterBudgetState", "ClusterHarness",
+    "ClusterReplica", "ControllerConfig", "ControllerState",
+    "EscalationPrior", "EventLog", "JointOperatingPoint",
     "MetricsRegistry", "Observability", "OperatingPoint", "RemoteBackend",
     "RemoteCallError", "RemoteResponseCache", "RemoteRouter",
     "RemoteTimeout", "RemoteTransport", "ReplicaCacheView",
     "RouteConstraint", "RouterStats", "SharedCacheStats",
-    "SharedResponseCache", "TraceSink", "TransportConfig",
-    "TransportFuture", "TransportStats", "VirtualClock", "calibrate",
+    "SharedResponseCache", "StageStats", "TieredBudgetController",
+    "TieredCascade", "TraceSink", "TransportConfig", "TransportFuture",
+    "TransportStats", "VirtualClock", "build_stage_chain", "calibrate",
     "cluster_billing", "content_key", "content_keys",
-    "fit_escalation_prior", "pareto_frontier",
-    "population_stability_index", "select_operating_point",
+    "fit_escalation_prior", "joint_pareto_frontier", "pareto_frontier",
+    "population_stability_index", "select_joint_operating_point",
+    "select_operating_point", "sweep_joint_operating_points",
     "sweep_operating_points",
 ]

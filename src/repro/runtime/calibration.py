@@ -142,6 +142,163 @@ def select_operating_point(points: Sequence[OperatingPoint],
                                         -p.rejection_rate))
 
 
+# ---------------------------------------------------------------------------
+# Joint (t_1, ..., t_n) calibration for N-tier hierarchies (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class JointOperatingPoint:
+    """One point on the joint (t_1, ..., t_n) operating surface of an
+    N-tier cascade. ``stage_fractions[i]`` is the fraction of rows that
+    *reach* stage i (``[0] == 1.0``); ``cost_per_request`` prices each
+    reach at that stage's per-row cost. The 2-stage case carries exactly
+    the ``OperatingPoint`` metrics (the exact-reproduction property the
+    tests pin down)."""
+    thresholds: tuple
+    stage_fractions: tuple
+    rejection_rate: float
+    accuracy: float           # accuracy over accepted inputs
+    system_accuracy: float    # accuracy over ALL inputs (rejected = wrong)
+    cost_per_request: float
+
+    @property
+    def remote_fraction(self) -> float:
+        """Fraction leaving the device tier (2-tier compatibility)."""
+        return self.stage_fractions[1] if len(self.stage_fractions) > 1 \
+            else 0.0
+
+    def capacity(self, batch_size: int) -> int:
+        return escalation_capacity(batch_size, max(self.remote_fraction,
+                                                   1e-6))
+
+
+def _stage_grids(grid, n_stages: int) -> list[int]:
+    if isinstance(grid, int):
+        return [grid] * n_stages
+    grids = list(grid)
+    if len(grids) != n_stages:
+        raise ValueError(f"grid must be an int or one per stage "
+                         f"({n_stages}), got {len(grids)}")
+    return grids
+
+
+def sweep_joint_operating_points(confs, corrects, *, grid=17,
+                                 stage_costs=None, prune: bool = True
+                                 ) -> list[JointOperatingPoint]:
+    """Exhaustive sweep of the joint (t_1, ..., t_n) threshold surface.
+
+    ``confs``/``corrects`` are n_stages row-aligned arrays over the
+    validation set: stage i's supervisor confidence and 0/1 correctness
+    for every row *as if* it reached stage i. ``stage_costs[i]`` is the
+    per-row price of reaching stage i (``[0]`` is the device tier,
+    conventionally 0). Semantics per stage mirror the 2-level sweep
+    exactly — strict ``>`` comparisons, quantile grids conditioned on
+    the rows actually reaching the stage — so with ``n_stages == 2``
+    this reproduces ``sweep_operating_points`` point for point (tested).
+
+    ``grid`` is an int (same per stage) or one int per stage. With
+    ``prune=True`` an *intermediate* stage that nothing reaches stops
+    branching (every deeper threshold choice is metrically identical);
+    the final stage always enumerates its full grid, matching the
+    2-level sweep's behaviour on empty escalation sets.
+    """
+    confs = [np.asarray(c, np.float64) for c in confs]
+    oks = [np.asarray(c, bool) for c in corrects]
+    n_stages = len(confs)
+    if n_stages < 2:
+        raise ValueError("need at least 2 stages")
+    if len(oks) != n_stages:
+        raise ValueError("confs and corrects must align per stage")
+    n = confs[0].shape[0]
+    grids = _stage_grids(grid, n_stages)
+    if stage_costs is None:
+        stage_costs = [0.0] * (n_stages - 1) + [0.0048]
+    stage_costs = [float(c) for c in stage_costs]
+    if len(stage_costs) != n_stages:
+        raise ValueError("stage_costs must give one price per stage")
+
+    points: list[JointOperatingPoint] = []
+
+    def rec(i, reach, thresholds, fracs, hits, answered_count, cost):
+        ci = confs[i]
+        n_reach = int(reach.sum())
+        cand = _quantile_grid(ci[reach] if n_reach else ci, grids[i])
+        if i == n_stages - 1:
+            for t in cand:
+                ok_rows = reach & (ci > t)
+                n_acc = answered_count + int(ok_rows.sum())
+                h = hits + int(oks[i][ok_rows].sum())
+                points.append(JointOperatingPoint(
+                    thresholds=(*thresholds, float(t)),
+                    stage_fractions=(*fracs,),
+                    rejection_rate=1.0 - n_acc / n,
+                    accuracy=h / max(n_acc, 1),
+                    system_accuracy=h / n,
+                    cost_per_request=cost))
+            return
+        if prune and n_reach == 0 and i > 0:
+            cand = cand[:1]        # every branch below is identical
+        for t in cand:
+            ans = reach & (ci > t)
+            resid = reach & ~ans
+            n_resid = int(resid.sum())
+            rec(i + 1, resid, (*thresholds, float(t)),
+                (*fracs, n_resid / n),
+                hits + int(oks[i][ans].sum()),
+                answered_count + int(ans.sum()),
+                cost + n_resid / n * stage_costs[i + 1])
+        return
+
+    rec(0, np.ones(n, bool), (), (1.0,), 0, 0, 0.0)
+    return points
+
+
+def joint_pareto_frontier(points: "Sequence[JointOperatingPoint]"
+                          ) -> list[JointOperatingPoint]:
+    """Non-dominated subset over ($/request, system accuracy), sorted by
+    ascending cost. System accuracy folds the rejection rate in (a
+    rejected row is a wrong row), so the frontier is strictly monotone:
+    each successive point costs strictly more and answers strictly more
+    of the workload correctly."""
+    front: list[JointOperatingPoint] = []
+    best = -1.0
+    for p in sorted(points, key=lambda p: (p.cost_per_request,
+                                           -p.system_accuracy,
+                                           p.rejection_rate)):
+        if p.system_accuracy > best:
+            best = p.system_accuracy
+            front.append(p)
+    return front
+
+
+def select_joint_operating_point(points, *, budget: float | None = None,
+                                 cost_budget: float | None = None,
+                                 max_rejection_rate: float | None = None
+                                 ) -> JointOperatingPoint:
+    """Best system accuracy under a budget: either a fraction budget on
+    rows leaving the device tier (``budget``) or a dollar ceiling on the
+    per-stage-priced $/request (``cost_budget``). Mirrors
+    ``select_operating_point``: the rejection ceiling is soft, and an
+    infeasible budget falls back to the cheapest point."""
+    if (budget is None) == (cost_budget is None):
+        raise ValueError("give exactly one of budget / cost_budget")
+    if cost_budget is not None:
+        feasible = [p for p in points
+                    if p.cost_per_request <= cost_budget + 1e-12]
+    else:
+        feasible = [p for p in points
+                    if p.remote_fraction <= budget + 1e-12]
+    if max_rejection_rate is not None:
+        hard = [p for p in feasible
+                if p.rejection_rate <= max_rejection_rate + 1e-12]
+        feasible = hard or feasible
+    if not feasible:
+        feasible = [min(points, key=lambda p: p.cost_per_request)]
+    return max(feasible, key=lambda p: (p.system_accuracy,
+                                        -p.cost_per_request,
+                                        -p.rejection_rate))
+
+
 class EscalationPrior:
     """P(escalate | proxy score): the calibration-table prior behind the
     scheduler's policy-aware window packing (DESIGN.md §8).

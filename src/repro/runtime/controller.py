@@ -281,3 +281,133 @@ class AdaptiveController:
         # a spurious drift flag
         self._ref_hist = 0.9 * self._ref_hist + 0.1 * hist
         return False
+
+
+# ---------------------------------------------------------------------------
+# Per-tier budgets for N-tier hierarchies (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+class TieredBudgetController:
+    """One EMA/PI budget loop per cascade hop, reconciled to a global
+    end-to-end budget.
+
+    Each hop of an N-tier cascade (DESIGN.md §13) gets its own
+    ``AdaptiveController`` tracking that hop's observed escalation
+    fraction against a per-hop target. Because the fraction of traffic
+    reaching the deepest tier is the *product* of the per-hop fractions,
+    holding each hop loosely at its own target can still drift the
+    end-to-end remote fraction off the global budget — so every
+    ``reconcile_every`` hop-windows the controller re-centres: it takes
+    the observed end-to-end fraction (product of per-hop EMAs), compares
+    it to ``global_target``, and scales every hop's target by the n-th
+    root of the ratio (clipped to ``[floor, 1]``). The same
+    ``retarget`` hook the cluster reconciler uses (DESIGN.md §12)
+    carries the correction, so each hop's PI loop converges on its new
+    target from the next window on.
+
+    ``loop(name)`` hands a hop's controller to its ``CascadeStage`` (or
+    to the engine for hop 1); ``observe`` delegates by hop name and
+    counts control windows to trigger the reconcile.
+    """
+
+    def __init__(self, hop_targets, *, global_target: float | None = None,
+                 base: ControllerConfig = ControllerConfig(),
+                 reconcile_every: int = 4, floor: float = 0.01):
+        items = (list(hop_targets.items())
+                 if isinstance(hop_targets, dict) else list(hop_targets))
+        if not items:
+            raise ValueError("need at least one hop")
+        self.hops = [name for name, _ in items]
+        self.loops = {
+            name: AdaptiveController(
+                replace(base, target_remote_fraction=float(t)))
+            for name, t in items}
+        prod = 1.0
+        for _, t in items:
+            prod *= float(t)
+        self.global_target = float(global_target if global_target is not None
+                                   else prod)
+        self.reconcile_every = max(1, int(reconcile_every))
+        self.floor = float(floor)
+        self.reconciles = 0
+        self._last_windows = 0
+        # observability (installed like AdaptiveController.events)
+        self.events = None
+        self.event_window: int | None = None
+
+    def loop(self, name: str) -> AdaptiveController:
+        return self.loops[name]
+
+    def _total_windows(self) -> int:
+        return sum(self.loops[h].state.windows for h in self.hops)
+
+    def observe(self, name: str, conf, escalated: int, requests: int,
+                remote_conf=None, cost: float = 0.0) -> None:
+        """Feed one hop's served batch to its loop; reconcile when
+        enough control windows have elapsed across the hops."""
+        self.loops[name].observe(conf, escalated, requests,
+                                 remote_conf, cost=cost)
+        self.tick()
+
+    def tick(self) -> bool:
+        """Reconcile iff enough control windows elapsed across the hops
+        since the last one. The drive loop's hook when hops observe
+        through their own ``AdaptiveController`` references (e.g. a
+        ``CascadeStage`` holding ``loop(name)``) rather than through
+        ``observe``."""
+        if self._total_windows() - self._last_windows \
+                >= self.reconcile_every:
+            self.reconcile()
+            return True
+        return False
+
+    def hop_fractions(self) -> dict[str, float]:
+        """Per-hop observed escalation fraction (EMA; the hop's target
+        until its first control window)."""
+        out = {}
+        for h in self.hops:
+            lp = self.loops[h]
+            out[h] = (lp.state.ema_fraction if lp.state.windows
+                      else lp.config.target_remote_fraction)
+        return out
+
+    def end_to_end_fraction(self) -> float:
+        """Observed fraction of traffic reaching past the last hop —
+        the product of per-hop escalation fractions."""
+        prod = 1.0
+        for f in self.hop_fractions().values():
+            prod *= f
+        return prod
+
+    def reconcile(self) -> dict:
+        """Re-centre the per-hop targets on the global budget: scale each
+        by the n-th root of target/observed (hops iterate in registration
+        order, so the outcome is deterministic)."""
+        self._last_windows = self._total_windows()
+        observed = self.end_to_end_fraction()
+        targets = {}
+        if observed > 0.0:
+            scale = (self.global_target / observed) ** (1.0 / len(self.hops))
+            for h in self.hops:
+                lp = self.loops[h]
+                t = float(np.clip(lp.config.target_remote_fraction * scale,
+                                  self.floor, 1.0))
+                lp.retarget(t)
+                targets[h] = t
+        else:
+            # nothing escalates anywhere: reopen every hop at the global
+            # target's n-th root rather than steering on a zero product
+            t0 = self.global_target ** (1.0 / len(self.hops))
+            for h in self.hops:
+                t = float(np.clip(t0, self.floor, 1.0))
+                self.loops[h].retarget(t)
+                targets[h] = t
+        self.reconciles += 1
+        if self.events is not None:
+            self.events.emit("tier_reconcile",
+                             window=self.event_window,
+                             observed=observed,
+                             global_target=self.global_target,
+                             targets=targets,
+                             reconciles=self.reconciles)
+        return {"observed": observed, "targets": targets}

@@ -52,6 +52,7 @@ from typing import Any
 __all__ = [
     "EV_ADMISSION_DEGRADE",
     "EV_ADMISSION_SHED",
+    "EV_BACKEND_AGREEMENT",
     "EV_BREAKER_CLOSE",
     "EV_BREAKER_HALF_OPEN",
     "EV_BREAKER_OPEN",
@@ -67,6 +68,8 @@ __all__ = [
     "EV_REPLAY_SERVED",
     "EV_ROUTER_FAILBACK",
     "EV_ROUTER_FAILOVER",
+    "EV_STAGE_ANSWER",
+    "EV_TIER_RECONCILE",
     "LATENCY_BUCKETS_S",
     "SPAN_STAGES",
     "Counter",
@@ -106,6 +109,14 @@ EV_ADMISSION_DEGRADE = "admission_degrade"
 # reconcile — carries the pooled threshold, per-replica targets and any
 # replicas excluded as stale (blackout) this round
 EV_CLUSTER_RECONCILE = "cluster_reconcile"
+# N-tier hierarchy (DESIGN.md §13): per-commit attribution of which
+# stage of a chained backend answered how many rows at what cost, the
+# per-backend agreement-with-local EMA update, and one event per
+# TieredBudgetController reconcile (per-hop targets re-centred on the
+# global end-to-end budget)
+EV_STAGE_ANSWER = "stage_answer"
+EV_BACKEND_AGREEMENT = "backend_agreement"
+EV_TIER_RECONCILE = "tier_reconcile"
 
 # canonical span stage order (a span contains the subset that applies to
 # its disposition; timestamps are nondecreasing in this order).
@@ -499,6 +510,15 @@ def _collect_engine(reg: MetricsRegistry, engine: Any) -> None:
             if u is not None:
                 reg.gauge("backend_billed_dollars", **lab).set(u.cost)
                 reg.gauge("backend_remote_calls", **lab).set(u.remote_calls)
+    # per-backend/per-stage agreement-with-local EMA (DESIGN.md §13):
+    # iterated over per_backend rather than router.backends because a
+    # chained CascadeStage attributes to stage names the router never
+    # sees as backends of its own
+    for bname in sorted(st.per_backend, key=str):
+        u = st.per_backend[bname]
+        if u.agreement_ema is not None:
+            reg.gauge("backend_agreement_ema", backend=str(bname)).set(
+                u.agreement_ema)
     if engine.controller is not None:
         cs = engine.controller.state
         reg.gauge("controller_windows").set(cs.windows)

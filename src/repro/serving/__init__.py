@@ -6,12 +6,14 @@ from repro.serving.engine import (CascadeEngine, CascadeStats, CostModel,
 from repro.serving.generate import greedy_generate
 from repro.serving.policy import (DISPOSITIONS, ESCALATION_MODES,
                                   ON_MISS_MODES, PACKING_MODES,
-                                  RemoteSpec, RequestPolicy, ServeConfig)
+                                  RemoteSpec, RequestPolicy, ServeConfig,
+                                  TierSpec)
 from repro.serving.scheduler import (COMPLETION_MODES, MicrobatchScheduler,
                                      Request, Response)
 
 __all__ = ["CascadeEngine", "CascadeStats", "CostModel", "COMPLETION_MODES",
            "DISPOSITIONS", "ESCALATION_MODES", "ON_MISS_MODES",
            "PACKING_MODES", "RemoteSpec", "RequestPolicy", "ServeConfig",
-           "make_cascade_step", "make_gated_local_step", "make_local_step",
-           "greedy_generate", "MicrobatchScheduler", "Request", "Response"]
+           "TierSpec", "make_cascade_step", "make_gated_local_step",
+           "make_local_step", "greedy_generate", "MicrobatchScheduler",
+           "Request", "Response"]

@@ -87,8 +87,10 @@ from repro.core.cascade import (combine_escalated, escalation_capacity,
 from repro.core.supervisors import SOFTMAX_SUPERVISORS
 from repro.kernels.confidence_gate.ops import _on_tpu, confidence_gate
 from repro.kernels.fused_head_gate.ops import FusedLocalHead, fused_head_gate
-from repro.runtime.observability import (EV_DEADLINE_DOWNGRADE,
-                                         EV_POLICY_DOWNGRADE)
+from repro.runtime.observability import (EV_BACKEND_AGREEMENT,
+                                         EV_DEADLINE_DOWNGRADE,
+                                         EV_POLICY_DOWNGRADE,
+                                         EV_STAGE_ANSWER)
 from repro.runtime.transport import (RemoteBackend, RemoteRouter,
                                      RouteConstraint)
 from repro.serving.policy import (CACHED, DEADLINE_LOCAL, LOCAL,
@@ -112,6 +114,9 @@ BILLING_FIELDS = ("requests", "escalations", "remote_calls", "cache_hits",
                   "transport_failures", "rejected", "total_cost")
 # attribution for cache entries stored without a source backend
 UNATTRIBUTED = "(cache)"
+# EMA weight for the per-backend agreement-with-local signal
+# (DESIGN.md §13): one observation per committed window per backend
+AGREEMENT_ALPHA = 0.2
 
 
 @dataclass(frozen=True)
@@ -152,6 +157,11 @@ class BackendUsage:
     transport_failures: int = 0      # escalations this backend lost
     cost: float = 0.0                # realised $ billed to this backend
     remote_latency_s: float = 0.0    # modelled remote seconds accrued
+    # running agreement-with-local EMA over the escalated rows this
+    # backend served (DESIGN.md §13): the label-free accuracy signal the
+    # 2nd-level threshold can consult — None until the first served row
+    agreement_ema: float | None = None
+    agreement_rows: int = 0
 
 
 @dataclass
@@ -413,6 +423,12 @@ class _InFlight:
     n_failed: int = 0
     n_hits: int = 0
     bname: str = UNROUTED
+    # per-row stage attribution from a chained CascadeStage backend
+    # (DESIGN.md §13); None for plain backends and terminal stages, which
+    # keeps the degenerate 2-stage config on the existing path
+    stage_detail: dict | None = None
+    stage_split: dict | None = None  # stage -> [calls, failures, cost, lat]
+    agreement: list | None = None    # (backend, rows, window frac, ema)
     # -- observability (DESIGN.md §9) -----------------------------------
     # per-window stage timestamps (dispatch/gate/route/remote/commit) +
     # the gating threshold; None when observability is disabled, so the
@@ -1156,12 +1172,22 @@ class CascadeEngine:
                     n_sent = int(ok.sum())
                     n_failed = len(fl.miss) - n_sent
                     bname = fl.backend.name
+                    # a chained CascadeStage hands back which hop answered
+                    # each row, at what confidence and price (DESIGN.md
+                    # §13); plain backends and terminal stages return
+                    # None, keeping the existing path byte-for-byte
+                    take = getattr(fl.backend, "take_detail", None)
+                    fl.stage_detail = (take(fl.seq) if take is not None
+                                       else None)
+                    det = fl.stage_detail
                     for w, j in enumerate(fl.miss):
                         if ok[w]:
                             cached[j] = logits[w]
                             if self.cache is not None:
+                                src = (str(det["stage"][w])
+                                       if det is not None else bname)
                                 self.cache.put(fl.keys[j], logits[w],
-                                               source=bname)
+                                               source=src)
                 else:                 # no backend available at submit time
                     n_failed = len(fl.miss)
             n_hits = fl.k - len(fl.miss) - len(fl.forced)
@@ -1176,6 +1202,15 @@ class CascadeEngine:
             # transport-lost escalations: 2nd supervisor can never trust
             # them -> REJECTED -> scheduler fallback (Algorithm 1 line 12)
             remote_conf[fl.idx[failed]] = -np.inf
+            if fl.stage_detail is not None:
+                # fresh rows answered mid-chain carry the answering
+                # stage's OWN supervisor score — that is the confidence
+                # the accept gate below must judge, not the engine
+                # supervisor re-scored on the spliced logits
+                sdet = fl.stage_detail
+                for w, j in enumerate(fl.miss):
+                    if cached[j] is not None:
+                        remote_conf[fl.idx[j]] = sdet["conf"][w]
 
         escalated = np.zeros((fl.b,), bool)
         escalated[fl.idx] = True
@@ -1201,17 +1236,31 @@ class CascadeEngine:
             disposition[i] = d
         cost_per = self.cost.backend_cost(fl.backend)
         miss_set = set(fl.miss)
+        # with stage detail, rows attribute to the hop that actually
+        # answered (or lost) them, at that hop's price (DESIGN.md §13)
+        w_of = ({j: w for w, j in enumerate(fl.miss)}
+                if fl.stage_detail is not None else None)
         for j, i in enumerate(map(int, fl.idx)):
             if j in fl.forced:
                 disposition[i] = REJECTED       # policy-rejected, $0
             elif j in miss_set:
                 if fl.cached[j] is not None:    # billed remote answer
                     disposition[i] = (REMOTE if accepted[i] else REJECTED)
-                    row_backend[i] = fl.bname
-                    row_cost[i] = cost_per
+                    if w_of is None:
+                        row_backend[i] = fl.bname
+                        row_cost[i] = cost_per
+                    else:
+                        w = w_of[j]
+                        sc = fl.stage_detail["cost"][w]
+                        row_backend[i] = str(fl.stage_detail["stage"][w])
+                        row_cost[i] = (self.cost.remote_cost_per_request
+                                       if np.isnan(sc) else float(sc))
                 else:                           # transport-lost, $0
                     disposition[i] = REJECTED
-                    if fl.backend is not None:
+                    if w_of is not None:
+                        row_backend[i] = str(
+                            fl.stage_detail["stage"][w_of[j]])
+                    elif fl.backend is not None:
                         row_backend[i] = fl.bname
             else:                               # cache hit, $0
                 disposition[i] = (CACHED if accepted[i] else REJECTED)
@@ -1249,13 +1298,47 @@ class CascadeEngine:
         # $0 to whichever backend originally filled the entry
         cost_per = self.cost.backend_cost(fl.backend)
         lat_per = self.cost.backend_latency(fl.backend)
-        window_cost = fl.n_sent * cost_per
-        if fl.n_sent or fl.n_failed:
-            u = self.stats.backend_usage(fl.bname)
-            u.remote_calls += fl.n_sent
-            u.transport_failures += fl.n_failed
-            u.cost += window_cost
-            u.remote_latency_s += fl.n_sent * lat_per
+        if fl.stage_detail is not None and fl.miss:
+            # per-stage billing split (DESIGN.md §13): each fresh row
+            # charges the hop that answered it at that hop's price; lost
+            # rows charge their failure to the hop whose transport dropped
+            # them. The lump-sum path below stays byte-for-byte for plain
+            # backends and terminal (degenerate 2-tier) stages.
+            sdet = fl.stage_detail
+            split: dict[str, list] = {}
+            for w, j in enumerate(fl.miss):
+                row = split.setdefault(str(sdet["stage"][w]),
+                                       [0, 0, 0.0, 0.0])
+                if fl.cached[j] is not None:
+                    sc, sl = sdet["cost"][w], sdet["latency"][w]
+                    row[0] += 1
+                    row[2] += (self.cost.remote_cost_per_request
+                               if np.isnan(sc) else float(sc))
+                    row[3] += (self.cost.remote_latency_s
+                               if np.isnan(sl) else float(sl))
+                else:
+                    row[1] += 1
+            fl.stage_split = split
+            window_cost = 0.0
+            window_lat = 0.0
+            for name in sorted(split):
+                calls, fails, c, lt = split[name]
+                u = self.stats.backend_usage(name)
+                u.remote_calls += calls
+                u.transport_failures += fails
+                u.cost += c
+                u.remote_latency_s += lt
+                window_cost += c
+                window_lat += lt
+        else:
+            window_cost = fl.n_sent * cost_per
+            window_lat = fl.n_sent * lat_per
+            if fl.n_sent or fl.n_failed:
+                u = self.stats.backend_usage(fl.bname)
+                u.remote_calls += fl.n_sent
+                u.transport_failures += fl.n_failed
+                u.cost += window_cost
+                u.remote_latency_s += window_lat
         if fl.n_hits and fl.hit_src is not None:
             miss_set = set(fl.miss)
             for j in range(fl.k):
@@ -1265,6 +1348,32 @@ class CascadeEngine:
                     self.stats.backend_usage(
                         src if src is not None else UNATTRIBUTED
                     ).cache_hits += 1
+
+        # per-backend agreement-with-local EMA (DESIGN.md §13): on served
+        # escalated rows, how often the answering backend's argmax agreed
+        # with the local model's — a label-free cross-tier accuracy proxy
+        if fl.k > 0:
+            rb = fl.result["backend"]
+            groups: dict[str, list] = {}
+            for j, i in enumerate(map(int, fl.idx)):
+                if (j not in fl.forced and i < fl.real
+                        and np.isfinite(fl.remote_conf[i])
+                        and rb[i] is not None):
+                    groups.setdefault(str(rb[i]), []).append(
+                        int(fl.pred[i] == fl.local_pred[i]))
+            if groups:
+                fl.agreement = []
+                for name in sorted(groups):
+                    rows = groups[name]
+                    frac = float(np.mean(rows))
+                    u = self.stats.backend_usage(name)
+                    u.agreement_rows += len(rows)
+                    u.agreement_ema = (
+                        frac if u.agreement_ema is None
+                        else (1.0 - AGREEMENT_ALPHA) * u.agreement_ema
+                        + AGREEMENT_ALPHA * frac)
+                    fl.agreement.append((name, len(rows), frac,
+                                         u.agreement_ema))
 
         accepted = fl.result["accepted"]
         # policy-rejected rows never touched a tier past the local model:
@@ -1276,7 +1385,7 @@ class CascadeEngine:
         self._account(fl.real, escalations, fl.n_sent, fl.n_hits,
                       fl.n_failed, rejected,
                       cost=window_cost,
-                      remote_latency_s=fl.n_sent * lat_per)
+                      remote_latency_s=window_lat)
         wall_s = self._clock() - fl.t0
         self.stats.record_wall(wall_s, fl.real)
         if fl.tr is not None:
@@ -1322,12 +1431,31 @@ class CascadeEngine:
             m.counter("cascade_disposition_total",
                       disposition=str(d)).inc(int(c))
         m.histogram("cascade_window_wall_seconds").observe(wall_s)
+        if fl.stage_split is not None:
+            for name in sorted(fl.stage_split):
+                calls, fails, _c, _lt = fl.stage_split[name]
+                if calls:
+                    m.counter("cascade_stage_answered_total",
+                              stage=name).inc(calls)
+                if fails:
+                    m.counter("cascade_stage_failures_total",
+                              stage=name).inc(fails)
         ev = self.observability.events
         if ev is not None and fl.downgraded:
             for i, d in sorted(fl.downgraded.items()):
                 ev.emit(EV_DEADLINE_DOWNGRADE if d == DEADLINE_LOCAL
                         else EV_POLICY_DOWNGRADE,
                         window=fl.seq, row=int(i), disposition=d)
+        if ev is not None and fl.stage_split is not None:
+            for name in sorted(fl.stage_split):
+                calls, fails, c, _lt = fl.stage_split[name]
+                ev.emit(EV_STAGE_ANSWER, window=fl.seq, stage=name,
+                        answered=calls, failures=fails, cost=c)
+        if ev is not None and fl.agreement is not None:
+            for name, rows, frac, ema in fl.agreement:
+                ev.emit(EV_BACKEND_AGREEMENT, window=fl.seq,
+                        backend=name, rows=rows,
+                        window_fraction=frac, ema=ema)
 
     # ------------------------------------------------------------------
     def close(self, wait: bool = True) -> None:

@@ -158,6 +158,43 @@ def _parse_remotes(text: str) -> tuple[RemoteSpec, ...]:
 
 
 @dataclass(frozen=True)
+class TierSpec:
+    """Declarative spec for one hop of an N-tier cascade ladder
+    (DESIGN.md §13). The ladder replaces the flat ``remotes`` registry:
+    ``ServeConfig.build_router`` chains the tiers into one
+    ``CascadeStage`` head routed as a single logical backend — each hop
+    answers the rows its supervisor scores above ``threshold`` and
+    escalates the residual; the last tier is terminal (its trust gate is
+    the engine's ``t_remote``)."""
+    name: str
+    cost_per_request: float | None = None
+    latency_s: float | None = None
+    threshold: float = 0.0
+    supervisor: str = "max_softmax"
+
+    @classmethod
+    def parse(cls, spec: str) -> "TierSpec":
+        """``name[:cost[:lat[:threshold[:supervisor]]]]`` — empty fields
+        keep the defaults."""
+        parts = spec.split(":")
+        if len(parts) > 5 or not parts[0]:
+            raise ValueError(
+                f"bad tier spec {spec!r}; expected "
+                f"name[:cost[:latency[:threshold[:supervisor]]]]")
+        cost = float(parts[1]) if len(parts) > 1 and parts[1] else None
+        latency = float(parts[2]) if len(parts) > 2 and parts[2] else None
+        threshold = float(parts[3]) if len(parts) > 3 and parts[3] else 0.0
+        supervisor = (parts[4] if len(parts) > 4 and parts[4]
+                      else "max_softmax")
+        return cls(parts[0], cost, latency, threshold, supervisor)
+
+
+def _parse_tiers(text: str) -> tuple[TierSpec, ...]:
+    """``name:cost:lat:thr[;...]`` (outermost hop first) → tier specs."""
+    return tuple(TierSpec.parse(s) for s in text.split(";") if s)
+
+
+@dataclass(frozen=True)
 class ServeConfig:
     """The one serving-surface configuration object (DESIGN.md §8).
 
@@ -184,6 +221,9 @@ class ServeConfig:
     # -- remote tier(s) (DESIGN.md §3, §6) ------------------------------
     transport: TransportConfig = field(default_factory=TransportConfig)
     remotes: tuple[RemoteSpec, ...] = ()
+    # N-tier cascade ladder (DESIGN.md §13): tiers chain into one routed
+    # CascadeStage head (outermost hop first); exclusive with `remotes`
+    tiers: tuple[TierSpec, ...] = ()
     route_policy: str = "primary-failover"
     replay_max: int = 8
     # -- response cache (DESIGN.md §4; 0 disables) ----------------------
@@ -241,6 +281,11 @@ class ServeConfig:
             raise ValueError("admission_soft_ratio must be in [0, 1]")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if self.tiers and self.remotes:
+            raise ValueError("tiers and remotes are exclusive: a tier "
+                             "ladder chains into ONE routed backend; mix "
+                             "by wrapping backends in CascadeStage "
+                             "directly (DESIGN.md §13)")
         if self.replicas > 1 and not self.adaptive:
             raise ValueError("replicas > 1 needs adaptive=True: the "
                              "cluster budget reconcile re-targets each "
@@ -254,18 +299,36 @@ class ServeConfig:
                            or not self.default_policy.is_default
                            or self.packing != "none"
                            or self.remotes
+                           or self.tiers
                            or self.observability
                            or self.admission_limit
                            or self.batching != "window"):
             raise ValueError("fused bypasses the transport path: drop "
                              "adaptive/pipeline_depth/streaming/"
                              "cost_budget/default_policy/packing/remotes/"
-                             "observability/admission_limit/batching")
+                             "tiers/observability/admission_limit/"
+                             "batching")
 
     # -- component builders --------------------------------------------
     def build_router(self, remote_apply: Callable, **kw) -> RemoteRouter:
         """Registry of named backends around the deployment's remote
-        callable (one ``"remote"`` backend when no specs are given)."""
+        callable (one ``"remote"`` backend when no specs are given).
+        With ``tiers`` set, the specs chain into one ``CascadeStage``
+        head routed as a single logical backend (DESIGN.md §13);
+        ``remote_apply`` may be a single callable shared by every hop or
+        a mapping ``{tier_name: callable}``."""
+        if self.tiers:
+            from repro.runtime.hierarchy import build_stage_chain
+            applies = (remote_apply if isinstance(remote_apply, dict)
+                       else {t.name: remote_apply for t in self.tiers})
+            head = build_stage_chain(
+                [dict(name=t.name, apply=applies[t.name],
+                      supervisor=t.supervisor, threshold=t.threshold,
+                      cost_per_request=t.cost_per_request,
+                      latency_s=t.latency_s) for t in self.tiers],
+                config=self.transport, **kw)
+            return RemoteRouter([head], policy=self.route_policy,
+                                replay_max=self.replay_max)
         specs = self.remotes or (RemoteSpec("remote"),)
         return RemoteRouter(
             [RemoteBackend(s.name, remote_apply, self.transport,
@@ -354,6 +417,9 @@ class ServeConfig:
                 # "remote" backend), like any other optional field
                 updates[key] = (() if raw.lower() in ("none", "null")
                                 else _parse_remotes(raw))
+            elif key == "tiers":
+                updates[key] = (() if raw.lower() in ("none", "null")
+                                else _parse_tiers(raw))
             else:
                 updates[key] = _coerce_field(ServeConfig, key, raw)
         for outer, kv in nested.items():

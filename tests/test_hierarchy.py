@@ -1,0 +1,354 @@
+"""N-tier cascade hierarchy tests (ISSUE 10, DESIGN.md §13).
+
+Pins the properties the hierarchy subsystem is built on: the joint
+(t_1, ..., t_n) sweep degenerates to the 2-level sweep point for point,
+the joint Pareto frontier is non-dominated and strictly monotone, a
+threshold above the supervisor's upper bound collapses a tier out of
+the ladder, a terminal ``CascadeStage`` is bitwise-identical to a plain
+``RemoteBackend`` through the engine, the chained path splits billing
+per stage with cumulative hop pricing, and ``TieredBudgetController``
+reconciles the per-hop loops back to the global escalation budget.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.supervisors import SOFTMAX_SUPERVISORS
+from repro.runtime import (AdaptiveController, CascadeStage,
+                           ControllerConfig, RemoteBackend, RemoteRouter,
+                           TieredBudgetController, TieredCascade,
+                           TransportConfig, build_stage_chain,
+                           joint_pareto_frontier,
+                           select_joint_operating_point,
+                           sweep_joint_operating_points,
+                           sweep_operating_points)
+from repro.serving import ServeConfig, TierSpec
+from repro.serving.engine import BILLING_FIELDS, CascadeEngine
+from repro.serving.scheduler import MicrobatchScheduler, Request
+
+NCLS = 6
+_score = SOFTMAX_SUPERVISORS["max_softmax"]
+
+
+def quiet_tconf() -> TransportConfig:
+    return TransportConfig(retry_backoff_s=0.0, max_retries=0,
+                           breaker_failures=10 ** 6, timeout_s=60.0)
+
+
+def planted_tiers(rows: int, seed: int, n_tiers: int = 3):
+    """Cumulative-skill logit LUTs: tier i solves difficulty bands
+    <= i confidently, is unsure elsewhere (same planting as the bench)."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, NCLS, rows)
+    band = rng.choice(n_tiers, rows)
+    tables = []
+    for solves in range(n_tiers):
+        solved = band <= solves
+        wrong = (labels + rng.integers(1, NCLS, rows)) % NCLS
+        target = np.where(solved, labels, wrong)
+        margin = np.where(solved, rng.uniform(4.0, 6.0, rows),
+                          rng.uniform(0.2, 0.8, rows))
+        logits = rng.normal(0, 0.05, (rows, NCLS))
+        logits[np.arange(rows), target] += margin
+        tables.append(np.float32(logits))
+    return labels, tables
+
+
+def conf_correct(logits: np.ndarray, labels: np.ndarray):
+    conf = np.asarray(_score(jnp.asarray(logits)), np.float64)
+    return conf, logits.argmax(-1) == labels
+
+
+def lut_apply(table: np.ndarray):
+    return lambda batch: table[np.asarray(batch["idx"])]
+
+
+def build_ladder(tables, thresholds, costs, controllers=None):
+    controllers = controllers or [None] * len(tables)
+    return build_stage_chain([
+        dict(name=f"t{i}", apply=lut_apply(tbl), config=quiet_tconf(),
+             cost_per_request=c, threshold=float(t), controller=ctl)
+        for i, (tbl, t, c, ctl) in enumerate(
+            zip(tables, thresholds, costs, controllers))])
+
+
+# --------------------------------------------------- joint calibration
+
+def test_joint_sweep_two_tier_reproduces_legacy_exactly():
+    labels, (dev, _, cloud) = planted_tiers(400, seed=0)
+    lc, lok = conf_correct(dev, labels)
+    rc, rok = conf_correct(cloud, labels)
+    legacy = sweep_operating_points(lc, lok, rc, rok, grid=9,
+                                    remote_cost_per_request=0.0048)
+    joint = sweep_joint_operating_points([lc, rc], [lok, rok], grid=9,
+                                         stage_costs=[0.0, 0.0048])
+    assert len(legacy) == len(joint) > 0
+    for lp, jp in zip(legacy, joint):
+        assert jp.thresholds == (lp.t_local, lp.t_remote)
+        assert jp.stage_fractions[0] == 1.0
+        assert jp.stage_fractions[1] == lp.remote_fraction
+        assert jp.rejection_rate == lp.rejection_rate
+        assert jp.accuracy == lp.accuracy
+        assert jp.system_accuracy == lp.system_accuracy
+        assert jp.cost_per_request == lp.cost_per_request
+
+
+def test_joint_frontier_non_dominated_and_monotone():
+    labels, tables = planted_tiers(400, seed=1)
+    confs, oks = zip(*(conf_correct(t, labels) for t in tables))
+    pts = sweep_joint_operating_points(list(confs), list(oks), grid=7,
+                                       stage_costs=[0.0, 0.001, 0.005])
+    front = joint_pareto_frontier(pts)
+    assert front
+    # no swept point dominates any frontier point
+    for fp in front:
+        for p in pts:
+            dominates = (p.cost_per_request <= fp.cost_per_request
+                         and p.system_accuracy >= fp.system_accuracy
+                         and (p.cost_per_request < fp.cost_per_request
+                              or p.system_accuracy > fp.system_accuracy))
+            assert not dominates
+    # strictly monotone in both axes, sorted by cost
+    for a, b in zip(front, front[1:]):
+        assert b.cost_per_request > a.cost_per_request
+        assert b.system_accuracy > a.system_accuracy
+
+
+def test_select_joint_respects_cost_budget():
+    labels, tables = planted_tiers(400, seed=2)
+    confs, oks = zip(*(conf_correct(t, labels) for t in tables))
+    pts = sweep_joint_operating_points(list(confs), list(oks), grid=7,
+                                       stage_costs=[0.0, 0.001, 0.005])
+    budget = 0.002
+    pick = select_joint_operating_point(pts, cost_budget=budget)
+    assert pick.cost_per_request <= budget + 1e-12
+    feasible = [p for p in pts if p.cost_per_request <= budget + 1e-12]
+    assert pick.system_accuracy == max(p.system_accuracy
+                                       for p in feasible)
+    # infeasible dollar ceiling falls back to the cheapest point
+    floor = select_joint_operating_point(pts, cost_budget=-1.0)
+    assert floor.cost_per_request == min(p.cost_per_request for p in pts)
+
+
+# ------------------------------------------------------ tiered cascade
+
+def test_threshold_above_one_collapses_tier():
+    """max_softmax is bounded by 1.0, so a mid-tier threshold above it
+    never trusts a row — the 3-tier ladder serves exactly like the
+    2-tier ladder that skips the tier (same answers, same stages), and
+    the collapsed tier answers nothing."""
+    rows = 256
+    labels, tables = planted_tiers(rows, seed=3)
+    batch = {"idx": np.arange(rows)}
+
+    three = TieredCascade(build_ladder(
+        tables, [0.7, 2.0, 0.0], [0.0, 0.001, 0.005]))
+    out3 = three.serve(batch)
+    stats3 = {n: vars(s).copy() for n, s in three.stats().items()}
+    three.shutdown()
+
+    two = TieredCascade(build_ladder(
+        [tables[0], tables[2]], [0.7, 0.0], [0.0, 0.005]))
+    out2 = two.serve(batch)
+    two.shutdown()
+
+    assert stats3["t1"]["answered"] == 0
+    assert np.array_equal(out3.prediction, out2.prediction)
+    assert np.array_equal(out3.accepted, out2.accepted)
+    # stage indices map 0->0 (device) and 2->1 (terminal)
+    assert np.array_equal(out3.stage_index == 0, out2.stage_index == 0)
+
+
+def test_cumulative_hop_pricing():
+    """A row answered at depth k pays every hop that served it — the
+    cost model joint calibration prices (each reached stage bills its
+    stage cost)."""
+    rows = 256
+    labels, tables = planted_tiers(rows, seed=4)
+    cascade = TieredCascade(build_ladder(
+        tables, [0.9, 0.9, 0.0], [0.0, 0.001, 0.005]))
+    out = cascade.serve({"idx": np.arange(rows)})
+    stats = {n: vars(s).copy() for n, s in cascade.stats().items()}
+    cascade.shutdown()
+    assert stats["t2"]["requests"] > 0          # ladder exercised
+    by_stage = {0: 0.0, 1: 0.001, 2: 0.001 + 0.005}
+    expect = np.array([by_stage[int(s)] for s in out.stage_index])
+    expect[~out.accepted & (out.stage_index != 2)] = 0.0
+    assert np.allclose(out.cost[out.accepted], expect[out.accepted])
+    # per-stage stats bill every served row at the hop's own price
+    assert stats["t1"]["cost"] == pytest.approx(
+        0.001 * (stats["t1"]["answered"] + stats["t1"]["escalated"]))
+    assert stats["t2"]["cost"] == pytest.approx(
+        0.005 * stats["t2"]["requests"])
+
+
+# ------------------------------------------------------- engine paths
+
+def _engine_digest(terminal_stage: bool, rows: int = 128, seed: int = 5):
+    def local_apply(x):
+        return x + 0.3 * jnp.sin(17.0 * x)
+
+    def remote_apply(x):
+        return 5.0 * np.asarray(x)
+
+    cls = CascadeStage if terminal_stage else RemoteBackend
+    router = RemoteRouter([cls("cloud", remote_apply, quiet_tconf(),
+                               cost_per_request=0.005)])
+    engine = CascadeEngine(
+        local_apply, batch_size=16, remote_fraction_budget=0.5,
+        t_remote=0.0, transport=router,
+        controller=AdaptiveController(ControllerConfig(
+            target_remote_fraction=0.4, window=32)))
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, rows)
+    xs = np.float32(rng.normal(0, 0.05, (rows, 4)))
+    xs[np.arange(rows), labels] += np.where(rng.random(rows) < 0.5,
+                                            0.1, 3.0)
+    for i, row in enumerate(xs):
+        sched.submit(Request(uid=i, local_input=row, remote_input=row))
+    responses = sched.flush()
+    engine.close()
+    st, cs = engine.stats, engine.controller.state
+    return {
+        "responses": [(r.uid, int(r.prediction), r.source,
+                       r.disposition, r.backend,
+                       round(float(r.cost), 12)) for r in responses],
+        "billing": {f: getattr(st, f) for f in BILLING_FIELDS},
+        "per_backend": {str(k): vars(v).copy()
+                        for k, v in st.per_backend.items()},
+        "controller": (cs.windows, cs.ema_fraction, cs.t_local,
+                       cs.t_remote, cs.drift_events),
+    }
+
+
+def test_terminal_stage_engine_identity():
+    """A terminal CascadeStage routed through the engine is
+    bitwise-identical to the plain RemoteBackend path: responses,
+    billing, per-backend attribution and controller state."""
+    assert _engine_digest(False) == _engine_digest(True)
+
+
+def test_chained_stage_per_backend_split_and_agreement():
+    rows = 256
+    labels, tables = planted_tiers(rows, seed=6)
+    dev_tbl = jnp.asarray(tables[0])
+
+    def local_apply(i):
+        return jnp.take(dev_tbl, i, axis=0)
+
+    chain = build_stage_chain([
+        dict(name="edge", apply=lut_apply(tables[1]),
+             config=quiet_tconf(), cost_per_request=0.001,
+             threshold=0.9),
+        dict(name="cloud", apply=lut_apply(tables[2]),
+             config=quiet_tconf(), cost_per_request=0.005),
+    ])
+    engine = CascadeEngine(local_apply, batch_size=16,
+                           remote_fraction_budget=1.0, t_remote=0.0,
+                           transport=RemoteRouter([chain]))
+    engine.t_local = 0.9
+    sched = MicrobatchScheduler(engine, fallback=lambda r: -7)
+    for i in range(rows):
+        sched.submit(Request(uid=i, local_input=np.int64(i),
+                             remote_input={"idx": np.int64(i)}))
+    responses = sched.flush()
+    engine.close()
+    st = engine.stats
+    per = {str(k): vars(v).copy() for k, v in st.per_backend.items()}
+    assert set(per) == {"edge", "cloud"}
+    assert per["edge"]["remote_calls"] > 0
+    assert per["cloud"]["remote_calls"] > 0
+    # escalation identity holds per stage name
+    assert st.escalations == sum(
+        u["remote_calls"] + u["cache_hits"] + u["transport_failures"]
+        for u in per.values())
+    # per-stage cost split sums exactly to the total; cloud rows pay
+    # the edge hop too (cumulative pricing)
+    assert abs(st.total_cost
+               - sum(u["cost"] for u in per.values())) < 1e-12
+    assert per["cloud"]["cost"] == pytest.approx(
+        (0.001 + 0.005) * per["cloud"]["remote_calls"])
+    # responses attribute the answering stage by name
+    assert {r.backend for r in responses if r.backend} <= {"edge",
+                                                           "cloud"}
+    # agreement EMA tracked for every answering stage
+    for u in per.values():
+        assert u["agreement_ema"] is not None
+        assert 0.0 <= u["agreement_ema"] <= 1.0
+        assert u["agreement_rows"] > 0
+
+
+# --------------------------------------------------- per-tier budgets
+
+def test_tiered_budget_controller_reconciles():
+    tiered = TieredBudgetController(
+        {"device": 0.5, "edge": 0.5},
+        base=ControllerConfig(window=8), reconcile_every=2)
+    assert tiered.global_target == pytest.approx(0.25)
+    # stable score distribution (no drift resets); device persistently
+    # over-escalates, edge holds its target
+    conf = np.linspace(0.1, 0.9, 8)
+    for _ in range(12):
+        tiered.observe("device", conf, escalated=6, requests=8)
+        tiered.observe("edge", conf[:6], escalated=3, requests=6)
+    assert tiered.reconciles > 0
+    rec = tiered.reconcile()
+    assert set(rec["targets"]) == {"device", "edge"}
+    # observed end-to-end fraction sits above the global budget, so the
+    # reconcile scales every hop target DOWN from its configured value
+    assert rec["observed"] > tiered.global_target
+    assert rec["targets"]["device"] < 0.5
+    assert rec["targets"]["edge"] < 0.5
+    # retarget actually landed on the live loops
+    for name, t in rec["targets"].items():
+        assert tiered.loop(name).config.target_remote_fraction == \
+            pytest.approx(t)
+
+
+def test_tiered_budget_controller_validates():
+    with pytest.raises(ValueError):
+        TieredBudgetController({})
+
+
+# ------------------------------------------------- serving config face
+
+def test_tierspec_parse():
+    full = TierSpec.parse("edge:0.001:0.1:0.6:entropy")
+    assert full == TierSpec("edge", 0.001, 0.1, 0.6, "entropy")
+    sparse = TierSpec.parse("cloud:0.0048")
+    assert sparse == TierSpec("cloud", 0.0048, None, 0.0, "max_softmax")
+    skipped = TierSpec.parse("edge::0.25::")
+    assert skipped == TierSpec("edge", None, 0.25, 0.0, "max_softmax")
+    with pytest.raises(ValueError):
+        TierSpec.parse(":0.1")
+    with pytest.raises(ValueError):
+        TierSpec.parse("a:1:2:3:4:5")
+
+
+def test_serveconfig_tiers_exclusive_and_overridable():
+    cfg = ServeConfig().with_overrides(
+        ["tiers=edge:0.001:0.1:0.6;cloud:0.0048:0.8"])
+    assert [t.name for t in cfg.tiers] == ["edge", "cloud"]
+    assert cfg.tiers[0].threshold == 0.6
+    with pytest.raises(ValueError):
+        ServeConfig(tiers=(TierSpec("edge"),),
+                    remotes=({"name": "a", "cost_per_request": 0.1},))
+
+
+def test_serveconfig_tiers_build_chained_router():
+    rows = 64
+    labels, tables = planted_tiers(rows, seed=8)
+    cfg = ServeConfig(tiers=(
+        TierSpec("edge", 0.001, None, 0.9),
+        TierSpec("cloud", 0.005)))
+    router = cfg.build_router({"edge": lut_apply(tables[1]),
+                               "cloud": lut_apply(tables[2])})
+    head = router.backends[0]
+    assert isinstance(head, CascadeStage)
+    assert [s.name for s in head.chain()] == ["edge", "cloud"]
+    logits, ok, detail = head.call_scored({"idx": np.arange(rows)}, 0)
+    assert ok.all()
+    assert set(np.unique(detail["stage"])) <= {"edge", "cloud"}
+    head.shutdown()
